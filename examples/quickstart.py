@@ -1,0 +1,38 @@
+"""Quickstart: A2CiD2 in 40 lines — decentralized optimization of a
+heterogeneous quadratic on a ring, accelerated vs baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Simulator, make_schedule, params_from_graph,
+                        ring_graph, worker_mean)
+
+N_WORKERS, DIM, ROUNDS = 16, 64, 300
+
+# each worker i minimizes f_i(x) = ||x - b_i||^2 / 2; the consensus optimum
+# is mean(b) — exactly the setting of the paper's theory (Sec 3.2)
+b = jax.random.normal(jax.random.PRNGKey(1), (N_WORKERS, DIM))
+
+
+def grad_fn(x, key, worker_id):
+    noise = 0.05 * jax.random.normal(key, x.shape)
+    return 0.5 * jnp.sum((x - b[worker_id]) ** 2), (x - b[worker_id]) + noise
+
+
+graph = ring_graph(N_WORKERS)
+print(f"ring graph: chi1={graph.chi1():.1f} chi2={graph.chi2():.2f} "
+      f"(A2CiD2 accelerates chi1 -> sqrt(chi1*chi2)="
+      f"{(graph.chi1()*graph.chi2())**0.5:.1f})")
+
+schedule = make_schedule(graph, rounds=ROUNDS, comms_per_grad=1.0, seed=0)
+for accelerated in (False, True):
+    acid = params_from_graph(graph, accelerated=accelerated)
+    sim = Simulator(grad_fn, acid, gamma=0.05)
+    state = sim.init(jnp.zeros(DIM), N_WORKERS, jax.random.PRNGKey(2))
+    state, trace = sim.run_schedule(state, schedule)
+    err = float(jnp.sum((worker_mean(state.x) - jnp.mean(b, 0)) ** 2))
+    name = "A2CiD2  " if accelerated else "baseline"
+    print(f"{name}: consensus distance {float(trace.consensus[-1]):.3f}  "
+          f"distance to optimum {err:.2e}")

@@ -1,0 +1,5 @@
+from .roofline import (RooflineReport, collective_bytes_from_hlo,
+                       model_flops, roofline_terms)
+
+__all__ = ["RooflineReport", "collective_bytes_from_hlo", "model_flops",
+           "roofline_terms"]

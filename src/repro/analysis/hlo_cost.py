@@ -1,0 +1,262 @@
+"""Trip-count-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, regardless of
+trip count — with scan-over-layers (and microbatch accumulation scans) that
+undercounts FLOPs, bytes and collective traffic by the loop trip counts.
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  * builds the computation call graph (while bodies, fusions, calls),
+  * recovers each while loop's trip count from the comparison constant in its
+    condition computation,
+  * counts dot/convolution FLOPs from shapes + contracting dims,
+  * counts HBM write traffic as the result bytes of top-level (post-fusion)
+    ops,
+  * counts collective bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute),
+
+multiplying everything by the product of enclosing trip counts.
+Validated against unrolled references in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|calls|true_computation|false_computation)"
+    r"=\{?%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_DDN_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DDN_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), m.group(2)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    return _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _all_result_shapes(defn: str):
+    """Result type(s): possibly a tuple '(f32[..], bf16[..])' before op name."""
+    # the result type is everything before the first opcode word; just grab
+    # every shape until the opening '(' of the operand list after the opcode.
+    # Simpler: take shapes appearing before the first alphabetic opcode token
+    # that is followed by '('.  Practical approach: shapes in the text up to
+    # the first ') ' or the opcode — we take shapes before ' op_name('.
+    m = re.match(r"^\(?((?:[a-z][a-z0-9]*\[[0-9,]*\][^\s,()]*,?\s*)+)\)?\s+[\w\-]+\(",
+                 defn)
+    if not m:
+        s = _first_shape(defn)
+        return [s] if s else []
+    return _SHAPE_RE.findall(m.group(1))
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    flops: float = 0.0
+    write_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+    # (called_comp, kind) kind in {"while", "call", "fusion", "cond"}
+    calls: list = dataclasses.field(default_factory=list)
+    while_trip: dict = dataclasses.field(default_factory=dict)  # body -> trips
+    max_cond_const: int = 1
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    shapes: dict[str, tuple] = {}   # %var -> (dtype, dims) last definition
+    cur: Computation | None = None
+    entry_name: str | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and line.rstrip().endswith("{"):
+            cur = comps.setdefault(hdr.group(1), Computation(hdr.group(1)))
+            if line.strip().startswith("ENTRY"):
+                entry_name = hdr.group(1)
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        var, defn = m.group(1), m.group(2)
+        rshape = _first_shape(defn)
+        if rshape:
+            shapes[var] = rshape
+
+        opcode_m = re.search(r"\]\S*\s+([\w\-]+)\(", defn)
+        opcode = opcode_m.group(1) if opcode_m else ""
+
+        # ---- call graph edges
+        for bm in _BRANCHES_RE.finditer(defn):
+            for name in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                # count each branch once (upper bound: all branches "execute")
+                cur.calls.append((name, "call", var, defn))
+        defn_nobranch = _BRANCHES_RE.sub("", defn)
+        for cm in _CALLED_RE.finditer(defn_nobranch):
+            callee = cm.group(1)
+            if "while(" in defn:
+                kind = "while"
+            elif opcode == "fusion":
+                kind = "fusion"
+            elif "condition=" in defn and callee in defn.split("condition=")[1][:80]:
+                kind = "cond"
+            else:
+                kind = "call"
+            cur.calls.append((callee, kind, var, defn))
+
+        # ---- constants (for trip counts in condition computations)
+        cc = re.match(r"^s(?:32|64)\[\]\s.*constant\((\d+)\)", defn)
+        if cc:
+            cur.max_cond_const = max(cur.max_cond_const, int(cc.group(1)))
+        else:
+            cc2 = re.search(r"constant\((\d+)\)", defn)
+            if cc2 and defn.startswith(("s32[]", "s64[]", "u32[]", "u64[]")):
+                cur.max_cond_const = max(cur.max_cond_const, int(cc2.group(1)))
+
+        # ---- flops: dot / convolution
+        if opcode in ("dot", "convolution") and rshape:
+            out_elems = _shape_elems(rshape[1])
+            # contracted size from lhs operand shape + contracting dims
+            ops = re.findall(r"%([\w\.\-]+)", defn.split(opcode + "(", 1)[1])
+            contracted = 1
+            if opcode == "dot":
+                cm_ = _DDN_CONTRACT_RE.search(defn)
+                if cm_ and ops:
+                    lhs = shapes.get(ops[0])
+                    if lhs:
+                        dims = ([int(d) for d in lhs[1].split(",")]
+                                if lhs[1] else [])
+                        for ci in (cm_.group(1).split(",")
+                                   if cm_.group(1) else []):
+                            i = int(ci)
+                            if i < len(dims):
+                                contracted *= dims[i]
+            else:  # convolution: window size from kernel operand
+                if len(ops) >= 2:
+                    ker = shapes.get(ops[1])
+                    if ker:
+                        dims = ([int(d) for d in ker[1].split(",")]
+                                if ker[1] else [])
+                        # HWIO kernel: all dims except O contract per output
+                        contracted = max(1, _shape_elems(ker[1])
+                                         // (dims[-1] if dims else 1))
+            cur.flops += 2.0 * out_elems * contracted
+
+        # ---- write traffic: result bytes of top-level ops (post-fusion)
+        if rshape and opcode not in ("parameter", "constant", "tuple",
+                                     "get-tuple-element", "bitcast"):
+            if opcode == "dynamic-update-slice":
+                # in-place on real hardware (buffers alias): count the
+                # UPDATE operand, not the full rewritten buffer — decode KV
+                # caches would otherwise count as rewritten every token
+                ops_ = re.findall(r"%([\w\.\-]+)",
+                                  defn.split("dynamic-update-slice(", 1)[1])
+                upd = shapes.get(ops_[1]) if len(ops_) > 1 else None
+                cur.write_bytes += (_shape_bytes(*upd) if upd
+                                    else _shape_bytes(*rshape))
+            else:
+                for (dt, dm) in _all_result_shapes(defn):
+                    cur.write_bytes += _shape_bytes(dt, dm)
+
+        # ---- collectives
+        for kind in COLLECTIVE_KINDS:
+            if re.search(rf"\s{kind}(?:-start)?\(", defn) and rshape:
+                b = sum(_shape_bytes(dt, dm)
+                        for (dt, dm) in _all_result_shapes(defn))
+                cur.collective_bytes += b
+                cur.collective_detail[kind] = (
+                    cur.collective_detail.get(kind, 0) + b)
+                break
+    return comps, entry_name
+
+
+@dataclasses.dataclass(frozen=True)
+class HloCost:
+    flops: float
+    write_bytes: float
+    collective_bytes: float
+    collective_detail: dict
+
+
+def cost_from_hlo(text: str, entry: str | None = None) -> HloCost:
+    comps, entry_name = parse_hlo(text)
+    if not comps:
+        return HloCost(0.0, 0.0, 0.0, {})
+    entry = entry or entry_name
+    if entry is None:
+        # fallback: uncalled computation with the largest reachable flops
+        called = {c for comp in comps.values() for (c, *_rest) in comp.calls}
+        entries = [n for n in comps if n not in called] or list(comps)
+        entry = max(entries, key=lambda n: comps[n].flops)
+
+    detail_total: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, mult: float, in_fusion: bool
+             ) -> tuple[float, float, float]:
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0)
+        f = comp.flops * mult
+        # fusion internals don't write to HBM — only the fusion result does,
+        # and that is already counted at the call site computation
+        w = 0.0 if in_fusion else comp.write_bytes * mult
+        c = comp.collective_bytes * mult
+        for k, v in comp.collective_detail.items():
+            detail_total[k] += v * mult
+        for callee, kind, _var, defn in comp.calls:
+            m2 = mult
+            if kind == "while":
+                cond_m = re.search(r"condition=\{?%?([\w\.\-]+)", defn)
+                if cond_m and callee == cond_m.group(1):
+                    continue  # skip the (negligible) condition computation
+                # prefer XLA's own annotation, fall back to the condition const
+                tc = re.search(r'"known_trip_count":\{"n":"(\d+)"', defn)
+                if tc:
+                    trips = int(tc.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    trips = comps[cond_m.group(1)].max_cond_const
+                else:
+                    trips = 1
+                m2 = mult * max(trips, 1)
+            df, dw, dc = walk(callee, m2,
+                              in_fusion or kind in ("fusion", "call"))
+            f, w, c = f + df, w + dw, c + dc
+        return f, w, c
+
+    f, w, c = walk(entry, 1.0, False)
+    return HloCost(f, w, c, dict(detail_total))

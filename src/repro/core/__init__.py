@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution (A2CiD2) as composable JAX modules."""
+from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
+                     consensus_distance, gradient_event, matched_p2p_update,
+                     mixing_coeff, p2p_event, params_from_graph, worker_mean)
+from .events import Schedule, empirical_laplacian, make_schedule
+from .gossip import GossipMixer, matching_bank
+from .graphs import (Graph, build_graph, complete_graph, exponential_graph,
+                     ring_graph, star_graph, torus_graph)
+from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
+
+__all__ = [
+    "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
+    "consensus_distance", "gradient_event", "matched_p2p_update",
+    "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
+    "Schedule", "empirical_laplacian", "make_schedule",
+    "GossipMixer", "matching_bank",
+    "Graph", "build_graph", "complete_graph", "exponential_graph",
+    "ring_graph", "star_graph", "torus_graph",
+    "SimState", "SimTrace", "Simulator", "allreduce_sgd",
+]

@@ -1,0 +1,176 @@
+"""A2CiD2 continuous momentum — the paper's core contribution (Sec 3.2, Algo 1).
+
+Each worker holds two buffers: the parameters ``x`` and a momentum copy
+``x_tilde``.  Between events they follow the mixing ODE
+
+    dx/dt      = eta (x_tilde - x)
+    dx_tilde/dt = eta (x - x_tilde)
+
+whose flow is the doubly-stochastic 2x2 matrix
+
+    exp(t*A) = 1/2 [[1+e, 1-e], [1-e, 1+e]],   e = exp(-2 eta t),
+    A = [[-eta, eta], [eta, -eta]].
+
+Events:
+  * gradient event (rate 1 / worker):  x -= gamma*g ; x_tilde -= gamma*g   (Eq 4)
+  * p2p event on edge (i,j) (rate lambda_ij):  with m = x_i - x_j,
+        x_i -= alpha*m ; x_tilde_i -= alpha_t*m
+        x_j += alpha*m ; x_tilde_j += alpha_t*m
+
+Prop 3.6 hyper-parameters:
+  * baseline (no acceleration): eta = 0, alpha = alpha_t = 1/2, chi = chi_1
+  * A2CiD2: eta = 1/(2 sqrt(chi1 chi2)), alpha = 1/2,
+            alpha_t = 1/2 sqrt(chi1/chi2), chi = sqrt(chi1 chi2)
+
+All update functions operate on arbitrary pytrees and are jit/vmap friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class A2CiD2Params:
+    """Scalar hyper-parameters of the dynamic (Eq 4 / Prop 3.6)."""
+
+    eta: float
+    alpha: float
+    alpha_tilde: float
+    chi: float  # effective chi entering the rate: chi1 (baseline) or sqrt(chi1 chi2)
+
+    @property
+    def accelerated(self) -> bool:
+        return self.eta > 0.0
+
+
+def baseline_params(chi1: float) -> A2CiD2Params:
+    """The non-accelerated asynchronous baseline (a refined AD-PSGD)."""
+    return A2CiD2Params(eta=0.0, alpha=0.5, alpha_tilde=0.5, chi=chi1)
+
+
+def acid_params(chi1: float, chi2: float) -> A2CiD2Params:
+    """Accelerated parameters from Prop 3.6."""
+    if not (0.0 < chi2 <= chi1 + 1e-9):
+        raise ValueError(f"need 0 < chi2 <= chi1, got chi1={chi1}, chi2={chi2}")
+    root = math.sqrt(chi1 * chi2)
+    return A2CiD2Params(
+        eta=1.0 / (2.0 * root),
+        alpha=0.5,
+        alpha_tilde=0.5 * math.sqrt(chi1 / chi2),
+        chi=root,
+    )
+
+
+def params_from_graph(graph, accelerated: bool = True) -> A2CiD2Params:
+    chi1 = graph.chi1()
+    if not accelerated:
+        return baseline_params(chi1)
+    return acid_params(chi1, graph.chi2())
+
+
+# ----------------------------------------------------------------- mixing ODE
+
+def mixing_coeff(eta: float | jax.Array, dt: jax.Array) -> jax.Array:
+    """Off-diagonal weight of exp(dt*A): (1 - exp(-2 eta dt)) / 2 in [0, 1/2)."""
+    return 0.5 * (1.0 - jnp.exp(-2.0 * eta * dt))
+
+
+def apply_mixing(x: PyTree, x_tilde: PyTree, eta: float, dt) -> tuple[PyTree, PyTree]:
+    """Lazily apply the continuous mixing for an elapsed time ``dt``.
+
+    Exact closed-form flow of the ODE; preserves x + x_tilde identically.
+    ``dt`` may be a scalar or any array broadcastable against the leaves
+    (e.g. per-worker elapsed times with leaves shaped (n_workers, ...)).
+    """
+    if eta == 0.0:
+        return x, x_tilde
+    dt = jnp.asarray(dt)
+
+    def mix(a, b):
+        c = mixing_coeff(eta, dt).astype(a.dtype)
+        c = jnp.reshape(c, c.shape + (1,) * (a.ndim - c.ndim))  # broadcast workers
+        d = b - a
+        return a + c * d, b - c * d
+
+    flat_x, treedef = jax.tree_util.tree_flatten(x)
+    flat_t = treedef.flatten_up_to(x_tilde)
+    mixed = [mix(a, b) for a, b in zip(flat_x, flat_t)]
+    new_x = treedef.unflatten([m[0] for m in mixed])
+    new_t = treedef.unflatten([m[1] for m in mixed])
+    return new_x, new_t
+
+
+# -------------------------------------------------------------- event updates
+
+def gradient_event(x: PyTree, x_tilde: PyTree, grads: PyTree, gamma) -> tuple[PyTree, PyTree]:
+    """Apply a gradient event: both buffers take the step (Eq 4)."""
+    new_x = jax.tree.map(lambda p, g: p - gamma * g, x, grads)
+    new_t = jax.tree.map(lambda p, g: p - gamma * g, x_tilde, grads)
+    return new_x, new_t
+
+
+def p2p_event(x_i: PyTree, x_tilde_i: PyTree, x_j: PyTree,
+              params: A2CiD2Params) -> tuple[PyTree, PyTree]:
+    """One side of a pairwise averaging event on edge (i, j).
+
+    m = x_i - x_j;  x_i -= alpha*m ; x_tilde_i -= alpha_tilde*m.
+    The j side is obtained by calling with roles swapped (m flips sign).
+    With alpha = 1/2 the x-update is exact pairwise averaging.
+    """
+    def upd(a, at, b):
+        m = a - b
+        return a - params.alpha * m, at - params.alpha_tilde * m
+
+    flat_i, treedef = jax.tree_util.tree_flatten(x_i)
+    flat_ti = treedef.flatten_up_to(x_tilde_i)
+    flat_j = treedef.flatten_up_to(x_j)
+    out = [upd(a, at, b) for a, at, b in zip(flat_i, flat_ti, flat_j)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def matched_p2p_update(x: PyTree, x_tilde: PyTree, partner: jax.Array,
+                       params: A2CiD2Params) -> tuple[PyTree, PyTree]:
+    """Apply one matching round to stacked worker states.
+
+    Leaves of ``x``/``x_tilde`` have a leading worker axis (n, ...).
+    ``partner[i] = j`` (with partner[j] = i) for matched pairs, ``i`` for idle
+    workers — idle workers see m = x_i - x_i = 0, a clean no-op.
+    """
+    def upd(a, at):
+        b = jnp.take(a, partner, axis=0)
+        m = a - b
+        return a - params.alpha * m, at - params.alpha_tilde * m
+
+    flat_x, treedef = jax.tree_util.tree_flatten(x)
+    flat_t = treedef.flatten_up_to(x_tilde)
+    out = [upd(a, at) for a, at in zip(flat_x, flat_t)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+# ---------------------------------------------------------------- diagnostics
+
+def consensus_distance(x: PyTree) -> jax.Array:
+    """||pi x||_F^2 / n = mean squared distance of workers to the mean.
+
+    Leaves have a leading worker axis. This is the quantity tracked in the
+    paper's Fig 5b.
+    """
+    def per_leaf(a):
+        mean = jnp.mean(a, axis=0, keepdims=True)
+        return jnp.sum((a - mean) ** 2) / a.shape[0]
+
+    leaves = jax.tree.leaves(x)
+    return sum(per_leaf(a) for a in leaves)
+
+
+def worker_mean(x: PyTree) -> PyTree:
+    return jax.tree.map(lambda a: jnp.mean(a, axis=0), x)

@@ -1,0 +1,163 @@
+"""SPMD gossip: the paper's p2p averaging mapped onto a TPU mesh axis.
+
+A decentralized *worker* is one slice of the mesh along a dedicated "worker"
+axis (a pod or pod-slice; inside, the replica is FSDP/TP sharded over the
+remaining axes).  A pairwise averaging event between workers i and j is a
+`jax.lax.ppermute` along the worker axis: every chip exchanges only its own
+parameter *shard* with the homologous chip of the partner worker, so one
+gossip event moves P/(chips-per-worker) bytes per link — and it is a single
+collective-permute XLA can overlap with compute, unlike a blocking multi-stage
+all-reduce.
+
+`ppermute` requires a *static* permutation, while the algorithm samples random
+matchings.  We therefore decompose the edge set into a static *matching bank*
+via greedy edge coloring (every color class is a matching; by Vizing's theorem
+at most max_degree+1 classes) and `lax.switch` over the bank with a traced
+matching index.  Sampling bank entries uniformly realizes uniform edge
+frequencies — the same assumption under which chi1/chi2 are computed (paper
+App E.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .a2cid2 import A2CiD2Params, apply_mixing
+from .graphs import Graph
+
+PyTree = Any
+
+
+def matching_bank(graph: Graph) -> np.ndarray:
+    """Decompose edges into matchings via greedy edge coloring.
+
+    Returns (M, n) int32: bank[k, i] = partner of worker i in matching k
+    (i itself if idle).  Union over k covers every edge exactly once.
+    """
+    import networkx as nx
+
+    G = nx.Graph()
+    G.add_nodes_from(range(graph.n))
+    G.add_edges_from(graph.edges)
+    coloring = nx.coloring.greedy_color(nx.line_graph(G), strategy="largest_first")
+    n_colors = max(coloring.values()) + 1
+    bank = np.tile(np.arange(graph.n, dtype=np.int32), (n_colors, 1))
+    for edge, color in coloring.items():
+        i, j = edge
+        bank[color, i] = j
+        bank[color, j] = i
+    return bank
+
+
+def bank_edge_rates(graph: Graph, bank: np.ndarray) -> np.ndarray:
+    """Per-matching sampling weights reproducing the graph's edge rates.
+
+    For uniform-rate graphs this is uniform over the bank. For non-uniform
+    rates we weight each matching by the mean rate of its edges (approximate;
+    exact per-edge rates would need non-maximal matchings).
+    """
+    rates = {tuple(sorted(e)): r for e, r in zip(graph.edges, graph.rates)}
+    w = np.zeros(bank.shape[0])
+    for k in range(bank.shape[0]):
+        edge_rs = [rates[(i, int(j))] for i, j in enumerate(bank[k]) if int(j) > i]
+        w[k] = float(np.mean(edge_rs)) if edge_rs else 0.0
+    s = w.sum()
+    return w / s if s > 0 else np.full(bank.shape[0], 1.0 / bank.shape[0])
+
+
+class GossipMixer:
+    """Applies A2CiD2 events across the worker mesh axis (use inside shard_map
+    or under a mesh with explicit out-of-shard_map collectives via pjit —
+    here we target shard_map)."""
+
+    def __init__(self, graph: Graph, params: A2CiD2Params,
+                 axis_name: str = "worker"):
+        self.graph = graph
+        self.params = params
+        self.axis_name = axis_name
+        self.bank = matching_bank(graph)
+        self.bank_probs = bank_edge_rates(graph, self.bank)
+
+    # ------------------------------------------------------------ primitives
+    def _perm(self, k: int) -> list[tuple[int, int]]:
+        return [(i, int(j)) for i, j in enumerate(self.bank[k])]
+
+    def p2p_round(self, x: PyTree, x_tilde: PyTree, matching_idx: jax.Array
+                  ) -> tuple[PyTree, PyTree]:
+        """One pairwise-averaging event, selected from the static bank."""
+
+        def make_branch(k: int):
+            perm = self._perm(k)
+
+            def branch(operand):
+                x, x_tilde = operand
+                xp = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, self.axis_name, perm), x)
+                new_x = jax.tree.map(
+                    lambda a, b: a - self.params.alpha * (a - b), x, xp)
+                new_t = jax.tree.map(
+                    lambda at, a, b: at - self.params.alpha_tilde * (a - b),
+                    x_tilde, x, xp)
+                return new_x, new_t
+
+            return branch
+
+        branches = [make_branch(k) for k in range(self.bank.shape[0])]
+        return jax.lax.switch(matching_idx, branches, (x, x_tilde))
+
+    def mix(self, x: PyTree, x_tilde: PyTree, dt: jax.Array
+            ) -> tuple[PyTree, PyTree]:
+        """Lazy continuous mixing exp(dt*A) — dt is this worker's local scalar."""
+        return apply_mixing(x, x_tilde, self.params.eta, dt)
+
+    def gossip_events(self, x: PyTree, x_tilde: PyTree,
+                      matching_idxs: jax.Array, dts: jax.Array
+                      ) -> tuple[PyTree, PyTree]:
+        """Apply a fixed-length sequence of (mix, p2p) events via lax.scan.
+
+        matching_idxs (E,) int32 — bank index per event (negative = skip),
+        dts (E,) — elapsed worker-local time before each event.
+        """
+
+        def body(carry, ev):
+            x, x_tilde = carry
+            idx, dt = ev
+            x, x_tilde = self.mix(x, x_tilde, dt)
+            skip = idx < 0
+            x2, t2 = self.p2p_round(x, x_tilde, jnp.maximum(idx, 0))
+            x = jax.tree.map(lambda a, b: jnp.where(skip, a, b), x, x2)
+            x_tilde = jax.tree.map(lambda a, b: jnp.where(skip, a, b), x_tilde, t2)
+            return (x, x_tilde), None
+
+        (x, x_tilde), _ = jax.lax.scan(body, (x, x_tilde),
+                                       (matching_idxs, dts))
+        return x, x_tilde
+
+    # ------------------------------------------------------------ schedules
+    def sample_event_batch(self, key: jax.Array, num_events: int
+                           ) -> tuple[jax.Array, jax.Array]:
+        """Traced sampling of (matching_idxs, dts) for one super-step.
+
+        Poisson thinning: we draw `num_events` slots; each is active with
+        probability rate/num_events is approximated by always-active slots at
+        the expected rate (slot count chosen by the host from the Poisson law,
+        like the paper's implementation).  dts are Exp(1/num_events) gaps.
+        """
+        k1, k2 = jax.random.split(key)
+        logits = jnp.log(jnp.asarray(self.bank_probs, dtype=jnp.float32))
+        idxs = jax.random.categorical(k1, logits, shape=(num_events,))
+        gaps = jax.random.exponential(k2, (num_events,)) / max(num_events, 1)
+        return idxs.astype(jnp.int32), gaps
+
+
+def consensus_distance_spmd(x: PyTree, axis_name: str = "worker") -> jax.Array:
+    """||pi x||^2 / n across the worker axis (per-chip shard contribution;
+    callers psum over the remaining mesh axes if the replica is sharded)."""
+    def leaf(a):
+        mean = jax.lax.pmean(a, axis_name)
+        return jax.lax.psum(jnp.sum((a - mean) ** 2), axis_name) / jax.lax.psum(
+            jnp.ones(()), axis_name)
+    return sum(leaf(a) for a in jax.tree.leaves(x))

@@ -1,0 +1,133 @@
+"""Discrete-event simulator of Algorithm 1 — the faithful reproduction.
+
+Simulates n asynchronous workers on one host: every leaf of the worker state
+carries a leading worker axis ``(n, ...)``; gradient computations are vmapped
+and the Poisson event schedule (events.Schedule) is replayed exactly:
+
+  for each comm event e (time u_e, matching P_e):
+      involved workers apply the lazy mixing exp((u_e - t_last) A)   [Algo 1 l.17]
+      then the p2p update  x -= alpha*m, x~ -= alpha_t*m             [l.18-19]
+  at each worker's gradient time t_g:
+      lazy mixing exp((t_g - t_last) A)                              [l.9]
+      gradient step on BOTH buffers                                  [Eq 4]
+
+With eta = 0, alpha = alpha_t = 1/2 this is exactly the asynchronous baseline
+(Eq 6, ~AD-PSGD).  The simulator is jit'd end-to-end with lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .a2cid2 import (A2CiD2Params, apply_mixing, consensus_distance,
+                     matched_p2p_update, worker_mean)
+from .events import Schedule
+
+PyTree = Any
+# grad_fn(params_i, key, worker_id) -> (loss_i, grads_i) for ONE worker;
+# vmapped inside.  worker_id lets each worker sample its own data stream
+# (paper Sec 4.1: every worker sees the whole dataset with its own shuffle).
+GradFn = Callable[[PyTree, jax.Array, jax.Array], tuple[jax.Array, PyTree]]
+
+
+class SimState(NamedTuple):
+    x: PyTree          # leaves (n, ...)
+    x_tilde: PyTree    # leaves (n, ...)
+    t_last: jax.Array  # (n,) last per-worker event time (for lazy mixing)
+    key: jax.Array
+
+
+class SimTrace(NamedTuple):
+    loss: jax.Array               # (rounds,) mean worker loss
+    consensus: jax.Array          # (rounds,) ||pi x||^2 / n
+    mean_param_norm: jax.Array    # (rounds,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Simulator:
+    grad_fn: GradFn
+    params: A2CiD2Params
+    gamma: float
+
+    def init(self, x0: PyTree, n: int, key: jax.Array) -> SimState:
+        """All workers start at consensus (paper: one all-reduce before training)."""
+        stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), x0)
+        return SimState(x=stack, x_tilde=stack, t_last=jnp.zeros((n,)), key=key)
+
+    # ------------------------------------------------------------- one round
+    def _comm_event(self, carry, event):
+        x, x_tilde, t_last = carry
+        partner, time, mask = event
+        involved = (partner != jnp.arange(partner.shape[0])) & mask
+        # lazy mixing for involved workers only (their clocks advance)
+        dt = jnp.where(involved, time - t_last, 0.0)
+        x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
+        t_last = jnp.where(involved, time, t_last)
+        # p2p update; idle workers have partner=i => m=0 no-op. Masked events
+        # have partner=identity by construction.
+        x, x_tilde = matched_p2p_update(x, x_tilde, partner, self.params)
+        return (x, x_tilde, t_last), None
+
+    def _round(self, state: SimState, round_sched) -> tuple[SimState, dict]:
+        partners, times, mask, grad_times = round_sched
+        carry = (state.x, state.x_tilde, state.t_last)
+        carry, _ = jax.lax.scan(self._comm_event, carry, (partners, times, mask))
+        x, x_tilde, t_last = carry
+
+        # gradient event per worker at its own clock
+        dt = grad_times - t_last
+        x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
+        n = grad_times.shape[0]
+        key, sub = jax.random.split(state.key)
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(self.grad_fn)(x, keys, jnp.arange(n))
+        x = jax.tree.map(lambda p, g: p - self.gamma * g, x, grads)
+        x_tilde = jax.tree.map(lambda p, g: p - self.gamma * g, x_tilde, grads)
+
+        new_state = SimState(x, x_tilde, grad_times, key)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "consensus": consensus_distance(x),
+            "mean_param_norm": sum(jnp.sum(m ** 2) for m in
+                                   jax.tree.leaves(worker_mean(x))),
+        }
+        return new_state, metrics
+
+    # ------------------------------------------------------------------ run
+    @partial(jax.jit, static_argnums=0)
+    def run(self, state: SimState, schedule_arrays) -> tuple[SimState, SimTrace]:
+        final, metrics = jax.lax.scan(self._round, state, schedule_arrays)
+        return final, SimTrace(metrics["loss"], metrics["consensus"],
+                               metrics["mean_param_norm"])
+
+    def run_schedule(self, state: SimState, sched: Schedule):
+        arrays = (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
+                  jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times))
+        return self.run(state, arrays)
+
+
+# --------------------------------------------------------------- AR-SGD ref
+
+def allreduce_sgd(grad_fn: GradFn, gamma: float, x0: PyTree, n: int,
+                  rounds: int, key: jax.Array) -> tuple[PyTree, jax.Array]:
+    """Synchronous All-Reduce SGD baseline (the paper's AR-SGD)."""
+
+    stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), x0)
+
+    def step(carry, _):
+        x, key = carry
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(grad_fn)(x, keys, jnp.arange(n))
+        mean_g = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True), grads)
+        x = jax.tree.map(lambda p, g: p - gamma * jnp.broadcast_to(g, p.shape),
+                         x, mean_g)
+        return (x, key), jnp.mean(losses)
+
+    (x, _), losses = jax.lax.scan(step, (stack, key), None, length=rounds)
+    return jax.tree.map(lambda a: a[0], x), losses

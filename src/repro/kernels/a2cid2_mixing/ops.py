@@ -1,0 +1,46 @@
+"""jit'd public wrapper: pytree-level fused gossip event.
+
+On CPU (tests, simulator) the oracle path is used; on TPU the Pallas kernel.
+``gossip_event_pytree`` ravels each leaf and applies the fused kernel —
+leaves keep their shapes, so this drops into GossipMixer unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mixing_p2p
+from .ref import mixing_p2p_ref
+
+PyTree = Any
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gossip_event(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
+                 dt, *, eta: float, alpha: float, alpha_t: float,
+                 force_pallas: bool = False, interpret: bool = False):
+    flat = x.reshape(-1)
+    if force_pallas or _use_pallas():
+        ox, ot = mixing_p2p(flat, x_tilde.reshape(-1), x_partner.reshape(-1),
+                            jnp.asarray(dt), eta=eta, alpha=alpha,
+                            alpha_t=alpha_t, interpret=interpret)
+        return ox.reshape(x.shape), ot.reshape(x.shape)
+    return mixing_p2p_ref(x, x_tilde, x_partner, dt, eta=eta, alpha=alpha,
+                          alpha_t=alpha_t)
+
+
+def gossip_event_pytree(x: PyTree, x_tilde: PyTree, x_partner: PyTree, dt,
+                        *, eta: float, alpha: float, alpha_t: float,
+                        **kw) -> tuple[PyTree, PyTree]:
+    flat_x, treedef = jax.tree_util.tree_flatten(x)
+    flat_t = treedef.flatten_up_to(x_tilde)
+    flat_p = treedef.flatten_up_to(x_partner)
+    outs = [gossip_event(a, b, c, dt, eta=eta, alpha=alpha, alpha_t=alpha_t,
+                         **kw) for a, b, c in zip(flat_x, flat_t, flat_p)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

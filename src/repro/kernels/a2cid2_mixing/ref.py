@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused A2CiD2 gossip-event kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mixing_p2p_ref(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
+                   dt, *, eta: float, alpha: float, alpha_t: float
+                   ) -> tuple[jax.Array, jax.Array]:
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta * jnp.asarray(dt, jnp.float32)))
+         ).astype(x.dtype)
+    d = x_tilde - x
+    xm = x + c * d
+    xtm = x_tilde - c * d
+    m = xm - x_partner
+    return xm - alpha * m, xtm - alpha_t * m

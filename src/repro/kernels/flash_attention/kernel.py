@@ -1,0 +1,119 @@
+"""Flash attention (Pallas TPU): causal + sliding-window, online softmax.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — the kv dimension is innermost and
+sequential on TPU, so the (m, l, acc) running-softmax state lives in VMEM
+scratch across kv steps.  BlockSpec tiling:
+
+    q   (1, BLOCK_Q, hd)   revisited across kv steps
+    k/v (1, BLOCK_K, hd)   streamed
+    out (1, BLOCK_Q, hd)   written at the last kv step
+
+MXU alignment: BLOCK_Q = BLOCK_K = 128, head_dim padded to a multiple of 128
+by the wrapper.  f32 accumulation regardless of input dtype.
+Sliding-window masking is positional: col > row - window and col <= row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  seq_len: int, kv_len: int, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                   # (bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be exp(0))
+    alive = m_cur > NEG_INF * 0.5
+    p = jnp.where(alive, jnp.exp(s - m_cur), 0.0)
+    corr = jnp.where(alive, jnp.exp(m_prev - m_cur), 1.0)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "interpret",
+                              "block_q", "block_k"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, window: int | None = None,
+                         scale: float | None = None, interpret: bool = False,
+                         block_q: int = BLOCK_Q, block_k: int = BLOCK_K
+                         ) -> jax.Array:
+    """q: (BH, S, hd), k/v: (BH, T, hd) — same head counts (pre-broadcast)."""
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+
+    pad_q = (-S) % block_q
+    pad_k = (-T) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    Sp, Tp = S + pad_q, T + pad_k
+
+    grid = (BH, Sp // block_q, Tp // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        seq_len=S, kv_len=T, block_q=block_q, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S]

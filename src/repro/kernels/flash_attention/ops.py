@@ -1,0 +1,34 @@
+"""jit'd public wrapper for flash attention in model layout (B, S, H, hd)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+from .ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    force_pallas: bool = False, interpret: bool = False
+                    ) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0.
+
+    Broadcasts kv heads, flattens (B, H) and dispatches to the Pallas kernel
+    on TPU (or interpret mode when forced) else the jnp oracle.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    T = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    if force_pallas or jax.default_backend() == "tpu":
+        out = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                                   interpret=interpret)
+    else:
+        out = attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

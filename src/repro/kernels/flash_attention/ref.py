@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """q: (BH, S, hd), k/v: (BH, T, hd)."""
+    S, T = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Fused RMSNorm (Pallas TPU): one pass, f32 accumulation in VMEM.
+
+Tiling: rows of the flattened (T, D) activation; each grid step normalizes
+BLOCK_T rows entirely in VMEM (D up to 8192 => 2 MiB bf16 per block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    scale = 1.0 + scale_ref[...].astype(jnp.float32)
+    o_ref[...] = (x32 * inv * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_2d(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+               interpret: bool = False) -> jax.Array:
+    """x: (T, D), scale: (D,) stored as deviation-from-1."""
+    T, D = x.shape
+    pad = (-T) % BLOCK_T
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // BLOCK_T,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, scale)
+    return out[:T]

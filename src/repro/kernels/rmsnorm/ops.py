@@ -1,0 +1,16 @@
+"""jit'd wrapper: any-leading-dims RMSNorm."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rmsnorm_2d
+from .ref import rmsnorm_ref
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6, *,
+            force_pallas: bool = False, interpret: bool = False) -> jax.Array:
+    if force_pallas or jax.default_backend() == "tpu":
+        flat = x.reshape(-1, x.shape[-1])
+        return rmsnorm_2d(flat, scale, eps=eps,
+                          interpret=interpret).reshape(x.shape)
+    return rmsnorm_ref(x, scale, eps)

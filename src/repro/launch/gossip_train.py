@@ -1,0 +1,331 @@
+"""Decentralized gossip training step — the paper's technique on a TPU mesh.
+
+Mesh: ("worker", "data", "model").  Each worker slice holds a full replica
+(FSDP over "data" x TP over "model" inside); A2CiD2 gossip runs across the
+"worker" axis:
+
+  super-step =  (1) lazy continuous mixing exp(dt*A) of {x, x~}
+                (2) one local SGD step on the worker's own batch shard
+                (3) E gossip events: random matching from the static bank,
+                    p2p parameter averaging via collective_permute
+
+With eta=0, alpha=alpha_t=1/2 and no momentum buffer updates this is the
+asynchronous baseline (Eq 6, ~AD-PSGD); with Prop 3.6 parameters it is
+A2CiD2.  ``ar_train_step`` (worker-axis all-reduce each step) is the AR-SGD
+baseline at equal mesh.
+
+The asynchronous event *schedule* (who gossips when, per-worker event clocks)
+is sampled with jax.random inside the step — identical in distribution to
+events.make_schedule (see DESIGN.md on the SPMD event-driven adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.a2cid2 import A2CiD2Params
+from ..core.gossip import GossipMixer
+from ..core.graphs import Graph
+from ..optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+class GossipTrainState(NamedTuple):
+    params: PyTree       # x   — per-worker replica (sharded over data/model)
+    momentum: PyTree     # x~  — the A2CiD2 continuous-momentum buffer
+    opt: Any             # local optimizer state (SGD momentum)
+    t_last: jax.Array    # worker-local event clock
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipTrainer:
+    """Builds the shard_map'd decentralized step for a (worker, data, model)
+    mesh.  loss_fn(params, batch) -> (loss, metrics)."""
+
+    loss_fn: Callable
+    optimizer: Optimizer
+    graph: Graph
+    acid: A2CiD2Params
+    lr: float = 0.1
+    comms_per_step: int = 1
+    axis_name: str = "worker"
+
+    def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
+        return GossipTrainState(
+            params=params,
+            momentum=jax.tree.map(jnp.copy, params),
+            opt=self.optimizer.init(params),
+            t_last=jnp.zeros(()),
+            key=key,
+        )
+
+    # ------------------------------------------------------------- the step
+    def make_step(self, mesh):
+        mixer = GossipMixer(self.graph, self.acid, self.axis_name)
+        n_events = self.comms_per_step
+
+        def step(state: GossipTrainState, batch: PyTree):
+            key, k_ev, k_dt = jax.random.split(state.key, 3)
+            x, xt = state.params, state.momentum
+
+            # (1) + (2): gradient event at this worker's clock.  dt ~ Exp(1)
+            # models the unit-rate gradient Poisson process, independently
+            # per worker (key folded with the worker index); gossip events
+            # (k_ev) are global and shared by construction.
+            wid = jax.lax.axis_index(self.axis_name)
+            dt_grad = jax.random.exponential(jax.random.fold_in(k_dt, wid), ())
+            x, xt = mixer.mix(x, xt, dt_grad)
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(x, batch)
+            # local SGD step updates BOTH buffers (Eq 4)
+            x, opt = self.optimizer.update(grads, state.opt, x,
+                                           jnp.asarray(self.lr, jnp.float32))
+            delta = jax.tree.map(lambda new, old: new - old, x, state.params)
+            xt = jax.tree.map(lambda t, d: t + d, xt, delta)
+
+            # (3): E gossip events with Exp inter-event gaps
+            idxs, dts = mixer.sample_event_batch(k_ev, n_events)
+            x, xt = mixer.gossip_events(x, xt, idxs, dts)
+
+            new_state = GossipTrainState(x, xt, opt,
+                                         state.t_last + dt_grad + jnp.sum(dts),
+                                         key)
+            return new_state, {"loss": jax.lax.pmean(loss, self.axis_name),
+                               **metrics}
+
+        return step
+
+    def make_ar_step(self):
+        """AR-SGD baseline: synchronous all-reduce of grads over workers."""
+
+        def step(state: GossipTrainState, batch: PyTree):
+            key, _ = jax.random.split(state.key)
+            (loss, metrics), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(state.params, batch)
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, self.axis_name), grads)
+            x, opt = self.optimizer.update(grads, state.opt, state.params,
+                                           jnp.asarray(self.lr, jnp.float32))
+            return GossipTrainState(x, x, opt, state.t_last + 1.0, key), \
+                {"loss": jax.lax.pmean(loss, self.axis_name), **metrics}
+
+        return step
+
+    # -------------------------------------------------------------- wiring
+    def shard_mapped_step(self, mesh, step_fn, state_specs, batch_spec):
+        """Wrap a step in shard_map over the worker axis (data/model axes are
+        handled by the in-shard sharding of params/batch via `auto`)."""
+        from jax import shard_map
+
+        return shard_map(
+            step_fn, mesh=mesh,
+            in_specs=(state_specs, batch_spec),
+            out_specs=(state_specs, P()),
+            check_vma=False,
+            axis_names={self.axis_name},
+        )
+
+
+# --------------------------------------------------------------------------
+# Stacked (pjit-native) formulation
+# --------------------------------------------------------------------------
+class StackedGossipState(NamedTuple):
+    x: PyTree            # leaves (W, ...) — worker-stacked replicas
+    x_tilde: PyTree
+    opt: Any             # stacked optimizer state
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedGossipTrainer:
+    """Decentralized A2CiD2 trainer with an explicit leading worker axis.
+
+    Every state leaf carries a leading (n_workers,) dim sharded over the
+    mesh "worker" axis; the per-worker gradient step is a vmap and a gossip
+    event is ``jnp.take(x, partner, axis=0)`` — XLA lowers the gather along
+    the sharded worker dim to a collective-permute.  This is the same code
+    path as core.simulator (the faithful repro) but partitioned over real
+    devices, and it avoids the shard_map(manual=worker)+auto(data,model)
+    combination that crashes XLA's SPMD partitioner (see DESIGN.md).
+
+    grad_fn(params_i, batch_i) -> (loss, grads) for ONE worker; vmapped.
+    """
+
+    grad_fn: Callable
+    optimizer: Optimizer
+    graph: Graph
+    acid: A2CiD2Params
+    lr: float = 0.1
+    comms_per_step: int = 1
+
+    def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
+        n = self.graph.n
+        stack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), params0)
+        return StackedGossipState(
+            x=stack, x_tilde=jax.tree.map(jnp.copy, stack),
+            opt=jax.vmap(self.optimizer.init)(stack), key=key)
+
+    def make_step(self):
+        from ..core.a2cid2 import apply_mixing, matched_p2p_update
+        from ..core.gossip import bank_edge_rates, matching_bank
+
+        bank = jnp.asarray(matching_bank(self.graph))           # (M, W)
+        probs = jnp.asarray(
+            bank_edge_rates(self.graph, np.asarray(bank)), jnp.float32)
+        n = self.graph.n
+        E = self.comms_per_step
+        acid = self.acid
+
+        def step(state: StackedGossipState, batch: PyTree):
+            key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
+            x, xt = state.x, state.x_tilde
+            # per-worker gradient-event clocks ~ Exp(1)
+            dts = jax.random.exponential(k_dt, (n,))
+            x, xt = apply_mixing(x, xt, acid.eta, dts)
+            (losses, _aux), grads = jax.vmap(self.grad_fn)(x, batch)
+            x2, opt = jax.vmap(
+                lambda g, o, p: self.optimizer.update(
+                    g, o, p, jnp.asarray(self.lr, jnp.float32))
+            )(grads, state.opt, x)
+            delta = jax.tree.map(lambda a, b: a - b, x2, x)
+            x = x2
+            xt = jax.tree.map(lambda t, d: t + d, xt, delta)
+            # E gossip events: sampled matchings + Exp inter-event mixing
+            idxs = jax.random.categorical(k_ev, jnp.log(probs), shape=(E,))
+            gaps = jax.random.exponential(k_gap, (E, n)) / max(E, 1)
+
+            # the matching bank is STATIC — dispatch via lax.switch so each
+            # branch indexes with a constant permutation.  A traced partner
+            # (bank[idx] then take) defeats XLA's permutation analysis and
+            # lowers to an all-gather of every worker's shard (n x the bytes
+            # of a p2p exchange; measured in EXPERIMENTS.md §Perf C).
+            bank_np = np.asarray(bank)
+
+            def make_branch(k: int):
+                perm = tuple(int(j) for j in bank_np[k])
+
+                def branch(operand):
+                    x, xt = operand
+                    return matched_p2p_update(
+                        x, xt, jnp.asarray(perm, jnp.int32), acid)
+
+                return branch
+
+            branches = [make_branch(k) for k in range(bank_np.shape[0])]
+
+            def ev(carry, inp):
+                x, xt = carry
+                idx, gap = inp
+                x, xt = apply_mixing(x, xt, acid.eta, gap)
+                x, xt = jax.lax.switch(idx, branches, (x, xt))
+                return (x, xt), None
+
+            (x, xt), _ = jax.lax.scan(ev, (x, xt), (idxs, gaps))
+            return (StackedGossipState(x, xt, opt, key),
+                    {"loss": jnp.mean(losses)})
+
+        return step
+
+    def make_pair_ring_step(self):
+        """Ring-graph gossip with pair-local collectives (§Perf C it3).
+
+        A ring's two maximal matchings pair adjacent workers; with the worker
+        axis factored as (wpair=W/2, wside=2), the even matching's pairwise
+        average is a 2-device all-reduce (pmean over "wside" after reshaping
+        the stacked worker dim to (W/2, 2)), and the odd matching is the same
+        after a roll(1) of the worker axis (one collective-permute).  The
+        A2CiD2 x~ update needs only m = 2*(x - pairmean) — no extra traffic.
+        Per-event bytes drop from an all-gather of all W shards to ~1 shard.
+        """
+        assert self.graph.name == "ring" and self.graph.n % 2 == 0
+        n = self.graph.n
+        E = self.comms_per_step
+        acid = self.acid
+
+        def pair_mean(t):  # t: (W, ...) -> mean over adjacent even pairs
+            r = t.reshape((n // 2, 2) + t.shape[1:])
+            m = jnp.mean(r, axis=1, keepdims=True)
+            return jnp.broadcast_to(m, r.shape).reshape(t.shape)
+
+        def p2p(x, xt, odd):
+            def upd(a, at):
+                a2 = jnp.roll(a, -1, axis=0) if odd else a
+                mean = pair_mean(a2)
+                mdiff = 2.0 * (a2 - mean)          # = a_i - a_partner
+                new_a = a2 - acid.alpha * mdiff    # = pairwise mean
+                if odd:
+                    new_a = jnp.roll(new_a, 1, axis=0)
+                    mdiff = jnp.roll(mdiff, 1, axis=0)
+                return new_a, at - acid.alpha_tilde * mdiff
+
+            flat_x, treedef = jax.tree_util.tree_flatten(x)
+            flat_t = treedef.flatten_up_to(xt)
+            out = [upd(a, at) for a, at in zip(flat_x, flat_t)]
+            return (treedef.unflatten([o[0] for o in out]),
+                    treedef.unflatten([o[1] for o in out]))
+
+        from ..core.a2cid2 import apply_mixing
+
+        def step(state: StackedGossipState, batch: PyTree):
+            key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
+            x, xt = state.x, state.x_tilde
+            dts = jax.random.exponential(k_dt, (n,))
+            x, xt = apply_mixing(x, xt, acid.eta, dts)
+            (losses, _aux), grads = jax.vmap(self.grad_fn)(x, batch)
+            x2, opt = jax.vmap(
+                lambda g, o, p: self.optimizer.update(
+                    g, o, p, jnp.asarray(self.lr, jnp.float32))
+            )(grads, state.opt, x)
+            delta = jax.tree.map(lambda a, b: a - b, x2, x)
+            x = x2
+            xt = jax.tree.map(lambda t, d: t + d, xt, delta)
+            odds = jax.random.bernoulli(k_ev, 0.5, (E,))
+            gaps = jax.random.exponential(k_gap, (E, n)) / max(E, 1)
+
+            def ev(carry, inp):
+                x, xt = carry
+                odd, gap = inp
+                x, xt = apply_mixing(x, xt, acid.eta, gap)
+                x, xt = jax.lax.cond(
+                    odd,
+                    lambda c: p2p(c[0], c[1], True),
+                    lambda c: p2p(c[0], c[1], False),
+                    (x, xt))
+                return (x, xt), None
+
+            (x, xt), _ = jax.lax.scan(ev, (x, xt), (odds, gaps))
+            return (StackedGossipState(x, xt, opt, key),
+                    {"loss": jnp.mean(losses)})
+
+        return step
+
+    def make_ar_step(self):
+        """AR-SGD baseline at the same mesh: every step all-reduces gradients
+        across the worker axis (the paper's synchronous reference)."""
+        n = self.graph.n
+
+        def step(state: StackedGossipState, batch: PyTree):
+            key, _ = jax.random.split(state.key)
+            (losses, _aux), grads = jax.vmap(self.grad_fn)(state.x, batch)
+            # all-reduce over workers: mean along the stacked worker axis
+            grads = jax.tree.map(
+                lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
+                                           g.shape), grads)
+            x, opt = jax.vmap(
+                lambda g, o, p: self.optimizer.update(
+                    g, o, p, jnp.asarray(self.lr, jnp.float32))
+            )(grads, state.opt, state.x)
+            return (StackedGossipState(x, jax.tree.map(jnp.copy, x), opt,
+                                       key),
+                    {"loss": jnp.mean(losses)})
+
+        return step

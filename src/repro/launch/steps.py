@@ -1,0 +1,192 @@
+"""jit-able train / prefill / serve steps with explicit shardings.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+combination, and the ones launch/train.py executes for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shardlib
+from ..models.config import ModelConfig
+from ..models.transformer import Model
+from ..optim import clip_by_global_norm, sgd
+from ..optim.optimizers import Optimizer, OptState
+from . import shardings as S
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything needed to lower/run one (arch x shape) step."""
+
+    fn: Callable                      # jit-able step function
+    in_shardings: tuple
+    state_specs: PyTree | None        # ShapeDtypeStructs of carried state
+    donate_argnums: tuple = ()
+
+
+# ---------------------------------------------------------------- factories
+
+def make_train_step(model: Model, optimizer: Optimizer | None = None,
+                    lr: float = 1e-2, remat: bool = True,
+                    grad_clip: float | None = None,
+                    num_microbatches: int = 1,
+                    accum_dtype=None):
+    """num_microbatches > 1 scans gradient accumulation over batch slices —
+    activation temp memory scales with batch/num_microbatches.  Gradients
+    accumulate in ``accum_dtype`` (default: the param dtype — an f32
+    accumulator doubles the per-device gradient footprint of large MoEs)."""
+    optimizer = optimizer or sgd()  # the paper's optimizer
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, remat=remat)
+            return loss, metrics
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: dict):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grads_of(state.params, batch)
+        else:
+            # batch leaves arrive with a leading (num_microbatches,) axis —
+            # shaped by the data pipeline / input specs, NOT reshaped here
+            # (reshaping a data-sharded batch axis would force a reshard).
+            def body(acc, micro):
+                (loss, metrics), g = grads_of(state.params, micro)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype),
+                                   acc, g)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype or p.dtype),
+                state.params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, batch)
+            grads = jax.tree.map(lambda g: (g / num_microbatches).astype(
+                jax.tree.leaves(state.params)[0].dtype), grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        params, opt = optimizer.update(grads, state.opt, state.params,
+                                       jnp.asarray(lr, jnp.float32))
+        out_metrics = {"loss": loss, **{k: v for k, v in metrics.items()}}
+        return TrainState(params, opt), out_metrics
+
+    return train_step, optimizer
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params: PyTree, batch: dict):
+        with shardlib.forward_only():
+            logits, _, _ = model.forward(params, batch["inputs"])
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params: PyTree, caches: list, inputs, pos):
+        logits, caches = model.decode_step(params, inputs, pos, caches)
+        return logits, caches
+
+    return serve_step
+
+
+# -------------------------------------------------------- dry-run assembly
+
+def abstract_params(model: Model, key=None) -> PyTree:
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda: model.init(k))
+
+
+def abstract_train_state(model: Model, optimizer: Optimizer) -> PyTree:
+    params = abstract_params(model)
+    opt = jax.eval_shape(lambda: optimizer.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params)))
+    return TrainState(params, opt)
+
+
+def bundle_for(cfg: ModelConfig, shape, mesh, rules,
+               train_microbatches: int = 4,
+               serve_param_mode: str = "fsdp") -> "LoweredSpec":
+    """Build the (fn, shardings, arg specs) for one arch x shape on a mesh.
+
+    serve_param_mode: "fsdp" shards serve params over data+model (memory-
+    optimal but all-gathers weights layer-by-layer every decoded token);
+    "tp_only" replicates serve params over data (TP-sharded only) — the
+    decode-shape optimization validated in EXPERIMENTS.md §Perf."""
+    from ..shapes import adapt_config, decode_input_specs, train_input_specs
+
+    cfg = adapt_config(cfg, shape)
+    model = Model(cfg)
+
+    if shape.kind == "train":
+        m = train_microbatches
+        train_step, optimizer = make_train_step(model, num_microbatches=m)
+        state = abstract_train_state(model, optimizer)
+        batch = train_input_specs(cfg, shape)
+        if m > 1:
+            batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (m, s.shape[0] // m) + s.shape[1:], s.dtype), batch)
+        state_sh = TrainState(
+            S.param_shardings(state.params, mesh, rules),
+            OptState(S.replicated(mesh),
+                     S.param_shardings(state.opt.mu, mesh, rules),
+                     None if state.opt.nu is None else
+                     S.param_shardings(state.opt.nu, mesh, rules)))
+        batch_sh = S.batch_shardings(batch, mesh, rules,
+                                     leading_microbatch=(m > 1))
+        return LoweredSpec(train_step, (state, batch),
+                           (state_sh, batch_sh), donate=(0,))
+
+    params = abstract_params(model)
+    serve_rules = dict(rules)
+    if serve_param_mode == "tp_only":
+        serve_rules["fsdp"] = None
+    params_sh = S.param_shardings(params, mesh, serve_rules)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        batch = train_input_specs(cfg, shape)
+        batch = {"inputs": batch["inputs"]}
+        return LoweredSpec(fn, (params, batch),
+                           (params_sh, S.batch_shardings(batch, mesh, rules)),
+                           donate=())
+
+    # decode
+    fn = make_serve_step(model)
+    dspecs = decode_input_specs(cfg, shape)
+    caches = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    caches_sh = S.cache_shardings(caches, mesh, rules)
+    inputs_sh = S.batch_shardings({"inputs": dspecs["inputs"]}, mesh,
+                                  rules)["inputs"]
+    return LoweredSpec(
+        fn, (params, caches, dspecs["inputs"], dspecs["pos"]),
+        (params_sh, caches_sh, inputs_sh, S.replicated(mesh)), donate=(1,))
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredSpec:
+    fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    arg_shardings: tuple
+    donate: tuple
+
+    def lower(self, mesh, rules):
+        with shardlib.use_mesh(mesh, rules):
+            jitted = jax.jit(self.fn, in_shardings=self.arg_shardings,
+                             donate_argnums=self.donate)
+            return jitted.lower(*self.args)

@@ -1,0 +1,121 @@
+"""Training launcher.
+
+Three modes, CPU-runnable at reduced scale and mesh-ready at full scale:
+
+  # single-process decentralized simulation (the faithful paper repro)
+  PYTHONPATH=src python -m repro.launch.train --mode sim --arch nano-lm \
+      --workers 8 --graph ring --acid --steps 200
+
+  # data-parallel synchronous training (AR-SGD reference)
+  PYTHONPATH=src python -m repro.launch.train --mode sync --arch nano-lm \
+      --steps 100
+
+Full-scale meshes are exercised by launch/dryrun.py (this container has one
+real CPU device).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import save
+from ..configs import get_config
+from ..core import (Simulator, allreduce_sgd, build_graph, make_schedule,
+                    params_from_graph)
+from ..data import LMTaskStream, WorkerStream
+from ..models.transformer import Model
+from ..optim import sgd
+from .steps import TrainState, make_train_step
+
+
+def build_model(arch: str, reduced: bool):
+    cfg = get_config(arch, reduced=reduced)
+    return cfg, Model(cfg)
+
+
+def run_sim(args) -> None:
+    """Decentralized asynchronous training via the event simulator."""
+    cfg, model = build_model(args.arch, reduced=not args.full)
+    stream = LMTaskStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          batch_size=args.batch_size, seed=args.seed)
+    ws = WorkerStream(base_seed=args.seed)
+
+    def grad_fn(params, key, wid):
+        batch = stream.sample(jax.random.fold_in(key, wid))
+        def loss_fn(p):
+            loss, _ = model.loss(p, batch)
+            return loss
+        return jax.value_and_grad(loss_fn)(params)
+
+    graph = build_graph(args.graph, args.workers)
+    acid = params_from_graph(graph, accelerated=args.acid)
+    sim = Simulator(grad_fn, acid, gamma=args.lr)
+    params0 = model.init(jax.random.PRNGKey(args.seed))
+    state = sim.init(params0, args.workers, jax.random.PRNGKey(args.seed + 1))
+    sched = make_schedule(graph, rounds=args.steps,
+                          comms_per_grad=args.comms_per_grad, seed=args.seed)
+    t0 = time.time()
+    state, trace = sim.run_schedule(state, sched)
+    dt = time.time() - t0
+    print(f"[train/sim] {args.workers} workers, {args.graph} graph, "
+          f"acid={args.acid}: {args.steps} rounds in {dt:.1f}s")
+    print(f"  final loss {float(trace.loss[-1]):.4f}  "
+          f"consensus {float(trace.consensus[-1]):.3e}  "
+          f"bayes-CE {stream.bayes_ce():.4f}")
+    if args.ckpt:
+        save(args.ckpt, args.steps, jax.device_get(state.x))
+        print(f"  checkpoint -> {args.ckpt}")
+
+
+def run_sync(args) -> None:
+    """Synchronous single-device training (AR-SGD semantics)."""
+    cfg, model = build_model(args.arch, reduced=not args.full)
+    stream = LMTaskStream(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                          batch_size=args.batch_size, seed=args.seed)
+    train_step, optimizer = make_train_step(model, sgd(), lr=args.lr,
+                                            remat=False)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    state = TrainState(params, optimizer.init(params))
+    step = jax.jit(train_step)
+    key = jax.random.PRNGKey(args.seed + 1)
+    t0 = time.time()
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        batch = stream.sample(sub)
+        state, metrics = step(state, batch)
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"[train/sync] step {i:5d} loss {float(metrics['loss']):.4f}")
+    print(f"[train/sync] {args.steps} steps in {time.time()-t0:.1f}s, "
+          f"bayes-CE {stream.bayes_ce():.4f}")
+    if args.ckpt:
+        save(args.ckpt, args.steps, jax.device_get(state.params))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("sim", "sync"), default="sim")
+    ap.add_argument("--arch", default="nano-lm")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--graph", default="ring",
+                    choices=("ring", "complete", "exponential", "star",
+                             "torus"))
+    ap.add_argument("--acid", action="store_true",
+                    help="enable the A2CiD2 continuous momentum")
+    ap.add_argument("--comms-per-grad", type=float, default=1.0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", type=str, default=None)
+    args = ap.parse_args()
+    (run_sim if args.mode == "sim" else run_sync)(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Pure-JAX model zoo."""
+from .config import Block, MLAConfig, MoEConfig, ModelConfig, RGLRUConfig, SSMConfig
+from .transformer import Model
+
+__all__ = ["Block", "MLAConfig", "MoEConfig", "ModelConfig", "RGLRUConfig",
+           "SSMConfig", "Model"]

@@ -1,0 +1,268 @@
+"""Common layers: norms, MLPs, embeddings, MoE — pure JAX (no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding
+from .config import ModelConfig, MoEConfig
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ------------------------------------------------------------------- inits
+
+def dense_init(key, fan_in: int, shape, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+
+@jax.custom_vjp
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with a hand-written VJP.
+
+    Forward: f32 accumulation of x.x as a dot (preferred_element_type) — an
+    explicit x.astype(f32) gets hoisted by XLA out of the backward layer scan
+    into a full f32 copy of the saved residual stack.
+    Backward: custom VJP keeping every (B,S,D) cotangent in the input dtype —
+    the autodiff rule of the f32-output variance dot produces f32 cotangents
+    for x, which the partitioner then all-gathers at 2x bytes throughout the
+    backward pass (measured on yi-34b; EXPERIMENTS.md §Perf B)."""
+    out, _ = _rmsnorm_fwd(x, scale, eps)
+    return out
+
+
+def _rms_inv(x, eps):
+    sq = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = sq[..., None] / x.shape[-1]
+    return jax.lax.rsqrt(var + eps)
+
+
+def _rmsnorm_fwd(x, scale, eps):
+    dt = x.dtype
+    inv = _rms_inv(x, eps).astype(dt)
+    out = (x * inv) * (1.0 + scale.astype(dt))
+    return out, (x, inv, scale, eps)
+
+
+def _rmsnorm_bwd(res, g):
+    x, inv, scale, eps = res
+    dt = x.dtype
+    sp = (1.0 + scale.astype(dt))
+    gs = g * sp                                           # (..., D)
+    # row scalar sum(g*s'*x) in f32 via a dot — no f32 (B,S,D) materializes
+    dot = jnp.einsum("...d,...d->...", gs, x,
+                     preferred_element_type=jnp.float32)
+    coef = (dot[..., None] / x.shape[-1]).astype(dt) * (inv * inv * inv)
+    gx = gs * inv - x * coef
+    gscale = jnp.sum((g * x * inv).astype(jnp.float32),
+                     axis=tuple(range(g.ndim - 1)))
+    return gx, gscale.astype(scale.dtype), None
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def init_rmsnorm(dim: int, dtype) -> jax.Array:
+    # stored as deviation from 1 (gemma-style) for clean wd behaviour
+    return jnp.zeros((dim,), dtype)
+
+
+# --------------------------------------------------------------------- MLPs
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, act: str = "silu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, d_model, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, d_ff, (d_ff, d_model), dtype),
+    }
+    if act == "silu":  # gated (swiglu)
+        p["w_gate"] = dense_init(k3, d_model, (d_model, d_ff), dtype)
+    return p
+
+
+def apply_mlp(p, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = x @ p["w_up"]
+    up = sharding.hint(up, "batch", None, "ffn")
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    out = h @ p["w_down"]
+    return sharding.hint(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------- MoE
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype, act: str = "silu"):
+    d_e = cfg.d_expert or d_model * 4
+    keys = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(keys[0], d_model, (d_model, cfg.num_experts),
+                             jnp.float32),  # router in fp32 for stable softmax
+        "moe_up": dense_init(keys[1], d_model,
+                             (cfg.num_experts, d_model, d_e), dtype),
+        "moe_down": dense_init(keys[2], d_e,
+                               (cfg.num_experts, d_e, d_model), dtype),
+    }
+    if act == "silu":
+        p["moe_gate"] = dense_init(keys[3], d_model,
+                                   (cfg.num_experts, d_model, d_e), dtype)
+    if cfg.shared_expert:
+        d_s = cfg.d_shared or d_e
+        p["shared"] = init_mlp(keys[4], d_model, d_s, dtype, act)
+    if cfg.dense_d_ff:
+        p["dense"] = init_mlp(keys[5], d_model, cfg.dense_d_ff, dtype, act)
+    return p
+
+
+def _dispatch_group(xt, topi, topw, E: int, C: int, dtype):
+    """Per-group dispatch: xt (T,D), topi/topw (T,K) -> buffer (E,C,D),
+    dest (T,K), keep (T,K).  Pure local ops — vmapped over data-sharded
+    groups so dispatch never crosses the data shards.
+
+    Implemented as K unique scatter-SETs of (T, D): no (T*K, D) intermediate
+    (whose repeat-transpose reduce promotes to f32), no accumulation (a bf16
+    scatter-ADD promotes to f32 and XLA hoists the convert onto the saved
+    residual stack of the backward layer scan)."""
+    T, D = xt.shape
+    K = topi.shape[1]
+    flat_e = topi.reshape(-1)                                  # (T*K,)
+    # rank of each (token, k) within its expert via stable sort
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    rank_sorted = jnp.arange(T * K) - starts[sorted_e]
+    slot = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = (slot < C).reshape(T, K)                            # overflow drops
+    dest = (flat_e * C + slot).reshape(T, K)
+    buf = jnp.zeros((E * C + 1, D), dtype)
+    for k in range(K):
+        sdest = jnp.where(keep[:, k], dest[:, k], E * C + 1)   # OOB = dropped
+        buf = buf.at[sdest].set(xt, mode="drop", unique_indices=True)
+    return buf[: E * C].reshape(E, C, D), dest, keep
+
+
+def _combine_group(out_e, dest, keep, topw, T: int, D: int, dtype):
+    """K unique gathers of (T, D), weighted-summed.  Kept dests are unique;
+    drops gather-fill 0 via out-of-bounds indices."""
+    K = topw.shape[1]
+    E_C = out_e.shape[0] * out_e.shape[1]
+    flat_out = out_e.reshape(E_C, D)
+    out = jnp.zeros((T, D), dtype)
+    for k in range(K):
+        sdest = jnp.where(keep[:, k], dest[:, k], E_C + 1)
+        g = flat_out.at[sdest].get(mode="fill", fill_value=0,
+                                   unique_indices=True)        # (T, D)
+        out = out + g * (topw[:, k:k + 1] * keep[:, k:k + 1]).astype(dtype)
+    return out
+
+
+def apply_moe(p, x: jax.Array, cfg: MoEConfig, act: str = "silu"
+              ) -> tuple[jax.Array, jax.Array]:
+    """Group-wise capacity-based top-k MoE (GShard-style dispatch).
+
+    x: (B, S, D).  Returns (out, aux_loss).
+
+    Tokens are grouped by batch row (G = B); dispatch scatter/gather is
+    vmapped over groups, so with the batch data-sharded every scatter is a
+    *local* op — the only cross-shard traffic is the (G, E, C, D) buffer
+    resharding from (G: data) to (E: model) at the expert einsum, which XLA
+    lowers to an all-to-all: exactly the traffic a hand-written EP MoE does.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    # per-group capacity (statistical balance within each row of S tokens)
+    C = max(1, int(np.ceil(S * K / E * cfg.capacity_factor)))
+
+    xg = x  # (G=B, S, D)
+    # router matmul fully in the activation dtype — any f32 operand/cotangent
+    # on xg makes XLA hoist an f32 copy of the whole saved residual stack out
+    # of the backward layer scan; softmax still runs in f32 on the (small)
+    # logits tensor
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                       # (B, S, K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)        # renormalize
+    # combine weights participate in (T*K, D)-sized products — keep them in
+    # the activation dtype so their cotangents don't promote those to f32
+    topw = topw.astype(x.dtype)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e (global)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    counts = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    aux = cfg.router_aux_weight * E * jnp.sum(
+        me * counts / (B * S * K))
+
+    buf, dest, keep = jax.vmap(
+        lambda xt, ti, tw: _dispatch_group(xt, ti, tw, E, C, x.dtype)
+    )(xg, topi, topw)                                          # (B,E,C,D)...
+    buf = sharding.hint(buf, "batch", "expert", None, None)
+
+    up = jnp.einsum("gecd,edf->gecf", buf, p["moe_up"])
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["moe_gate"])) * up
+    else:
+        h = jax.nn.gelu(up)
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["moe_down"])     # (B,E,C,D)
+    out_e = sharding.hint(out_e, "batch", "expert", None, None)
+
+    out = jax.vmap(
+        lambda oe, de, ke, tw: _combine_group(oe, de, ke, tw, S, D, x.dtype)
+    )(out_e, dest, keep, topw)                                 # (B, S, D)
+
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, act)
+    if "dense" in p:
+        out = out + apply_mlp(p["dense"], x, act)
+    return out, aux
+
+
+# --------------------------------------------------------------- embeddings
+
+def init_embedding(key, cfg: ModelConfig, dtype):
+    p = {}
+    if cfg.input_mode == "tokens":
+        p["tok"] = embed_init(key, (cfg.padded_vocab, cfg.d_model), dtype)
+    else:  # stubbed frontend provides embeddings; learn an input projection
+        p["in_proj"] = dense_init(key, cfg.d_model,
+                                  (cfg.d_model, cfg.d_model), dtype)
+    return p
+
+
+def embed_inputs(p, cfg: ModelConfig, inputs: jax.Array) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        x = jnp.take(p["tok"], inputs, axis=0)
+    else:
+        x = inputs.astype(dtype_of(cfg.param_dtype)) @ p["in_proj"]
+    return sharding.hint(x.astype(dtype_of(cfg.compute_dtype)),
+                         "batch", None, None)
+
+
+def init_lm_head(key, cfg: ModelConfig, dtype):
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        return {}
+    out = cfg.padded_vocab * cfg.num_codebooks
+    return {"w": dense_init(key, cfg.d_model, (cfg.d_model, out), dtype)}
+
+
+def apply_lm_head(head_p, embed_p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x (..., D) -> logits (..., num_codebooks*vocab) [codebooks folded]."""
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = x @ embed_p["tok"].T.astype(x.dtype)
+    else:
+        logits = x @ head_p["w"]
+    return sharding.hint(logits, "batch", None, "vocab")

@@ -1,0 +1,109 @@
+"""ResNet for the paper's own experiments (ResNet18-CIFAR10, Sec 4).
+
+Pure-JAX pre-activation ResNet with lax.conv; BatchNorm is replaced by
+GroupNorm — the standard substitution for decentralized/small-local-batch
+training where BN statistics differ per worker (noted in DESIGN.md).  A
+ResNet-8 variant makes the paper's CIFAR experiment CPU-tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18"
+    stage_sizes: Sequence[int] = (2, 2, 2, 2)
+    width: int = 64
+    num_classes: int = 10
+    groups: int = 8  # groupnorm groups
+
+
+def resnet18_cifar() -> ResNetConfig:
+    return ResNetConfig("resnet18", (2, 2, 2, 2), 64, 10)
+
+
+def resnet8_cifar() -> ResNetConfig:
+    """CPU-scale stand-in with the same family (3 stages x 1 block)."""
+    return ResNetConfig("resnet8", (1, 1, 1), 16, 10, groups=4)
+
+
+def _conv_init(key, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return jax.random.normal(key, shape) * np.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, scale, bias, groups, eps=1e-5):
+    B, H, W, C = x.shape
+    g = x.reshape(B, H, W, groups, C // groups)
+    mean = jnp.mean(g, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(g, axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    return g.reshape(B, H, W, C) * scale + bias
+
+
+def init_resnet(key, cfg: ResNetConfig) -> dict:
+    keys = iter(jax.random.split(key, 256))
+    p: dict = {"stem": _conv_init(next(keys), (3, 3, 3, cfg.width)),
+               "stem_gn": (jnp.ones((cfg.width,)), jnp.zeros((cfg.width,)))}
+    c_in = cfg.width
+    p["stages"] = []
+    for si, n_blocks in enumerate(cfg.stage_sizes):
+        c_out = cfg.width * (2 ** si)
+        stage = []
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "conv1": _conv_init(next(keys), (3, 3, c_in, c_out)),
+                "gn1": (jnp.ones((c_in,)), jnp.zeros((c_in,))),
+                "conv2": _conv_init(next(keys), (3, 3, c_out, c_out)),
+                "gn2": (jnp.ones((c_out,)), jnp.zeros((c_out,))),
+            }
+            # stride-2 blocks are exactly the projected ones in these configs,
+            # so `stride` stays out of the param pytree (grad-friendly)
+            if stride != 1 or c_in != c_out:
+                blk["proj"] = _conv_init(next(keys), (1, 1, c_in, c_out))
+            stage.append(blk)
+            c_in = c_out
+        p["stages"].append(stage)
+    p["head"] = (jax.random.normal(next(keys), (c_in, cfg.num_classes))
+                 / np.sqrt(c_in), jnp.zeros((cfg.num_classes,)))
+    return p
+
+
+def apply_resnet(p, cfg: ResNetConfig, x: jax.Array) -> jax.Array:
+    """x: (B, 32, 32, 3) -> logits (B, num_classes)."""
+    h = _conv(x, p["stem"])
+    for stage in p["stages"]:
+        for blk in stage:
+            g = cfg.groups
+            stride = 2 if "proj" in blk else 1
+            y = _gn(h, *blk["gn1"], g)
+            y = jax.nn.relu(y)
+            shortcut = _conv(y, blk["proj"], stride) if "proj" in blk else h
+            y = _conv(y, blk["conv1"], stride)
+            y = jax.nn.relu(_gn(y, *blk["gn2"], g))
+            y = _conv(y, blk["conv2"])
+            h = shortcut + y
+    h = jnp.mean(jax.nn.relu(h), axis=(1, 2))
+    w, b = p["head"]
+    return h @ w + b
+
+
+def resnet_loss(p, cfg: ResNetConfig, batch: dict) -> tuple[jax.Array, dict]:
+    logits = apply_resnet(p, cfg, batch["images"])
+    lp = jax.nn.log_softmax(logits)
+    ce = -jnp.take_along_axis(lp, batch["labels"][:, None], axis=-1).mean()
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+    return ce, {"acc": acc}

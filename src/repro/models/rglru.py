@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+The Griffin recurrent block: two parallel linear branches; one goes through a
+causal conv1d + the Real-Gated LRU, the other is a GeLU gate; merged by
+elementwise product and projected out.
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses an associative scan over the sequence (O(log S) depth);
+decode is an O(1) state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from .config import ModelConfig, RGLRUConfig
+from .layers import dense_init
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    r: RGLRUConfig = cfg.rglru
+    d, w = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_rnn": dense_init(ks[0], d, (d, w), dtype),
+        "w_in_gate": dense_init(ks[1], d, (d, w), dtype),
+        "conv_w": dense_init(ks[2], r.conv_width, (r.conv_width, w), dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], w, (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_x": dense_init(ks[4], w, (w, w), dtype),
+        "b_x": jnp.zeros((w,), dtype),
+        # Lambda init so a ~ U[0.9, 0.999]^(1/c) at r=1 (paper's init range)
+        "lam": jnp.full((w,), 0.65, dtype),
+        "w_out": dense_init(ks[5], w, (w, d), dtype),
+    }
+
+
+def _conv(x, w, b, state=None):
+    W = w.shape[0]
+    pad = (jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+           if state is None else state)
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, k: k + x.shape[1]] * w[k] for k in range(W)) + b
+    return out, full[:, -(W - 1):]
+
+
+def _gates(p, cfg: ModelConfig, u):
+    """u: conv'd rnn-branch activations (B,S,W). Returns (log_a, beta*gated_in)."""
+    c = cfg.rglru.c
+    r = jax.nn.sigmoid(u @ p["w_a"] + p["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_x"] + p["b_x"])
+    log_a = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, (beta.astype(u.dtype) * (i * u))
+
+
+def apply_rglru(p, cfg: ModelConfig, x: jax.Array, positions=None) -> jax.Array:
+    B, S, D = x.shape
+    u = x @ p["w_in_rnn"]
+    u = sharding.hint(u, "batch", None, "ffn")
+    gate = jax.nn.gelu(x @ p["w_in_gate"])
+    u, _ = _conv(u, p["conv_w"], p["conv_b"])
+    log_a, b = _gates(p, cfg, u)
+    a = jnp.exp(log_a).astype(u.dtype)                        # (B,S,W)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate) @ p["w_out"]
+    return sharding.hint(y, "batch", None, None)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    r, w = cfg.rglru, _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype),
+    }
+
+
+def decode_rglru(p, cfg: ModelConfig, x: jax.Array, pos, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    u = x @ p["w_in_rnn"]
+    gate = jax.nn.gelu(x @ p["w_in_gate"])
+    u, conv_state = _conv(u, p["conv_w"], p["conv_b"], state=cache["conv"])
+    log_a, b = _gates(p, cfg, u)
+    a = jnp.exp(log_a).astype(u.dtype)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (h[:, None] * gate) @ p["w_out"]
+    return sharding.hint(y, "batch", None, None), {"h": h, "conv": conv_state}

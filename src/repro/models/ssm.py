@@ -1,0 +1,187 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks of
+length Q, linear across chunks); decode is the O(1)-per-token state update.
+Attention-free — supports long_500k natively with a constant-size state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding
+from .config import ModelConfig, SSMConfig
+from .layers import dense_init, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_ssd(key, cfg: ModelConfig, dtype):
+    s, d_inner, H = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1]
+    dt = np.exp(np.random.RandomState(0).uniform(
+        np.log(1e-3), np.log(1e-1), size=H)).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              (cfg.d_model,
+                               2 * d_inner + 2 * s.n_groups * s.d_state + H),
+                              dtype),
+        "conv_w": dense_init(ks[1], s.conv_width,
+                             (s.conv_width, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.asarray(
+            np.log(np.random.RandomState(1).uniform(1, 16, size=H)), dtype),
+        "dt_bias": jnp.asarray(dt_bias, dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, (d_inner, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, x):
+    s, d_inner, H = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner + d_inner + 2 * gn]
+    dt = zxbcdt[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv1d; xbc (B,S,C), w (W,C).  state (B,W-1,C) for
+    decode.  Returns (out, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (W - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)                  # (B, S+W-1, C)
+    out = sum(full[:, k: k + xbc.shape[1]] * w[k] for k in range(W)) + b
+    return jax.nn.silu(out), full[:, -(W - 1):]
+
+
+def _segsum(a):
+    """a (..., Q) -> (..., Q, Q) lower-tri cumulative sums a_i+..+a_{j+1}."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, B_, C_, chunk: int):
+    """SSD scan. x (B,S,H,P), a (B,S,H) = dt*A (<0), B_/C_ (B,S,H,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = chunk
+    nc = S // Q
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    r = lambda t: t.reshape(Bb, nc, Q, *t.shape[2:])
+    x, a, B_, C_ = r(x), r(a), r(B_), r(C_)
+    a = a.astype(jnp.float32)
+
+    a_cum = jnp.cumsum(a, axis=2)                               # (B,nc,Q,H)
+    # 1) diagonal (within-chunk) term — quadratic in Q
+    L = jnp.exp(_segsum(jnp.moveaxis(a, -1, -2)))               # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        C_, B_, L.astype(C_.dtype), x)
+    # 2) per-chunk input states
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)        # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn",
+                        B_, decay_states.astype(B_.dtype), x)   # (B,nc,H,P,N)
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                   # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp                                           # (B,H,P,N),(B,H)
+        h = h * dec[..., None, None].astype(h.dtype) + st
+        return h, h
+
+    h0 = jnp.zeros((Bb, H, P, N), x.dtype)
+    h_last, h_all = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.concatenate([h0[None], h_all[:-1]], axis=0)    # states entering
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                         # (B,nc,H,P,N)
+    # 4) off-diagonal (cross-chunk) output
+    out_decay = jnp.exp(a_cum)                                  # (B,nc,Q,H)
+    y_off = jnp.einsum("bclhn,bclh,bchpn->bclhp",
+                       C_, out_decay.astype(C_.dtype), h_prev)
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y, h_last
+
+
+def apply_ssd(p, cfg: ModelConfig, x: jax.Array, positions=None) -> jax.Array:
+    s, d_inner, H = _dims(cfg)
+    B, S, _ = x.shape
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(B, S, H, s.head_dim)
+    B_ = xbc[..., d_inner: d_inner + gn].reshape(B, S, s.n_groups, s.d_state)
+    C_ = xbc[..., d_inner + gn:].reshape(B, S, s.n_groups, s.d_state)
+    heads_per_group = H // s.n_groups
+    B_ = jnp.repeat(B_, heads_per_group, axis=2)
+    C_ = jnp.repeat(C_, heads_per_group, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs = sharding.hint(xs, "batch", None, "heads", None)
+    y, _ = ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                       dt * A, B_, C_, s.chunk)
+    y = y + p["D"].astype(y.dtype)[:, None] * xs
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return sharding.hint(y @ p["out_proj"], "batch", None, None)
+
+
+# ------------------------------------------------------------------- decode
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s, d_inner, H = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def decode_ssd(p, cfg: ModelConfig, x: jax.Array, pos, cache: dict
+               ) -> tuple[jax.Array, dict]:
+    """x (B,1,D) — O(1) state update."""
+    s, d_inner, H = _dims(cfg)
+    B = x.shape[0]
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    xs = xbc[..., :d_inner].reshape(B, H, s.head_dim)
+    B_ = xbc[..., d_inner: d_inner + gn].reshape(B, s.n_groups, s.d_state)
+    C_ = xbc[..., d_inner + gn:].reshape(B, s.n_groups, s.d_state)
+    hpg = H // s.n_groups
+    B_ = jnp.repeat(B_, hpg, axis=1)                            # (B,H,N)
+    C_ = jnp.repeat(C_, hpg, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)[..., None, None].astype(cache["h"].dtype)
+    update = jnp.einsum("bhp,bhn->bhpn", xs * dt[..., None].astype(xs.dtype), B_)
+    h = cache["h"] * decay + update
+    y = jnp.einsum("bhpn,bhn->bhp", h, C_)
+    y = y + p["D"].astype(y.dtype)[:, None] * xs
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = sharding.hint(y @ p["out_proj"], "batch", None, None)
+    return out, {"h": h, "conv": conv_state}

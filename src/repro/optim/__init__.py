@@ -1,0 +1,7 @@
+"""Optimizers and schedules."""
+from .optimizers import (OptState, adamw, apply_updates, clip_by_global_norm,
+                         sgd)
+from .schedules import constant, cosine, goyal_warmup_step_decay
+
+__all__ = ["OptState", "adamw", "apply_updates", "clip_by_global_norm", "sgd",
+           "constant", "cosine", "goyal_warmup_step_decay"]

@@ -1,0 +1,118 @@
+"""Optimizers as (init, update) pairs on pytrees (optax-style, no optax dep).
+
+The paper trains with SGD + heavy-ball momentum 0.9 + weight decay 5e-4
+(decoupled from the learnable norm scales, following Goyal et al.) — `sgd`
+reproduces that.  `adamw` is provided for the LM substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree          # momentum / first moment
+    nu: PyTree | None   # second moment (adam only)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree, jax.Array],
+                     tuple[PyTree, OptState]]
+
+
+def _tree_zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def _is_norm_scale(path: tuple) -> bool:
+    """Heuristic: 1-D leaves named *norm*/scale/bias are exempt from weight
+    decay (paper Sec 4.1, following [16])."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    joined = "/".join(str(n) for n in names).lower()
+    return any(t in joined for t in ("norm", "gn", "bias", "b_a", "b_x",
+                                     "lam", "dt_bias", "a_log", "slot_pos"))
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 5e-4,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _tree_zeros(params), None)
+
+    def update(grads, state, params, lr):
+        paths = jax.tree_util.tree_flatten_with_path(params)[0]
+        wd_mask = [0.0 if _is_norm_scale(p) else 1.0 for p, _ in paths]
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        new_mu, new_p = [], []
+        for g, p, mu, m in zip(flat_g, flat_p, flat_mu, wd_mask):
+            # all update math in the param dtype: f32 upcasts of the large
+            # stacked params materialize 2x-param-size f32 buffers at the
+            # optimizer step (the lr scalar is cast, not the tensors)
+            dt = p.dtype
+            g = g.astype(dt) + (weight_decay * m) * p
+            mu = momentum * mu.astype(dt) + g
+            d = (g + momentum * mu) if nesterov else mu
+            new_mu.append(mu)
+            new_p.append(p - lr.astype(dt) * d)
+        return (treedef.unflatten(new_p),
+                OptState(state.step + 1, treedef.unflatten(new_mu), None))
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        # fp32 moments regardless of param dtype (mixed-precision master stats)
+        zeros32 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros32,
+                        jax.tree.map(jnp.copy, zeros32))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        paths = jax.tree_util.tree_flatten_with_path(params)[0]
+        wd_mask = [0.0 if _is_norm_scale(p) else 1.0 for p, _ in paths]
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        new_mu, new_nu, new_p = [], [], []
+        for g, p, mu, nu, m in zip(flat_g, flat_p, flat_mu, flat_nu, wd_mask):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * g32 * g32
+            upd = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            upd = upd + weight_decay * m * p.astype(jnp.float32)
+            new_mu.append(mu)
+            new_nu.append(nu)
+            new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        return (treedef.unflatten(new_p),
+                OptState(step, treedef.unflatten(new_mu),
+                         treedef.unflatten(new_nu)))
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    # f32 accumulation without materializing f32 copies of the (large) grads
+    norm = jnp.sqrt(sum(jnp.sum(g * g, dtype=jnp.float32)
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,50 @@
+"""Learning-rate schedules.
+
+`goyal_warmup_step_decay` is the paper's schedule (Sec 4.1): linear warmup
+scaling the base LR by the worker count (large-batch rule of Goyal et al.
+[16]) followed by x0.1 step decays at fixed epoch milestones.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def goyal_warmup_step_decay(base_lr: float, n_workers: int,
+                            steps_per_epoch: int,
+                            milestones: Sequence[int] = (30, 60, 80),
+                            warmup_epochs: int = 5,
+                            total_epochs: int = 90) -> Schedule:
+    """LR = base * n_workers after warmup; /10 at each milestone epoch."""
+    peak = base_lr * n_workers
+    warm = warmup_epochs * steps_per_epoch
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm_lr = base_lr + (peak - base_lr) * jnp.minimum(step / warm, 1.0)
+        decay = jnp.ones(())
+        for m in milestones:
+            decay = decay * jnp.where(step >= m * steps_per_epoch, 0.1, 1.0)
+        return warm_lr * decay
+
+    return sched
+
+
+def cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return sched

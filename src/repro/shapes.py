@@ -1,0 +1,97 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+The four assigned shapes:
+  train_4k     seq=4096    global_batch=256   (training       -> train_step)
+  prefill_32k  seq=32768   global_batch=32    (prefill        -> prefill_step)
+  decode_32k   seq=32768   global_batch=128   (decode         -> serve_step)
+  long_500k    seq=524288  global_batch=1     (long decode    -> serve_step,
+                                               sub-quadratic carve-out)
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable ShapeDtypeStructs, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_for(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-driven config adaptation: long_500k forces the sub-quadratic
+    sliding-window variant on attention blocks (SSM/RG-LRU are already
+    sub-quadratic and unaffected)."""
+    if shape.name == "long_500k":
+        return cfg.windowed()
+    return cfg
+
+
+def _tok_dtype():
+    return jnp.int32
+
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((B, S), _tok_dtype())
+    else:  # stubbed frontend: precomputed frame/patch embeddings
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype))
+    if cfg.num_codebooks > 1:
+        labels = jax.ShapeDtypeStruct((B, S, cfg.num_codebooks), _tok_dtype())
+    else:
+        labels = jax.ShapeDtypeStruct((B, S), _tok_dtype())
+    return {"inputs": inputs, "labels": labels}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """One new token against a seq_len-deep cache."""
+    B = shape.global_batch
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((B, 1), _tok_dtype())
+    else:
+        inputs = jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                      jnp.dtype(cfg.compute_dtype))
+    return {"inputs": inputs,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, dtype=None) -> list:
+    """ShapeDtypeStructs of the decode cache (built via eval_shape — no
+    allocation)."""
+    from .models.transformer import Model
+    model = Model(cfg)
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    shape = shape_for(shape_name)
+    cfg = adapt_config(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        return train_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

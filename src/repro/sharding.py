@@ -1,0 +1,132 @@
+"""Logical-axis sharding hints.
+
+Model code annotates intermediates with *logical* axis names; the launcher
+installs a mapping from logical names to mesh axes.  With no mapping installed
+(CPU tests, single device) every hint is a no-op, so model code stays pure.
+
+Logical axes:
+  batch   — data-parallel batch dim          -> ("pod","data") or ("data",)
+  seq     — sequence (kept local by default) -> None
+  embed   — d_model                           -> None (activations) / fsdp for params
+  heads   — attention heads / kv heads        -> "model"
+  ffn     — mlp hidden                        -> "model"
+  vocab   — vocabulary                        -> "model"
+  expert  — MoE expert axis                   -> "model"
+  fsdp    — parameter FSDP shard axis         -> "data"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict[str, Any]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def forward_only():
+    """Mark the enclosed trace as having no backward pass (prefill/serve):
+    attention score tensors may then take the q-seq sharding fallback, which
+    under autodiff fights the partitioner's partial head sharding in the
+    transposed dots (EXPERIMENTS.md §Perf B)."""
+    old = getattr(_state, "forward_only", False)
+    _state.forward_only = True
+    try:
+        yield
+    finally:
+        _state.forward_only = old
+
+
+def is_forward_only() -> bool:
+    return getattr(_state, "forward_only", False)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, Any]):
+    """Install a mesh + logical->mesh-axis rules for sharding hints."""
+    old_rules, old_mesh = _rules(), _mesh()
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.rules, _state.mesh = old_rules, old_mesh
+
+
+def logical_to_spec(axes: tuple[Optional[str], ...],
+                    rules: Optional[dict[str, Any]] = None) -> P:
+    rules = rules if rules is not None else (_rules() or {})
+    return P(*[rules.get(a) if a else None for a in axes])
+
+
+def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a mesh.
+
+    Axis assignments whose mesh size does not divide the dim are dropped
+    (e.g. kv_heads=8 under model=16 stays unsharded rather than erroring)."""
+    mesh, rules = _mesh(), _rules()
+    if mesh is None or rules is None:
+        return x
+    parts = []
+    for dim, logical in zip(x.shape, tuple(axes) + (None,) * (x.ndim - len(axes))):
+        ax = rules.get(logical) if logical else None
+        if ax is None:
+            parts.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        parts.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def hint_any(x: jax.Array, *specs: tuple) -> jax.Array:
+    """Apply the first spec (tuple of logical names) whose every non-None
+    axis divides the corresponding dim.  Used where the preferred sharding
+    (e.g. attention heads) may not divide for some architectures and an
+    alternative axis (e.g. query sequence) should be sharded instead."""
+    mesh, rules = _mesh(), _rules()
+    if mesh is None or rules is None:
+        return x
+    for spec in specs:
+        ok = True
+        for dim, logical in zip(x.shape, spec):
+            ax = rules.get(logical) if logical else None
+            if ax is None:
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                ok = False
+                break
+        if ok:
+            return hint(x, *spec)
+    return x
+
+
+# Default rules for the production meshes (launch/mesh.py)
+SINGLE_POD_RULES = {
+    "batch": "data", "heads": "model", "ffn": "model", "vocab": "model",
+    "expert": "model", "fsdp": "data", "tp": "model", "seq": "model", "act_embed": "model",
+}
+MULTI_POD_RULES = {
+    "batch": ("pod", "data"), "heads": "model", "ffn": "model",
+    "vocab": "model", "expert": "model", "fsdp": "data", "tp": "model", "seq": "model", "act_embed": "model",
+}
+GOSSIP_RULES = {  # worker axis never appears in model shardings
+    "batch": "data", "heads": "model", "ffn": "model", "vocab": "model",
+    "expert": "model", "fsdp": "data", "tp": "model", "seq": "model", "act_embed": "model",
+}

@@ -1,0 +1,106 @@
+"""A2CiD2 dynamics: mixing-ODE flow properties and event updates (Sec 3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (acid_params, apply_mixing, baseline_params,
+                        consensus_distance, matched_p2p_update, mixing_coeff,
+                        p2p_event, params_from_graph, ring_graph)
+
+
+def test_prop36_parameters():
+    chi1, chi2 = 13.0, 1.0
+    p = acid_params(chi1, chi2)
+    assert p.eta == pytest.approx(1.0 / (2 * np.sqrt(chi1 * chi2)))
+    assert p.alpha == 0.5
+    assert p.alpha_tilde == pytest.approx(0.5 * np.sqrt(chi1 / chi2))
+    assert p.chi == pytest.approx(np.sqrt(chi1 * chi2))
+    b = baseline_params(chi1)
+    assert b.eta == 0.0 and b.alpha == b.alpha_tilde == 0.5
+    assert b.chi == chi1
+
+
+@settings(max_examples=30, deadline=None)
+@given(eta=st.floats(0.01, 2.0), t1=st.floats(0.0, 3.0), t2=st.floats(0.0, 3.0))
+def test_mixing_flow_semigroup(eta, t1, t2):
+    """exp(t1 A) exp(t2 A) == exp((t1+t2) A) — exact flow, not an Euler step."""
+    x = jnp.asarray([1.0, -2.0, 0.5])
+    xt = jnp.asarray([0.3, 4.0, -1.0])
+    a1, b1 = apply_mixing(*apply_mixing(x, xt, eta, t1), eta, t2)
+    a2, b2 = apply_mixing(x, xt, eta, t1 + t2)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(eta=st.floats(0.01, 5.0), t=st.floats(0.0, 10.0))
+def test_mixing_preserves_sum_and_contracts(eta, t):
+    x = jnp.asarray([1.0, -2.0, 0.5])
+    xt = jnp.asarray([0.3, 4.0, -1.0])
+    mx, mxt = apply_mixing(x, xt, eta, t)
+    np.testing.assert_allclose(mx + mxt, x + xt, rtol=1e-5)
+    # contraction of the difference: |mx - mxt| = e^{-2 eta t} |x - xt|
+    np.testing.assert_allclose(
+        np.asarray(mx - mxt),
+        np.exp(-2 * eta * t) * np.asarray(x - xt), rtol=1e-4, atol=1e-5)
+    c = float(mixing_coeff(eta, jnp.asarray(t)))
+    assert 0.0 <= c <= 0.5
+
+
+def test_mixing_infinite_time_averages():
+    x = jnp.asarray([2.0])
+    xt = jnp.asarray([0.0])
+    mx, mxt = apply_mixing(x, xt, 1.0, 50.0)
+    np.testing.assert_allclose(mx, 1.0, atol=1e-5)
+    np.testing.assert_allclose(mxt, 1.0, atol=1e-5)
+
+
+def test_p2p_event_preserves_global_mean():
+    """x_i -= a m, x_j += a m (and alpha_t for x~) keeps both means fixed."""
+    g = ring_graph(8)
+    p = params_from_graph(g, accelerated=True)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 5))
+    xt = jax.random.normal(jax.random.fold_in(key, 1), (8, 5))
+    partner = jnp.asarray(g.matching_to_partner(
+        g.sample_matching(np.random.default_rng(0))))
+    nx, nxt = matched_p2p_update(x, xt, partner, p)
+    np.testing.assert_allclose(jnp.mean(nx, 0), jnp.mean(x, 0), atol=1e-6)
+    np.testing.assert_allclose(jnp.mean(nxt, 0), jnp.mean(xt, 0), atol=1e-6)
+
+
+def test_p2p_event_with_alpha_half_averages_pair():
+    g = ring_graph(4)
+    p = baseline_params(g.chi1())
+    x = jnp.asarray([[0.0], [2.0], [10.0], [20.0]])
+    partner = jnp.asarray([1, 0, 3, 2])
+    nx, _ = matched_p2p_update(x, x, partner, p)
+    np.testing.assert_allclose(nx, [[1.0], [1.0], [15.0], [15.0]])
+
+
+def test_p2p_event_reduces_consensus_distance():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (8, 16))
+    g = ring_graph(8)
+    p = baseline_params(g.chi1())
+    partner = jnp.asarray(g.matching_to_partner(
+        g.sample_matching(np.random.default_rng(1))))
+    before = float(consensus_distance(x))
+    nx, _ = matched_p2p_update(x, x, partner, p)
+    assert float(consensus_distance(nx)) < before
+
+
+def test_p2p_event_two_sided_symmetry():
+    """p2p_event applied from both ends agrees with matched update."""
+    p = acid_params(4.0, 1.0)
+    xi, xj = jnp.asarray([1.0, 2.0]), jnp.asarray([3.0, -1.0])
+    ti, tj = jnp.asarray([0.5, 0.5]), jnp.asarray([-0.5, 1.5])
+    ni, nti = p2p_event(xi, ti, xj, p)
+    nj, ntj = p2p_event(xj, tj, xi, p)
+    x = jnp.stack([xi, xj])
+    t = jnp.stack([ti, tj])
+    nx, nt = matched_p2p_update(x, t, jnp.asarray([1, 0]), p)
+    np.testing.assert_allclose(nx, jnp.stack([ni, nj]), rtol=1e-6)
+    np.testing.assert_allclose(nt, jnp.stack([nti, ntj]), rtol=1e-6)

@@ -1,0 +1,29 @@
+"""Continuous-batching serving scheduler."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.batching import ContinuousBatcher, Request
+from repro.models import Model
+
+
+def test_continuous_batcher_drains_mixed_requests():
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(model, params, max_batch=4, max_len=64)
+    key = jax.random.PRNGKey(1)
+    reqs = []
+    for uid, (plen, gen) in enumerate([(4, 6), (8, 3), (2, 10), (5, 5),
+                                       (3, 4), (6, 2)]):  # > max_batch
+        prompt = jax.random.randint(jax.random.fold_in(key, uid), (plen,),
+                                    0, cfg.vocab_size, jnp.int32)
+        r = Request(uid, prompt, gen)
+        reqs.append(r)
+        b.submit(r)
+    done = b.run_until_drained()
+    assert len(done) == len(reqs)
+    for r in reqs:
+        assert r.done
+        assert len(r.out) == r.max_new
+        assert all(0 <= t < cfg.vocab_size for t in r.out)

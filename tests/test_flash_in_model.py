@@ -1,0 +1,26 @@
+"""The Pallas flash-attention kernel as a drop-in model attention impl."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+
+@pytest.mark.parametrize("arch,window", [("qwen3-14b", None),
+                                         ("recurrentgemma-9b", 32)])
+def test_pallas_attention_matches_xla_in_model(arch, window):
+    cfg = get_config(arch, reduced=True)
+    if window:
+        cfg = cfg.windowed(window)
+    model_xla = Model(cfg)
+    model_pl = Model(cfg.with_updates(attention_impl="pallas"))
+    params = model_xla.init(jax.random.PRNGKey(0))
+    B, S = 2, 128
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size, jnp.int32)
+    lx, _, _ = model_xla.forward(params, toks)
+    lp, _, _ = model_pl.forward(params, toks)
+    scale = float(jnp.max(jnp.abs(lx))) + 1e-6
+    assert float(jnp.max(jnp.abs(lx - lp))) / scale < 2e-4

@@ -1,0 +1,83 @@
+"""Graph/Laplacian invariants + the paper's App E.1 chi values."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_graph, complete_graph, exponential_graph, ring_graph
+
+
+GRAPHS = ["complete", "ring", "exponential", "star"]
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_laplacian_properties(name, n):
+    g = build_graph(name, n)
+    L = g.laplacian()
+    assert np.allclose(L, L.T)
+    assert np.allclose(L @ np.ones(n), 0.0)         # rows sum to zero
+    lam = np.linalg.eigvalsh(L)
+    assert lam[0] == pytest.approx(0.0, abs=1e-9)
+    assert lam[1] > 0                                # connected
+    assert g.is_connected()
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+@pytest.mark.parametrize("n", [8, 16])
+def test_chi2_le_chi1(name, n):
+    g = build_graph(name, n)
+    assert g.chi2() <= g.chi1() + 1e-9
+
+
+def test_paper_appendix_e1_chi_values():
+    """App E.1: (chi1, chi2) at n=16, 1 comm/grad ~ (1,1), (2,1), (13,1)."""
+    assert complete_graph(16).chi1() == pytest.approx(1.0, abs=0.2)
+    assert complete_graph(16).chi2() == pytest.approx(1.0, abs=0.2)
+    assert exponential_graph(16).chi1() == pytest.approx(2.0, abs=0.4)
+    assert exponential_graph(16).chi2() == pytest.approx(1.0, abs=0.3)
+    assert ring_graph(16).chi1() == pytest.approx(13.0, abs=1.0)
+    assert ring_graph(16).chi2() == pytest.approx(1.0, abs=0.3)
+
+
+def test_ring_chi1_grows_quadratically():
+    """chi1(ring) = Theta(n^2) — the regime where A2CiD2 wins sqrt(n)."""
+    c8, c16, c32 = (ring_graph(n).chi1() for n in (8, 16, 32))
+    assert 3.0 < c16 / c8 < 5.0
+    assert 3.0 < c32 / c16 < 5.0
+
+
+def test_total_rate_is_trace_over_two():
+    for name in GRAPHS:
+        g = build_graph(name, 16, rate_per_worker=2.0)
+        assert g.total_rate() == pytest.approx(
+            np.trace(g.laplacian()) / 2.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 24), seed=st.integers(0, 1000))
+def test_matchings_are_valid(n, seed):
+    g = ring_graph(n)
+    rng = np.random.default_rng(seed)
+    m = g.sample_matching(rng)
+    nodes = [x for e in m for x in e]
+    assert len(nodes) == len(set(nodes))            # node-disjoint
+    edge_set = {tuple(sorted(e)) for e in g.edges}
+    for e in m:
+        assert tuple(sorted(e)) in edge_set         # real edges only
+    p = g.matching_to_partner(m)
+    assert np.all(p[p] == np.arange(n))             # involution
+
+
+def test_matching_bank_covers_all_edges():
+    from repro.core import matching_bank
+    for name in GRAPHS:
+        g = build_graph(name, 16)
+        bank = matching_bank(g)
+        covered = set()
+        for k in range(bank.shape[0]):
+            for i, j in enumerate(bank[k]):
+                if int(j) != i:
+                    covered.add((min(i, int(j)), max(i, int(j))))
+            # each bank row is an involution (valid matching)
+            assert np.all(bank[k][bank[k]] == np.arange(16))
+        assert covered == {tuple(sorted(e)) for e in g.edges}

@@ -1,0 +1,78 @@
+"""HLO cost model: trip-count-aware FLOPs/collectives vs unrolled references
+(XLA's own cost_analysis counts while bodies once — the reason this exists)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo_cost import cost_from_hlo
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+M = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+
+def test_scan_trip_count_counted():
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        return jax.lax.scan(body, x, None, length=8)[0]
+
+    hc = cost_from_hlo(_compile(f, M).as_text())
+    assert hc.flops == pytest.approx(8 * 2 * 128 ** 3)
+
+
+def test_unrolled_matches_scan():
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        return jax.lax.scan(body, x, None, length=6)[0]
+
+    def g(x):
+        for _ in range(6):
+            x = x @ x
+        return x
+
+    a = cost_from_hlo(_compile(f, M).as_text()).flops
+    b = cost_from_hlo(_compile(g, M).as_text()).flops
+    assert a == pytest.approx(b)
+
+
+def test_nested_scans_multiply():
+    def h(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ x, None
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    hc = cost_from_hlo(_compile(h, M).as_text())
+    assert hc.flops == pytest.approx(12 * 2 * 128 ** 3)
+
+
+def test_write_bytes_scale_with_trips():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ x), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    def g(x):
+        def body(c, _):
+            return jnp.tanh(c @ x), None
+        return jax.lax.scan(body, x, None, length=5)[0]
+
+    a = cost_from_hlo(_compile(f, M).as_text()).write_bytes
+    b = cost_from_hlo(_compile(g, M).as_text()).write_bytes
+    assert a > 1.5 * b
+
+
+def test_einsum_flops():
+    def f(a, b):
+        return jnp.einsum("ij,jk->ik", a, b)
+
+    A = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    B = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    hc = cost_from_hlo(_compile(f, A, B).as_text())
+    assert hc.flops == pytest.approx(2 * 64 * 256 * 32)

@@ -1,0 +1,65 @@
+"""Sharding machinery: logical hints, divisibility fallbacks, param specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings as S
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+RULES = {"batch": "data", "heads": "model", "ffn": "model",
+         "vocab": "model", "expert": "model", "fsdp": "data", "tp": "model"}
+
+
+def test_param_spec_2d_rules():
+    mesh = FakeMesh()
+    assert S.param_spec("groups/0/b0/mixer/wq", FakeLeaf((28, 1024, 2048)),
+                        mesh, RULES) == P(None, "data", "model")
+    assert S.param_spec("embed/tok", FakeLeaf((152064, 1024)),
+                        mesh, RULES) == P("model", "data")
+    assert S.param_spec("groups/0/b0/mlp/w_down", FakeLeaf((28, 3072, 1024)),
+                        mesh, RULES) == P(None, "model", "data")
+
+
+def test_param_spec_moe_3d():
+    mesh = FakeMesh()
+    spec = S.param_spec("groups/1/b0/mlp/moe_up",
+                        FakeLeaf((58, 256, 7168, 2048)), mesh, RULES)
+    assert spec == P(None, "model", "data", None)
+
+
+def test_param_spec_divisibility_fallback():
+    mesh = FakeMesh()
+    # out dim 100 not divisible by 16 -> replicated on that dim
+    spec = S.param_spec("head/w", FakeLeaf((1024, 100)), mesh, RULES)
+    assert spec == P("data", None)
+
+
+def test_param_spec_1d_replicated():
+    mesh = FakeMesh()
+    assert S.param_spec("groups/0/b0/norm1", FakeLeaf((28, 1024)),
+                        mesh, RULES) == P()
+
+
+def test_cache_spec_kv_and_state():
+    mesh = FakeMesh()
+    assert S.cache_spec("groups/0/b0/k", FakeLeaf((28, 128, 32768, 8, 128)),
+                        mesh, RULES) == P(None, "data", "model", None, None)
+    assert S.cache_spec("groups/0/b0/slot_pos", FakeLeaf((32768,)),
+                        mesh, RULES) == P()
+    # conv cache: channel dim over model
+    assert S.cache_spec("groups/0/b0/conv", FakeLeaf((48, 128, 3, 3328)),
+                        mesh, RULES) == P(None, "data", None, "model")
+    # batch=1 (long_500k): batch falls back to replicated
+    assert S.cache_spec("groups/0/b0/k", FakeLeaf((28, 1, 4096, 8, 128)),
+                        mesh, RULES) == P(None, None, "model", None, None)
