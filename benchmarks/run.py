@@ -27,6 +27,10 @@ def _timeit(fn, repeats=3):
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
+def _parse_only(arg):
+    return [s.strip() for s in arg.split(",") if s.strip()]
+
+
 def _quad_grad_fn(b, noise=0.05):
     def grad_fn(x, key, wid):
         g = (x - b[wid]) + noise * jax.random.normal(key, x.shape)
@@ -124,7 +128,15 @@ def bench_table5_worker_scaling() -> list[str]:
 # --------------------------------------------------------- systems benchmarks
 
 def bench_kernels() -> list[str]:
-    """Microbenchmarks of the Pallas kernels' oracle paths (CPU timing)."""
+    """Microbenchmarks of the Pallas kernels' oracle paths (CPU timing).
+
+    The a2cid2_mixing rows report the FULL HBM traffic of one gossip event
+    at f32: unfused (mix pass + p2p pass) moves 6 reads + 4 writes of
+    parameter-sized tensors, the fused kernel 3 reads + 2 writes.  A timed
+    interpret-mode Pallas row sits next to the jnp oracle as a smoke check
+    (interpret timings are NOT hardware-representative).
+    """
+    from repro.kernels.a2cid2_mixing.kernel import mixing_p2p
     from repro.kernels.a2cid2_mixing.ref import mixing_p2p_ref
     from repro.kernels.flash_attention.ref import attention_ref
     from repro.kernels.rmsnorm.ref import rmsnorm_ref
@@ -134,11 +146,21 @@ def bench_kernels() -> list[str]:
     x = jax.random.normal(key, (n,))
     xt = jax.random.normal(jax.random.fold_in(key, 1), (n,))
     xp = jax.random.normal(jax.random.fold_in(key, 2), (n,))
-    jf = jax.jit(lambda: mixing_p2p_ref(x, xt, xp, 0.5, eta=0.2, alpha=0.5,
-                                        alpha_t=1.3)[0])
+    gb = n * 4 / 1e9
+    kw = dict(eta=0.2, alpha=0.5, alpha_t=1.3)
+    jf = jax.jit(lambda: mixing_p2p_ref(x, xt, xp, 0.5, **kw)[0])
     f = lambda: jf().block_until_ready()
-    rows = [f"kernel_a2cid2_mixing_1M,{_timeit(f):.0f},"
-            f"{3 * n * 4 / 1e9:.3f}GB_read"]
+    rows = [
+        f"kernel_a2cid2_mixing_1M_unfused_traffic,0.0,"
+        f"{6 * gb:.3f}GB_read+{4 * gb:.3f}GB_write",
+        f"kernel_a2cid2_mixing_1M,{_timeit(f):.0f},"
+        f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused",
+    ]
+    jp = jax.jit(lambda: mixing_p2p(x, xt, xp, jnp.float32(0.5),
+                                    interpret=True, **kw)[0])
+    p = lambda: jp().block_until_ready()
+    rows.append(f"kernel_a2cid2_mixing_1M_pallas_interpret,{_timeit(p, 1):.0f},"
+                f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused")
 
     q = jax.random.normal(key, (4, 512, 64))
     jg = jax.jit(lambda: attention_ref(q, q, q))
@@ -153,23 +175,99 @@ def bench_kernels() -> list[str]:
     return rows
 
 
-def bench_simulator_throughput() -> list[str]:
-    """Event-simulator throughput (rounds/s) — the repro's own hot loop."""
-    from repro.core import (Simulator, make_schedule, params_from_graph,
-                            ring_graph)
-    n, d = 16, 256
+_SIM_BENCH = {"n": 16, "d": 256, "rounds": 100, "comms_per_grad": 1.0}
+
+
+def _sim_setup(seed=0):
+    from repro.core import (Simulator, coalesce_schedule, make_schedule,
+                            params_from_graph, ring_graph)
+    n, d, rounds = _SIM_BENCH["n"], _SIM_BENCH["d"], _SIM_BENCH["rounds"]
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     g = ring_graph(n)
     sim = Simulator(_quad_grad_fn(b), params_from_graph(g, True), gamma=0.05)
     st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
-    sched = make_schedule(g, rounds=100, comms_per_grad=1.0, seed=0)
-    arrays = (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
-              jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times))
-    sim.run(st, arrays)  # compile
+    sched = make_schedule(g, rounds=rounds,
+                          comms_per_grad=_SIM_BENCH["comms_per_grad"],
+                          seed=seed)
+    cs = coalesce_schedule(sched)
+    ref_arrays = (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
+                  jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times))
+    eng_arrays = sim.coalesced_arrays(st, sched, cs=cs)
+    return sim, st, sched, cs, ref_arrays, eng_arrays
+
+
+def bench_simulator_throughput() -> list[str]:
+    """Event-simulator throughput (rounds/s) — the repro's own hot loop,
+    on the flat-buffer coalesced/fused engine path (the default)."""
+    sim, st, _, _, _, eng_arrays = _sim_setup()
+    run = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
+    run()  # compile
     t0 = time.perf_counter()
-    sim.run(st, arrays)[1].loss.block_until_ready()
+    run()
     dt = time.perf_counter() - t0
     return [f"simulator_100rounds_n16,{dt*1e6:.0f},{100/dt:.0f}_rounds_per_s"]
+
+
+def bench_gossip_engine() -> list[str]:
+    """Fused flat-buffer event engine vs the per-event reference path on the
+    same schedule (100 rounds, n=16, d=256), plus the event-coalescing and
+    HBM-traffic accounting.  Emits BENCH_gossip.json next to the repo root.
+
+    Traffic accounting (state-tensor units, (n, D) each): the per-event
+    reference sweeps every schedule SLOT (masked or not) with an unfused
+    mix pass (2R+2W) + p2p pass (4R+2W incl. the partner gather); the engine
+    sweeps only coalesced BATCHES, each one fused pass of 3 reads + 2 writes
+    (x self + x partner rows + x~ self; the trailing mix rides along free).
+    """
+    import json
+    import os
+
+    sim, st, sched, cs, ref_arrays, eng_arrays = _sim_setup()
+    ref = lambda: sim.run(st, ref_arrays)[1].loss.block_until_ready()
+    eng = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
+    ref(); eng()  # compile both
+    us_ref = _timeit(ref, repeats=7)
+    us_eng = _timeit(eng, repeats=7)
+    speedup = us_ref / us_eng
+
+    raw_slots = int(sched.partners.shape[0] * sched.partners.shape[1])
+    batches = cs.num_batches()
+    active_events = int(sched.event_mask.sum())
+    # per-sweep state-tensor traffic: reference (mix + p2p unfused) vs fused
+    ref_rw = (6, 4)
+    fused_rw = (3, 2)
+    report = {
+        "config": dict(_SIM_BENCH),
+        "simulator_100rounds_n16": {
+            "seed_us": round(us_ref, 1),       # per-event path = seed code
+            "engine_us": round(us_eng, 1),
+            "speedup": round(speedup, 3),
+        },
+        "event_sweeps": {
+            "raw_slots": raw_slots,
+            "active_events": active_events,
+            "coalesced_batches": batches,
+            "sweep_reduction": round(raw_slots / max(batches, 1), 3),
+        },
+        "state_traffic_per_sweep": {
+            "reference_reads_writes": ref_rw,
+            "fused_reads_writes": fused_rw,
+        },
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_gossip.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    return [
+        f"gossip_ref_100rounds_n16,{us_ref:.0f},{1e8/us_ref:.0f}_rounds_per_s",
+        f"gossip_engine_100rounds_n16,{us_eng:.0f},"
+        f"{1e8/us_eng:.0f}_rounds_per_s",
+        f"gossip_engine_speedup,0.0,{speedup:.2f}x",
+        f"gossip_event_sweeps,0.0,raw={raw_slots};active={active_events};"
+        f"coalesced={batches}",
+        f"gossip_traffic_per_sweep,0.0,ref={ref_rw[0]}R+{ref_rw[1]}W;"
+        f"fused={fused_rw[0]}R+{fused_rw[1]}W",
+    ]
 
 
 def bench_roofline_summary() -> list[str]:
@@ -202,15 +300,20 @@ BENCHES = {
     "fig1": bench_fig1_virtual_doubling,
     "kernels": bench_kernels,
     "simulator": bench_simulator_throughput,
+    "gossip": bench_gossip_engine,
     "roofline": bench_roofline_summary,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated bench names, e.g. kernels,simulator")
     args = ap.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    names = _parse_only(args.only) if args.only else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name in names:
         for row in BENCHES[name]():

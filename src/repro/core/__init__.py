@@ -2,7 +2,11 @@
 from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
                      consensus_distance, gradient_event, matched_p2p_update,
                      mixing_coeff, p2p_event, params_from_graph, worker_mean)
-from .events import Schedule, empirical_laplacian, make_schedule
+from .engine import FlatGossipEngine, mix_flat
+from .events import (CoalescedSchedule, EventStream, Schedule,
+                     coalesce_schedule, coalesced_stream,
+                     empirical_laplacian, make_schedule)
+from .flatbuf import FlatLayout, LeafSpec
 from .gossip import GossipMixer, matching_bank
 from .graphs import (Graph, build_graph, complete_graph, exponential_graph,
                      ring_graph, star_graph, torus_graph)
@@ -12,7 +16,9 @@ __all__ = [
     "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",
     "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
-    "Schedule", "empirical_laplacian", "make_schedule",
+    "CoalescedSchedule", "EventStream", "Schedule", "coalesce_schedule",
+    "coalesced_stream", "empirical_laplacian", "make_schedule",
+    "FlatGossipEngine", "mix_flat", "FlatLayout", "LeafSpec",
     "GossipMixer", "matching_bank",
     "Graph", "build_graph", "complete_graph", "exponential_graph",
     "ring_graph", "star_graph", "torus_graph",

@@ -1,0 +1,102 @@
+"""Flat-buffer fused gossip-event engine — the one hot path all trainers
+share (see DESIGN.md).
+
+The engine owns three ingredients:
+
+  1. a :class:`~repro.core.flatbuf.FlatLayout` packing the replica pytree
+     into one contiguous buffer (stacked ``(W, D)`` or local ``(D,)``),
+  2. the fused p2p-then-mix kernels from ``repro.kernels.a2cid2_mixing``
+     (Pallas on TPU, jnp oracle on CPU),
+  3. the *group* pass structure: the exact per-event sequence
+
+         mix(d_0), S_0, mix(d_1), S_1, ..., S_{K-1}, mix(d_K)
+
+     (S_i a fused comm batch or a gradient tick) regrouped as
+     ``[mix(d_0)] [S_0, mix(d_1)] ... [S_{K-1}, mix(d_K)]`` — identical
+     composition (the mixing flow is a semigroup and zero-dt segments are
+     identities), but each bracketed group is ONE fused sweep reading 3
+     state-sized buffers and writing 2.  events.coalesced_stream flattens a
+     schedule into exactly these groups with every mixing segment
+     precomputed host-side; masked schedule slots vanish entirely.
+
+Traffic per coalesced batch: 3 reads + 2 writes of state, vs the per-event
+path's 6 reads + 4 writes per event (2 unfused sweeps) — and the per-event
+path also sweeps masked slots, which the coalesced stream drops entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.a2cid2_mixing.ops import gossip_event_stacked, p2p_mix_event
+from .a2cid2 import A2CiD2Params, apply_mixing
+from .flatbuf import FlatLayout
+
+PyTree = Any
+
+
+def mix_flat(bx: jax.Array, bxt: jax.Array, eta: float, dt: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    """Pure mixing pass on flat buffers; dt broadcasts ((W,) against (W, D)
+    after the trailing-axis insert, or scalar against (D,)).  A flat buffer
+    is a single-leaf pytree, so this is exactly ``a2cid2.apply_mixing``."""
+    return apply_mixing(bx, bxt, eta, dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatGossipEngine:
+    """Fused event engine bound to a layout, A2CiD2 params, and a backend.
+
+    backend: 'auto' (Pallas on TPU, oracle elsewhere), 'ref',
+    'pallas_interpret' (tests), or 'pallas'.
+    """
+
+    layout: FlatLayout
+    params: A2CiD2Params
+    backend: str = "auto"
+
+    @classmethod
+    def for_pytree(cls, tree: PyTree, params: A2CiD2Params, *,
+                   stacked: bool = True, backend: str = "auto"
+                   ) -> "FlatGossipEngine":
+        return cls(FlatLayout.from_pytree(tree, stacked=stacked),
+                   params, backend)
+
+    # ------------------------------------------------------------- plumbing
+    def pack(self, tree: PyTree) -> jax.Array:
+        return self.layout.pack(tree)
+
+    def unpack(self, buf: jax.Array) -> PyTree:
+        return self.layout.unpack(buf)
+
+    def pack_local(self, tree: PyTree) -> jax.Array:
+        return self.layout.pack_local(tree)
+
+    def unpack_local(self, vec: jax.Array) -> PyTree:
+        return self.layout.unpack_local(vec)
+
+    # -------------------------------------------------------------- passes
+    def mix(self, bx: jax.Array, bxt: jax.Array, dt) -> tuple[jax.Array,
+                                                              jax.Array]:
+        """Standalone mixing sweep (engine prologue; 2 reads + 2 writes)."""
+        return mix_flat(bx, bxt, self.params.eta, dt)
+
+    def batch(self, bx: jax.Array, bxt: jax.Array, partner: jax.Array,
+              dt_next: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """One fused group [p2p(partner), mix(dt_next)] on (W, D) buffers."""
+        p = self.params
+        return gossip_event_stacked(bx, bxt, partner, dt_next, eta=p.eta,
+                                    alpha=p.alpha, alpha_t=p.alpha_tilde,
+                                    backend=self.backend)
+
+    def batch_local(self, bx: jax.Array, bxt: jax.Array, xp: jax.Array,
+                    dt_next) -> tuple[jax.Array, jax.Array]:
+        """One fused group on per-worker (D,) vectors (SPMD path); ``xp`` is
+        the partner's current flat x (e.g. from a collective permute)."""
+        p = self.params
+        return p2p_mix_event(bx, bxt, xp, dt_next, eta=p.eta, alpha=p.alpha,
+                             alpha_t=p.alpha_tilde, backend=self.backend)
+

@@ -113,6 +113,171 @@ def make_schedule(
     return Schedule(partners, event_times, event_mask, grad_times)
 
 
+# ---------------------------------------------------------------------------
+# Event coalescing (flat-buffer event engine, see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoalescedSchedule:
+    """Schedule compiled to fused event *batches* (B = max batches/round).
+
+    A batch is a set of events whose matchings are worker-disjoint, so their
+    updates commute and apply in ONE sweep of the state with a combined
+    partner involution and per-worker event times.  Masked slots of the raw
+    schedule vanish entirely (they were full-buffer no-op sweeps in the
+    per-event path), and runs of matchings on disjoint pairs merge.
+
+    Shapes (R = rounds, B = max batches/round, n = workers):
+      partners     (R, B, n) int32 — combined involution; i for idle workers
+      wtimes       (R, B, n) f32   — per-worker event time (valid where the
+                                     worker is involved, i.e. partner != i)
+      batch_active (R, B) bool     — False = padding, skip the sweep
+      grad_times   (R, n) f32      — unchanged from the raw schedule
+    """
+
+    partners: np.ndarray
+    wtimes: np.ndarray
+    batch_active: np.ndarray
+    grad_times: np.ndarray
+
+    @property
+    def rounds(self) -> int:
+        return self.partners.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.partners.shape[2]
+
+    def num_batches(self) -> int:
+        """Fused sweeps the engine performs (vs kmax*rounds in the raw path)."""
+        return int(self.batch_active.sum())
+
+
+def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
+    """Compile a raw per-event schedule into coalesced batches.
+
+    Greedy in event order: event e merges into the current batch iff none of
+    its involved workers already appears in the batch — disjoint matchings
+    commute and exp(dt1 A) exp(dt2 A) = exp((dt1+dt2) A) lets each worker
+    carry its own accumulated mixing horizon, so the merge is EXACT (the
+    engine reproduces the per-event path bit-for-bit up to float reordering).
+    Masked slots are dropped outright.
+    """
+    R, K, n = schedule.partners.shape
+    idx = np.arange(n)
+    per_round: list[list[tuple[np.ndarray, np.ndarray]]] = []
+    for r in range(R):
+        batches: list[tuple[np.ndarray, np.ndarray]] = []  # (partner, wtime)
+        busy = np.zeros(n, dtype=bool)  # workers involved in current batch
+        for e in range(K):
+            if not schedule.event_mask[r, e]:
+                continue
+            p = schedule.partners[r, e]
+            involved = p != idx
+            if not involved.any():
+                continue
+            t = schedule.event_times[r, e]
+            if batches and not (busy & involved).any():
+                # disjoint from the open batch: merge
+                partner, wtime = batches[-1]
+                partner[involved] = p[involved]
+                wtime[involved] = t
+            else:
+                partner = idx.astype(np.int32).copy()
+                partner[involved] = p[involved]
+                wtime = np.zeros(n, dtype=np.float32)
+                wtime[involved] = t
+                batches.append((partner, wtime))
+                busy = np.zeros(n, dtype=bool)
+            busy |= involved
+        per_round.append(batches)
+
+    B = max(1, max(len(b) for b in per_round))
+    partners = np.tile(idx.astype(np.int32), (R, B, 1))
+    wtimes = np.zeros((R, B, n), dtype=np.float32)
+    batch_active = np.zeros((R, B), dtype=bool)
+    for r, batches in enumerate(per_round):
+        for b, (partner, wtime) in enumerate(batches):
+            partners[r, b] = partner
+            wtimes[r, b] = wtime
+            batch_active[r, b] = True
+    return CoalescedSchedule(partners, wtimes, batch_active,
+                             schedule.grad_times.astype(np.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class EventStream:
+    """A coalesced schedule flattened into ONE scan-ready step stream.
+
+    The engine replays ``S = num_batches + rounds`` steps — one per fused
+    comm batch plus one per gradient tick, nothing for masked slots — as a
+    single ``lax.scan``.  Each step applies its own update then the mixing
+    segment to the NEXT step ([P_i, mix(d_{i+1})] grouping, see DESIGN.md);
+    ``prologue`` is the per-worker mixing from the start clocks ``t0`` to
+    each worker's first event.  All segments are schedule data resolved
+    host-side: the jit'd loop carries no clock arithmetic.
+
+    Shapes (S = steps, n = workers, R = rounds):
+      prologue  (n,) f32
+      partners  (S, n) int32 — identity rows for gradient steps
+      dt_next   (S, n) f32
+      is_grad   (S,) bool
+      grad_pos  (R,) int32   — step index of round r's gradient tick (for
+                               compacting per-step metrics back to per-round)
+    """
+
+    prologue: np.ndarray
+    partners: np.ndarray
+    dt_next: np.ndarray
+    is_grad: np.ndarray
+    grad_pos: np.ndarray
+
+    @property
+    def steps(self) -> int:
+        return self.partners.shape[0]
+
+
+def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
+    """Flatten a coalesced schedule into an EventStream given start clocks."""
+    R, B, n = cs.partners.shape
+    idx = np.arange(n)
+    partners, dt_next, is_grad, grad_pos = [], [], [], []
+    prologue = None
+    tl = np.array(t0, np.float32).copy()
+
+    def emit(partner, delta, grad):
+        nonlocal prologue
+        if prologue is None:
+            prologue = delta
+        else:
+            dt_next[-1] = delta
+        partners.append(partner)
+        dt_next.append(np.zeros(n, np.float32))
+        is_grad.append(grad)
+
+    for r in range(R):
+        for b in range(B):
+            if not cs.batch_active[r, b]:
+                continue
+            inv = cs.partners[r, b] != idx
+            delta = np.zeros(n, np.float32)
+            delta[inv] = cs.wtimes[r, b, inv] - tl[inv]
+            tl[inv] = cs.wtimes[r, b, inv]
+            emit(cs.partners[r, b].astype(np.int32), delta, False)
+        delta = (cs.grad_times[r] - tl).astype(np.float32)
+        tl = cs.grad_times[r].astype(np.float32).copy()
+        emit(idx.astype(np.int32), delta, True)
+        grad_pos.append(len(partners) - 1)
+
+    return EventStream(
+        prologue=prologue,
+        partners=np.stack(partners),
+        dt_next=np.stack(dt_next),
+        is_grad=np.asarray(is_grad, bool),
+        grad_pos=np.asarray(grad_pos, np.int32),
+    )
+
+
 def empirical_laplacian(schedule: Schedule, rounds: int | None = None) -> np.ndarray:
     """Empirical expected Laplacian from realized matchings (paper App E.2)."""
     R = rounds or schedule.rounds

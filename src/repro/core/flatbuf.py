@@ -1,0 +1,151 @@
+"""Flat-buffer layout for worker-stacked pytree state (see DESIGN.md).
+
+The gossip-event loop is the repro's unit of cost: every event touches the
+whole replica.  Sweeping a pytree leaf-by-leaf pays one kernel dispatch (and
+one HBM round trip boundary) per leaf per event.  `FlatLayout` packs the
+replica into ONE contiguous buffer with a static layout spec so an event is a
+single fused sweep:
+
+  * stacked form  — leaves (W, *shape) -> one (W, D) buffer, worker-major;
+  * local form    — leaves (*shape)    -> one (D,) vector (the shard_map /
+    per-worker SPMD path).
+
+D is the sum of leaf sizes rounded up to a multiple of ``lane`` (128, the TPU
+lane width) so the buffer tiles cleanly into Pallas blocks; padding columns
+are zeros and stay zero under mixing/p2p/gradient updates (all updates are
+linear with 0 fixed point), so reductions over the buffer need no masking.
+
+Leaves are stored as ``buf_dtype``.  By default the dtype is inferred: a
+uniform-dtype pytree packs at its own precision (a bf16 model's gossip
+event moves bf16 bytes, not f32), mixed floating dtypes pack at the
+narrowest dtype that embeds every leaf losslessly (f32, else f64).
+Round-tripping is bit-exact for every floating dtype that embeds in
+``buf_dtype``; anything else is rejected loudly rather than silently
+truncated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+LANE = 128  # TPU lane width; last-dim tiles are multiples of this
+
+# floating dtypes whose values embed losslessly in each buffer dtype
+_EXACT_EMBED = {
+    jnp.dtype(jnp.float16): {jnp.dtype(jnp.float16)},
+    jnp.dtype(jnp.bfloat16): {jnp.dtype(jnp.bfloat16)},
+    jnp.dtype(jnp.float32): {jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+                             jnp.dtype(jnp.float16)},
+    jnp.dtype(jnp.float64): {jnp.dtype(jnp.float64), jnp.dtype(jnp.float32),
+                             jnp.dtype(jnp.bfloat16),
+                             jnp.dtype(jnp.float16)},
+}
+
+
+def _infer_buf_dtype(dtypes: set) -> Any:
+    """Narrowest buffer dtype that round-trips every leaf dtype exactly."""
+    if len(dtypes) == 1:
+        (d,) = dtypes
+        if d in _EXACT_EMBED:
+            return d
+        raise TypeError(f"leaf dtype {d} is not a supported buffer dtype")
+    for buf in (jnp.dtype(jnp.float32), jnp.dtype(jnp.float64)):
+        if dtypes <= _EXACT_EMBED[buf]:
+            return buf
+    raise TypeError(f"no buffer dtype embeds leaf dtypes {sorted(map(str, dtypes))} exactly")
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static placement of one pytree leaf inside the flat buffer."""
+
+    offset: int              # start column in the flat axis
+    size: int                # number of elements (= prod(shape))
+    shape: tuple[int, ...]   # per-worker shape (no leading worker axis)
+    dtype: Any               # original leaf dtype, restored on unpack
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static pack/unpack spec between a replica pytree and a flat buffer."""
+
+    treedef: Any
+    specs: tuple[LeafSpec, ...]
+    d: int                   # padded flat width (multiple of ``lane``)
+    d_real: int              # sum of leaf sizes (<= d)
+    buf_dtype: Any
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_pytree(cls, tree: PyTree, *, stacked: bool = False,
+                    buf_dtype=None, lane: int = LANE) -> "FlatLayout":
+        """Build a layout from a template pytree (shapes/dtypes only — works
+        on concrete arrays, ShapeDtypeStructs, and tracers alike).
+
+        stacked=True strips a leading worker axis from every leaf.
+        buf_dtype=None infers the narrowest exact buffer dtype (see module
+        docstring); passing one explicitly still validates exactness.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if buf_dtype is None:
+            buf_dtype = _infer_buf_dtype({jnp.dtype(a.dtype) for a in leaves})
+        buf_dtype = jnp.dtype(buf_dtype)
+        specs = []
+        off = 0
+        for leaf in leaves:
+            shape = tuple(leaf.shape[1:] if stacked else leaf.shape)
+            dtype = jnp.dtype(leaf.dtype)
+            if dtype not in _EXACT_EMBED.get(buf_dtype, ()):
+                raise TypeError(
+                    f"leaf dtype {dtype} does not round-trip exactly "
+                    f"through buffer dtype {buf_dtype}")
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            specs.append(LeafSpec(off, size, shape, dtype))
+            off += size
+        d = ((off + lane - 1) // lane) * lane if off else lane
+        return cls(treedef=treedef, specs=tuple(specs), d=d, d_real=off,
+                   buf_dtype=buf_dtype)
+
+    # ---------------------------------------------------------------- pack
+    def pack(self, tree: PyTree) -> jax.Array:
+        """Stacked pytree (leaves (W, *shape)) -> (W, D) buffer."""
+        leaves = self.treedef.flatten_up_to(tree)
+        w = leaves[0].shape[0]
+        cols = [leaf.reshape(w, spec.size).astype(self.buf_dtype)
+                for leaf, spec in zip(leaves, self.specs)]
+        if self.d > self.d_real:
+            cols.append(jnp.zeros((w, self.d - self.d_real), self.buf_dtype))
+        return jnp.concatenate(cols, axis=1)
+
+    def unpack(self, buf: jax.Array) -> PyTree:
+        """(W, D) buffer -> stacked pytree with original shapes/dtypes."""
+        w = buf.shape[0]
+        leaves = [
+            buf[:, s.offset:s.offset + s.size]
+            .astype(s.dtype).reshape((w,) + s.shape)
+            for s in self.specs
+        ]
+        return self.treedef.unflatten(leaves)
+
+    def pack_local(self, tree: PyTree) -> jax.Array:
+        """Replica pytree (leaves (*shape)) -> (D,) vector."""
+        leaves = self.treedef.flatten_up_to(tree)
+        cols = [leaf.reshape(spec.size).astype(self.buf_dtype)
+                for leaf, spec in zip(leaves, self.specs)]
+        if self.d > self.d_real:
+            cols.append(jnp.zeros((self.d - self.d_real,), self.buf_dtype))
+        return jnp.concatenate(cols, axis=0)
+
+    def unpack_local(self, vec: jax.Array) -> PyTree:
+        """(D,) vector -> replica pytree with original shapes/dtypes."""
+        leaves = [
+            vec[s.offset:s.offset + s.size].astype(s.dtype).reshape(s.shape)
+            for s in self.specs
+        ]
+        return self.treedef.unflatten(leaves)

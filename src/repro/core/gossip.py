@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .a2cid2 import A2CiD2Params, apply_mixing
+from .engine import FlatGossipEngine
 from .graphs import Graph
 
 PyTree = Any
@@ -74,39 +75,17 @@ class GossipMixer:
     here we target shard_map)."""
 
     def __init__(self, graph: Graph, params: A2CiD2Params,
-                 axis_name: str = "worker"):
+                 axis_name: str = "worker", backend: str = "auto"):
         self.graph = graph
         self.params = params
         self.axis_name = axis_name
+        self.backend = backend  # fused-kernel backend for the event loop
         self.bank = matching_bank(graph)
         self.bank_probs = bank_edge_rates(graph, self.bank)
 
     # ------------------------------------------------------------ primitives
     def _perm(self, k: int) -> list[tuple[int, int]]:
         return [(i, int(j)) for i, j in enumerate(self.bank[k])]
-
-    def p2p_round(self, x: PyTree, x_tilde: PyTree, matching_idx: jax.Array
-                  ) -> tuple[PyTree, PyTree]:
-        """One pairwise-averaging event, selected from the static bank."""
-
-        def make_branch(k: int):
-            perm = self._perm(k)
-
-            def branch(operand):
-                x, x_tilde = operand
-                xp = jax.tree.map(
-                    lambda a: jax.lax.ppermute(a, self.axis_name, perm), x)
-                new_x = jax.tree.map(
-                    lambda a, b: a - self.params.alpha * (a - b), x, xp)
-                new_t = jax.tree.map(
-                    lambda at, a, b: at - self.params.alpha_tilde * (a - b),
-                    x_tilde, x, xp)
-                return new_x, new_t
-
-            return branch
-
-        branches = [make_branch(k) for k in range(self.bank.shape[0])]
-        return jax.lax.switch(matching_idx, branches, (x, x_tilde))
 
     def mix(self, x: PyTree, x_tilde: PyTree, dt: jax.Array
             ) -> tuple[PyTree, PyTree]:
@@ -120,21 +99,45 @@ class GossipMixer:
 
         matching_idxs (E,) int32 — bank index per event (negative = skip),
         dts (E,) — elapsed worker-local time before each event.
+
+        The event loop runs on the flat-buffer engine: the replica pytree is
+        packed ONCE into a (D,) vector, each event is one collective permute
+        plus one fused [p2p, mix-to-next-event] sweep (see DESIGN.md), and
+        the pytree is rebuilt once at the end — no per-leaf kernel dispatch
+        or flatten/unflatten inside the hot loop.  The regrouping
+
+            mix(dt_0), P_0, mix(dt_1), P_1, ... =
+            [mix(dt_0)] [P_0, mix(dt_1)] ... [P_{E-1}, mix(0)]
+
+        is exact (semigroup property), so the dynamic is unchanged.
         """
+        if matching_idxs.shape[0] == 0:
+            return x, x_tilde
+        engine = FlatGossipEngine.for_pytree(x, self.params, stacked=False,
+                                             backend=self.backend)
+        bx = engine.pack_local(x)
+        bxt = engine.pack_local(x_tilde)
+        bx, bxt = engine.mix(bx, bxt, dts[0])
+        dt_next = jnp.concatenate([dts[1:], jnp.zeros((1,), dts.dtype)])
+
+        def make_branch(k: int):
+            perm = self._perm(k)
+            return lambda v: jax.lax.ppermute(v, self.axis_name, perm)
+
+        branches = [make_branch(k) for k in range(self.bank.shape[0])]
 
         def body(carry, ev):
-            x, x_tilde = carry
-            idx, dt = ev
-            x, x_tilde = self.mix(x, x_tilde, dt)
-            skip = idx < 0
-            x2, t2 = self.p2p_round(x, x_tilde, jnp.maximum(idx, 0))
-            x = jax.tree.map(lambda a, b: jnp.where(skip, a, b), x, x2)
-            x_tilde = jax.tree.map(lambda a, b: jnp.where(skip, a, b), x_tilde, t2)
-            return (x, x_tilde), None
+            bx, bxt = carry
+            idx, dtn = ev
+            xp = jax.lax.switch(jnp.maximum(idx, 0), branches, bx)
+            # skipped events keep the pure-mix segment: xp = x => m = 0
+            xp = jnp.where(idx < 0, bx, xp)
+            bx, bxt = engine.batch_local(bx, bxt, xp, dtn)
+            return (bx, bxt), None
 
-        (x, x_tilde), _ = jax.lax.scan(body, (x, x_tilde),
-                                       (matching_idxs, dts))
-        return x, x_tilde
+        (bx, bxt), _ = jax.lax.scan(body, (bx, bxt),
+                                    (matching_idxs, dt_next))
+        return engine.unpack_local(bx), engine.unpack_local(bxt)
 
     # ------------------------------------------------------------ schedules
     def sample_event_batch(self, key: jax.Array, num_events: int

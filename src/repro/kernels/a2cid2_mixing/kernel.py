@@ -1,8 +1,10 @@
-"""Fused A2CiD2 gossip-event kernel (Pallas TPU).
+"""Fused A2CiD2 gossip-event kernels (Pallas TPU).
 
 One p2p averaging event updates BOTH local buffers from the partner's
-parameters (Algo 1 lines 17-19), after lazily applying the continuous mixing
-exp(dt*A):
+parameters (Algo 1 lines 17-19), combined with the lazy continuous mixing
+exp(dt*A).  Two fusion orders are provided (see DESIGN.md):
+
+``mixing_p2p`` — mix THEN p2p (xp is the partner's already-mixed x):
 
     c   = (1 - exp(-2 eta dt)) / 2          # mixing coefficient
     xm  = x  + c * (xt - x)                 # mixed x
@@ -11,13 +13,28 @@ exp(dt*A):
     out_x  = xm  - alpha   * m
     out_xt = xtm - alpha_t * m
 
-Unfused, this is 2 elementwise passes over 3 full parameter-sized tensors
-(6 reads + 4 writes of HBM).  The fused kernel does 3 reads + 2 writes — a
-2x HBM-traffic reduction on the gossip step, which matters because the
-gossip event IS the paper's unit of communication cost.
+``p2p_mixing`` / ``mixing_gossip_stacked`` — p2p THEN mix-to-next-event.
+This is the order the flat-buffer event engine uses: chaining the mixing
+segment that precedes event e+1 onto the p2p pass of event e makes xp the
+partner's CURRENT (already-mixed) x, so no partner x~ read is needed:
 
-Layout: parameters are flattened to (N,) and tiled to (BLOCK,) VMEM blocks;
-`dt` is a scalar in SMEM (it varies per event — prefetch-friendly).
+    m   = x - xp
+    x1  = x  - alpha   * m
+    xt1 = xt - alpha_t * m
+    c   = (1 - exp(-2 eta dt_next)) / 2
+    out_x  = x1  + c * (xt1 - x1)
+    out_xt = xt1 - c * (xt1 - x1)
+
+Unfused, an event is 2 elementwise passes over 3 full parameter-sized
+tensors (6 reads + 4 writes of HBM).  Either fused kernel does 3 reads +
+2 writes — a 2x HBM-traffic reduction on the gossip step, which matters
+because the gossip event IS the paper's unit of communication cost.
+
+Layout: ``mixing_p2p``/``p2p_mixing`` take flat (N,) vectors tiled to
+(BLOCK,) VMEM blocks with `dt` a scalar in SMEM.  ``mixing_gossip_stacked``
+takes worker-stacked (W, D) buffers on a 2-D grid (workers x D-blocks); the
+partner index and per-worker dt vectors are scalar-prefetched so the partner
+row gather is resolved to a static block index before each grid step runs.
 """
 from __future__ import annotations
 
@@ -26,8 +43,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 64 * 1024  # 64k elems: 3 in + 2 out bf16 blocks = 640 KiB of VMEM
+
+# stacked kernel: (1, BLOCK_D) blocks; 4 in + 2 out f32 blocks = 384 KiB VMEM
+BLOCK_D = 16 * 1024
 
 
 def _mixing_kernel(dt_ref, x_ref, xt_ref, xp_ref, out_x_ref, out_xt_ref, *,
@@ -88,4 +109,152 @@ def mixing_p2p(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
     if pad:
         out_x = out_x[:n]
         out_xt = out_xt[:n]
+    return out_x, out_xt
+
+
+# ---------------------------------------------------------------------------
+# p2p-then-mix order (flat vectors) — the event-engine group pass
+# ---------------------------------------------------------------------------
+
+def _p2p_mixing_kernel(dt_ref, x_ref, xt_ref, xp_ref, out_x_ref, out_xt_ref,
+                       *, eta: float, alpha: float, alpha_t: float):
+    x = x_ref[...]
+    xt = xt_ref[...]
+    xp = xp_ref[...]
+    dt = dt_ref[0]
+    m = x - xp
+    x1 = x - alpha * m
+    xt1 = xt - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta * dt))).astype(x.dtype)
+    d = xt1 - x1
+    out_x_ref[...] = x1 + c * d
+    out_xt_ref[...] = xt1 - c * d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "alpha", "alpha_t", "interpret"))
+def p2p_mixing(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
+               dt_next: jax.Array, *, eta: float, alpha: float,
+               alpha_t: float, interpret: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """Fused p2p update followed by mixing for ``dt_next`` (flat vectors).
+
+    x, x_tilde, x_partner: (N,) same dtype; dt_next: scalar f32.
+    """
+    n = x.shape[0]
+    block = min(BLOCK, n)
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        x_tilde = jnp.pad(x_tilde, (0, pad))
+        x_partner = jnp.pad(x_partner, (0, pad))
+    grid = (x.shape[0] // block,)
+    dt_arr = jnp.reshape(dt_next.astype(jnp.float32), (1,))
+    kernel = functools.partial(_p2p_mixing_kernel, eta=eta, alpha=alpha,
+                               alpha_t=alpha_t)
+    out_x, out_xt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # dt scalar, whole array
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        interpret=interpret,
+    )(dt_arr, x, x_tilde, x_partner)
+    if pad:
+        out_x = out_x[:n]
+        out_xt = out_xt[:n]
+    return out_x, out_xt
+
+
+# ---------------------------------------------------------------------------
+# worker-stacked fused gossip batch (2-D grid, scalar-prefetched partners)
+# ---------------------------------------------------------------------------
+
+def _stacked_kernel(partner_ref, dt_ref, x_ref, xp_ref, xt_ref,
+                    out_x_ref, out_xt_ref, *, eta: float, alpha: float,
+                    alpha_t: float):
+    w = pl.program_id(0)
+    x = x_ref[...]
+    xp = xp_ref[...]
+    xt = xt_ref[...]
+    m = x - xp           # partner==w => xp==x => m==0 (idle worker no-op)
+    x1 = x - alpha * m
+    xt1 = xt - alpha_t * m
+    dt = dt_ref[w]
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta * dt))).astype(x.dtype)
+    d = xt1 - x1
+    out_x_ref[...] = x1 + c * d
+    out_xt_ref[...] = xt1 - c * d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "alpha", "alpha_t", "interpret"))
+def mixing_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
+                          partner: jax.Array, dt_next: jax.Array, *,
+                          eta: float, alpha: float, alpha_t: float,
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """One coalesced gossip batch over a worker-stacked flat buffer.
+
+    x, x_tilde: (W, D) same dtype; partner: (W,) int32 (partner[w] == w for
+    idle workers); dt_next: (W,) f32 per-worker mixing horizon to the next
+    event (p2p-then-mix order, see module docstring).
+
+    The partner gather is resolved via scalar prefetch: the BlockSpec index
+    map reads partner[w] before the grid step runs, so the partner row block
+    arrives by regular (static-index) pipelining — no in-kernel gather.  Per
+    batch the kernel reads 3 state-sized buffers (x twice: self + partner
+    rows; x~ once) and writes 2.  x~ only ever reads its own row, so its
+    input buffer is aliased to the output in place; x cannot alias (another
+    grid step may still read row w as a partner after w is updated).
+    """
+    w_dim, d_dim = x.shape
+    block = min(BLOCK_D, d_dim)
+    pad = (-d_dim) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        x_tilde = jnp.pad(x_tilde, ((0, 0), (0, pad)))
+    grid = (w_dim, x.shape[1] // block)
+    partner = partner.astype(jnp.int32)
+    dt_next = dt_next.astype(jnp.float32)
+    kernel = functools.partial(_stacked_kernel, eta=eta, alpha=alpha,
+                               alpha_t=alpha_t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # partner, dt_next
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda w, d, p, t: (w, d)),
+            pl.BlockSpec((1, block), lambda w, d, p, t: (p[w], d)),
+            pl.BlockSpec((1, block), lambda w, d, p, t: (w, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda w, d, p, t: (w, d)),
+            pl.BlockSpec((1, block), lambda w, d, p, t: (w, d)),
+        ],
+    )
+    out_x, out_xt = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        # inputs are (partner, dt, x, x, xt): alias xt -> out_xt in place
+        input_output_aliases={} if interpret else {4: 1},
+        interpret=interpret,
+    )(partner, dt_next, x, x, x_tilde)
+    if pad:
+        out_x = out_x[:, :d_dim]
+        out_xt = out_xt[:, :d_dim]
     return out_x, out_xt

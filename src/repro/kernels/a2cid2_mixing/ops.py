@@ -1,8 +1,11 @@
-"""jit'd public wrapper: pytree-level fused gossip event.
+"""jit'd public wrappers: fused gossip events at pytree / flat-buffer level.
 
 On CPU (tests, simulator) the oracle path is used; on TPU the Pallas kernel.
 ``gossip_event_pytree`` ravels each leaf and applies the fused kernel —
-leaves keep their shapes, so this drops into GossipMixer unchanged.
+leaves keep their shapes, so this drops into GossipMixer unchanged.  The
+flat-buffer event engine uses ``gossip_event_stacked`` (worker-stacked
+(W, D) buffers, p2p-then-mix order) and ``p2p_mix_event`` (per-worker (D,)
+vectors inside shard_map).
 """
 from __future__ import annotations
 
@@ -11,14 +14,23 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .kernel import mixing_p2p
-from .ref import mixing_p2p_ref
+from .kernel import mixing_gossip_stacked, mixing_p2p, p2p_mixing
+from .ref import (mixing_gossip_stacked_ref, mixing_p2p_ref, p2p_mixing_ref)
 
 PyTree = Any
 
 
 def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """'auto' -> 'pallas' on TPU else 'ref'; passthrough otherwise."""
+    if backend == "auto":
+        return "pallas" if _use_pallas() else "ref"
+    if backend not in ("ref", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
 
 
 def gossip_event(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
@@ -44,3 +56,34 @@ def gossip_event_pytree(x: PyTree, x_tilde: PyTree, x_partner: PyTree, dt,
                          **kw) for a, b, c in zip(flat_x, flat_t, flat_p)]
     return (treedef.unflatten([o[0] for o in outs]),
             treedef.unflatten([o[1] for o in outs]))
+
+
+# ------------------------------------------------------- event-engine passes
+
+def p2p_mix_event(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
+                  dt_next, *, eta: float, alpha: float, alpha_t: float,
+                  backend: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Fused p2p-then-mix on flat (D,) vectors (SPMD per-worker path)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return p2p_mixing_ref(x, x_tilde, x_partner, dt_next, eta=eta,
+                              alpha=alpha, alpha_t=alpha_t)
+    return p2p_mixing(x, x_tilde, x_partner, jnp.asarray(dt_next),
+                      eta=eta, alpha=alpha, alpha_t=alpha_t,
+                      interpret=(backend == "pallas_interpret"))
+
+
+def gossip_event_stacked(x: jax.Array, x_tilde: jax.Array,
+                         partner: jax.Array, dt_next: jax.Array, *,
+                         eta: float, alpha: float, alpha_t: float,
+                         backend: str = "auto"
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fused coalesced gossip batch on worker-stacked (W, D) buffers."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return mixing_gossip_stacked_ref(x, x_tilde, partner, dt_next,
+                                         eta=eta, alpha=alpha,
+                                         alpha_t=alpha_t)
+    return mixing_gossip_stacked(x, x_tilde, partner, dt_next, eta=eta,
+                                 alpha=alpha, alpha_t=alpha_t,
+                                 interpret=(backend == "pallas_interpret"))

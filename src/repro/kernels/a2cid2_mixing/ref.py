@@ -15,3 +15,34 @@ def mixing_p2p_ref(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
     xtm = x_tilde - c * d
     m = xm - x_partner
     return xm - alpha * m, xtm - alpha_t * m
+
+
+def p2p_mixing_ref(x: jax.Array, x_tilde: jax.Array, x_partner: jax.Array,
+                   dt_next, *, eta: float, alpha: float, alpha_t: float
+                   ) -> tuple[jax.Array, jax.Array]:
+    """p2p update then mixing for dt_next (the event-engine group order)."""
+    m = x - x_partner
+    x1 = x - alpha * m
+    xt1 = x_tilde - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d
+
+
+def mixing_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
+                              partner: jax.Array, dt_next: jax.Array, *,
+                              eta: float, alpha: float, alpha_t: float
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the worker-stacked fused batch: x, x~ are (W, D), partner
+    (W,) an involution (partner[w]==w for idle workers), dt_next (W,)."""
+    xp = jnp.take(x, partner, axis=0)
+    m = x - xp
+    x1 = x - alpha * m
+    xt1 = x_tilde - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)[:, None]
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d

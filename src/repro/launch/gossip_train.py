@@ -57,6 +57,7 @@ class GossipTrainer:
     lr: float = 0.1
     comms_per_step: int = 1
     axis_name: str = "worker"
+    backend: str = "auto"  # fused gossip-kernel backend for the event loop
 
     def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
         return GossipTrainState(
@@ -69,7 +70,8 @@ class GossipTrainer:
 
     # ------------------------------------------------------------- the step
     def make_step(self, mesh):
-        mixer = GossipMixer(self.graph, self.acid, self.axis_name)
+        mixer = GossipMixer(self.graph, self.acid, self.axis_name,
+                            backend=self.backend)
         n_events = self.comms_per_step
 
         def step(state: GossipTrainState, batch: PyTree):
@@ -165,6 +167,7 @@ class StackedGossipTrainer:
     acid: A2CiD2Params
     lr: float = 0.1
     comms_per_step: int = 1
+    backend: str = "auto"  # fused gossip-kernel backend for the event loop
 
     def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
         n = self.graph.n
@@ -175,12 +178,13 @@ class StackedGossipTrainer:
             opt=jax.vmap(self.optimizer.init)(stack), key=key)
 
     def make_step(self):
-        from ..core.a2cid2 import apply_mixing, matched_p2p_update
+        from ..core.a2cid2 import apply_mixing
+        from ..core.engine import FlatGossipEngine
         from ..core.gossip import bank_edge_rates, matching_bank
 
-        bank = jnp.asarray(matching_bank(self.graph))           # (M, W)
+        bank_np = np.asarray(matching_bank(self.graph))         # (M, W)
         probs = jnp.asarray(
-            bank_edge_rates(self.graph, np.asarray(bank)), jnp.float32)
+            bank_edge_rates(self.graph, bank_np), jnp.float32)
         n = self.graph.n
         E = self.comms_per_step
         acid = self.acid
@@ -199,38 +203,48 @@ class StackedGossipTrainer:
             delta = jax.tree.map(lambda a, b: a - b, x2, x)
             x = x2
             xt = jax.tree.map(lambda t, d: t + d, xt, delta)
-            # E gossip events: sampled matchings + Exp inter-event mixing
+            # E gossip events: sampled matchings + Exp inter-event mixing,
+            # run on the flat-buffer engine: pack once, one fused
+            # [p2p, mix-to-next-event] sweep per event (see DESIGN.md),
+            # unpack once — no per-leaf dispatch inside the scan.
             idxs = jax.random.categorical(k_ev, jnp.log(probs), shape=(E,))
             gaps = jax.random.exponential(k_gap, (E, n)) / max(E, 1)
+            if E == 0:
+                return (StackedGossipState(x, xt, opt, key),
+                        {"loss": jnp.mean(losses)})
+
+            engine = FlatGossipEngine.for_pytree(x, acid, stacked=True,
+                                                 backend=self.backend)
+            bx, bxt = engine.pack(x), engine.pack(xt)
+            bx, bxt = engine.mix(bx, bxt, gaps[0])
+            gaps_next = jnp.concatenate(
+                [gaps[1:], jnp.zeros((1, n), gaps.dtype)], axis=0)
 
             # the matching bank is STATIC — dispatch via lax.switch so each
-            # branch indexes with a constant permutation.  A traced partner
+            # branch gathers with a constant permutation.  A traced partner
             # (bank[idx] then take) defeats XLA's permutation analysis and
             # lowers to an all-gather of every worker's shard (n x the bytes
             # of a p2p exchange; measured in EXPERIMENTS.md §Perf C).
-            bank_np = np.asarray(bank)
-
             def make_branch(k: int):
-                perm = tuple(int(j) for j in bank_np[k])
+                perm = jnp.asarray(bank_np[k], jnp.int32)
 
                 def branch(operand):
-                    x, xt = operand
-                    return matched_p2p_update(
-                        x, xt, jnp.asarray(perm, jnp.int32), acid)
+                    bx, bxt, dtn = operand
+                    return engine.batch(bx, bxt, perm, dtn)
 
                 return branch
 
             branches = [make_branch(k) for k in range(bank_np.shape[0])]
 
             def ev(carry, inp):
-                x, xt = carry
-                idx, gap = inp
-                x, xt = apply_mixing(x, xt, acid.eta, gap)
-                x, xt = jax.lax.switch(idx, branches, (x, xt))
-                return (x, xt), None
+                bx, bxt = carry
+                idx, gap_next = inp
+                bx, bxt = jax.lax.switch(idx, branches, (bx, bxt, gap_next))
+                return (bx, bxt), None
 
-            (x, xt), _ = jax.lax.scan(ev, (x, xt), (idxs, gaps))
-            return (StackedGossipState(x, xt, opt, key),
+            (bx, bxt), _ = jax.lax.scan(ev, (bx, bxt), (idxs, gaps_next))
+            return (StackedGossipState(engine.unpack(bx), engine.unpack(bxt),
+                                       opt, key),
                     {"loss": jnp.mean(losses)})
 
         return step

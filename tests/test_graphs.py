@@ -1,7 +1,6 @@
 """Graph/Laplacian invariants + the paper's App E.1 chi values."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import build_graph, complete_graph, exponential_graph, ring_graph
 
@@ -53,9 +52,10 @@ def test_total_rate_is_trace_over_two():
             np.trace(g.laplacian()) / 2.0)
 
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(4, 24), seed=st.integers(0, 1000))
+@pytest.mark.parametrize("n,seed", [(4, 0), (9, 17), (16, 3), (24, 101)])
 def test_matchings_are_valid(n, seed):
+    """Deterministic spot-check; the randomized sweep lives in
+    test_property_sweeps.py."""
     g = ring_graph(n)
     rng = np.random.default_rng(seed)
     m = g.sample_matching(rng)

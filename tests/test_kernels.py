@@ -1,10 +1,9 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
-shape/dtype sweeps + hypothesis on the fused mixing kernel."""
+shape/dtype sweeps (the hypothesis sweep lives in test_property_sweeps.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.a2cid2_mixing.kernel import mixing_p2p
 from repro.kernels.a2cid2_mixing.ref import mixing_p2p_ref
@@ -35,12 +34,11 @@ def test_mixing_kernel_matches_oracle(n, dtype):
                                np.asarray(rt, np.float32), atol=atol)
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(3, 3000), eta=st.floats(0.0, 2.0),
-       dt=st.floats(0.0, 5.0), alpha_t=st.floats(0.1, 3.0),
-       seed=st.integers(0, 100))
-def test_mixing_kernel_hypothesis_sweep(n, eta, dt, alpha_t, seed):
-    key = jax.random.PRNGKey(seed)
+@pytest.mark.parametrize("n,eta,dt,alpha_t", [
+    (3, 0.0, 0.0, 0.1), (777, 1.3, 2.2, 1.8), (3000, 2.0, 5.0, 3.0),
+])
+def test_mixing_kernel_param_sweep(n, eta, dt, alpha_t):
+    key = jax.random.PRNGKey(n)
     ks = jax.random.split(key, 3)
     x = jax.random.normal(ks[0], (n,))
     xt = jax.random.normal(ks[1], (n,))

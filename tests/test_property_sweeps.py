@@ -1,0 +1,97 @@
+"""Hypothesis property sweeps, collected only when `hypothesis` is installed.
+
+The deterministic siblings of these tests live in test_a2cid2 / test_graphs /
+test_kernels / test_substrates; keeping the @given sweeps here means a clean
+environment (no hypothesis) still collects and runs the whole tier-1 suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply_mixing, mixing_coeff, ring_graph
+from repro.kernels.a2cid2_mixing.kernel import mixing_p2p
+from repro.kernels.a2cid2_mixing.ref import mixing_p2p_ref
+from repro.optim import clip_by_global_norm
+
+
+# ------------------------------------------------------------------- a2cid2
+
+@settings(max_examples=30, deadline=None)
+@given(eta=st.floats(0.01, 2.0), t1=st.floats(0.0, 3.0), t2=st.floats(0.0, 3.0))
+def test_mixing_flow_semigroup(eta, t1, t2):
+    """exp(t1 A) exp(t2 A) == exp((t1+t2) A) — exact flow, not an Euler step."""
+    x = jnp.asarray([1.0, -2.0, 0.5])
+    xt = jnp.asarray([0.3, 4.0, -1.0])
+    a1, b1 = apply_mixing(*apply_mixing(x, xt, eta, t1), eta, t2)
+    a2, b2 = apply_mixing(x, xt, eta, t1 + t2)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(eta=st.floats(0.01, 5.0), t=st.floats(0.0, 10.0))
+def test_mixing_preserves_sum_and_contracts(eta, t):
+    x = jnp.asarray([1.0, -2.0, 0.5])
+    xt = jnp.asarray([0.3, 4.0, -1.0])
+    mx, mxt = apply_mixing(x, xt, eta, t)
+    np.testing.assert_allclose(mx + mxt, x + xt, rtol=1e-5)
+    # contraction of the difference: |mx - mxt| = e^{-2 eta t} |x - xt|
+    np.testing.assert_allclose(
+        np.asarray(mx - mxt),
+        np.exp(-2 * eta * t) * np.asarray(x - xt), rtol=1e-4, atol=1e-5)
+    c = float(mixing_coeff(eta, jnp.asarray(t)))
+    assert 0.0 <= c <= 0.5
+
+
+# ------------------------------------------------------------------- graphs
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 24), seed=st.integers(0, 1000))
+def test_matchings_are_valid(n, seed):
+    g = ring_graph(n)
+    rng = np.random.default_rng(seed)
+    m = g.sample_matching(rng)
+    nodes = [x for e in m for x in e]
+    assert len(nodes) == len(set(nodes))            # node-disjoint
+    edge_set = {tuple(sorted(e)) for e in g.edges}
+    for e in m:
+        assert tuple(sorted(e)) in edge_set         # real edges only
+    p = g.matching_to_partner(m)
+    assert np.all(p[p] == np.arange(n))             # involution
+
+
+# ------------------------------------------------------------------ kernels
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 3000), eta=st.floats(0.0, 2.0),
+       dt=st.floats(0.0, 5.0), alpha_t=st.floats(0.1, 3.0),
+       seed=st.integers(0, 100))
+def test_mixing_kernel_hypothesis_sweep(n, eta, dt, alpha_t, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (n,))
+    xt = jax.random.normal(ks[1], (n,))
+    xp = jax.random.normal(ks[2], (n,))
+    kw = dict(eta=eta, alpha=0.5, alpha_t=alpha_t)
+    ox, ot = mixing_p2p(x, xt, xp, jnp.float32(dt), interpret=True, **kw)
+    rx, rt = mixing_p2p_ref(x, xt, xp, dt, **kw)
+    np.testing.assert_allclose(ox, rx, atol=1e-4)
+    np.testing.assert_allclose(ot, rt, atol=1e-4)
+
+
+# --------------------------------------------------------------- substrates
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 100.0), max_norm=st.floats(0.1, 10.0))
+def test_clip_by_global_norm(scale, max_norm):
+    g = {"a": scale * jnp.ones(16), "b": -scale * jnp.ones(4)}
+    clipped = clip_by_global_norm(g, max_norm)
+    norm = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                              for x in jax.tree.leaves(clipped))))
+    assert norm <= max_norm * 1.01
+    if scale * np.sqrt(20) <= max_norm:  # no-op when under the bound
+        np.testing.assert_allclose(clipped["a"], g["a"], rtol=1e-6)

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import load_pytree, restore, save, save_pytree
 from repro.data import LMTaskStream, SyntheticCIFAR, WorkerStream
@@ -47,8 +46,9 @@ def test_adamw_converges():
     assert float(jnp.max(jnp.abs(p["w"]))) < 1e-2
 
 
-@settings(max_examples=20, deadline=None)
-@given(scale=st.floats(0.1, 100.0), max_norm=st.floats(0.1, 10.0))
+@pytest.mark.parametrize("scale,max_norm", [
+    (0.1, 10.0), (1.0, 1.0), (100.0, 0.1),
+])
 def test_clip_by_global_norm(scale, max_norm):
     g = {"a": scale * jnp.ones(16), "b": -scale * jnp.ones(4)}
     clipped = clip_by_global_norm(g, max_norm)
