@@ -190,8 +190,7 @@ def _sim_setup(seed=0):
                           comms_per_grad=_SIM_BENCH["comms_per_grad"],
                           seed=seed)
     cs = coalesce_schedule(sched)
-    ref_arrays = (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
-                  jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times))
+    ref_arrays = sim.reference_arrays(sched)
     eng_arrays = sim.coalesced_arrays(st, sched, cs=cs)
     return sim, st, sched, cs, ref_arrays, eng_arrays
 
@@ -270,6 +269,108 @@ def bench_gossip_engine() -> list[str]:
     ]
 
 
+_TOPO_BENCH = {"n": 64, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
+               "gamma": 0.05, "noise": 0.05,
+               "families": ["ring", "torus", "hypercube", "complete"]}
+
+
+def bench_topology_sweep() -> list[str]:
+    """Paper-figure-shaped artifact: consensus-distance-vs-communication
+    curves, accelerated vs baseline, across the paper's topology families at
+    n=64 (Tab 4/5 + Fig 4 regime: the ring/torus gains, the complete-graph
+    wash), plus heterogeneous-world scenarios (straggler clocks, a
+    ring->hypercube phase switch with churn).  Emits BENCH_topology.json.
+    """
+    import json
+    import os
+
+    from repro.core import (Simulator, TopologyPhase, TopologySchedule,
+                            build_graph, make_schedule,
+                            make_topology_schedule, params_from_graph)
+
+    n, d = _TOPO_BENCH["n"], _TOPO_BENCH["d"]
+    rounds, rate = _TOPO_BENCH["rounds"], _TOPO_BENCH["comms_per_grad"]
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    grad_fn = _quad_grad_fn(b, noise=_TOPO_BENCH["noise"])
+
+    def consensus_curve(graph, sched, accel):
+        sim = Simulator(grad_fn, params_from_graph(graph, accelerated=accel),
+                        gamma=_TOPO_BENCH["gamma"])
+        st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+        t0 = time.perf_counter()
+        _, trace = sim.run_schedule(st, sched)
+        cons = np.asarray(trace.consensus)
+        return (time.perf_counter() - t0) * 1e6, cons
+
+    rows, report = [], {"config": dict(_TOPO_BENCH), "families": {},
+                        "scenarios": {}}
+    for name in _TOPO_BENCH["families"]:
+        g = build_graph(name, n)
+        sched = make_schedule(g, rounds=rounds, comms_per_grad=rate, seed=0)
+        events = np.cumsum(sched.comm_events_per_round())
+        us_b, base = consensus_curve(g, sched, False)
+        us_a, acid = consensus_curve(g, sched, True)
+        tail_b = float(base[-30:].mean())
+        tail_a = float(acid[-30:].mean())
+        gain = tail_b / max(tail_a, 1e-12)
+        report["families"][name] = {
+            "chi1": g.chi1(), "chi2": g.chi2(),
+            "cumulative_comm_events": events.tolist(),
+            "consensus_baseline": np.asarray(base, np.float64).tolist(),
+            "consensus_acid": np.asarray(acid, np.float64).tolist(),
+            "tail_consensus_baseline": tail_b,
+            "tail_consensus_acid": tail_a,
+            "acid_gain": gain,
+        }
+        rows.append(f"topology_{name}_n{n},{us_b + us_a:.0f},"
+                    f"gain={gain:.3f};chi1={g.chi1():.1f}")
+
+    # scenario 1: straggler clocks on the ring (half the workers at 1/4 rate)
+    ring = build_graph("ring", n)
+    grad_rates = np.where(np.arange(n) % 2 == 0, 1.0, 0.25)
+    sched = make_schedule(ring, rounds=rounds, comms_per_grad=rate, seed=0,
+                          grad_rates=grad_rates)
+    _, s_base = consensus_curve(ring, sched, False)
+    _, s_acid = consensus_curve(ring, sched, True)
+    report["scenarios"]["ring_stragglers"] = {
+        "grad_rates": grad_rates.tolist(),
+        "consensus_baseline": np.asarray(s_base, np.float64).tolist(),
+        "consensus_acid": np.asarray(s_acid, np.float64).tolist(),
+        "acid_gain": float(s_base[-30:].mean() / max(s_acid[-30:].mean(),
+                                                     1e-12)),
+    }
+
+    # scenario 2: phase switch ring -> hypercube with a churn window
+    active = np.ones(n, bool)
+    active[: n // 8] = False
+    ts = TopologySchedule((
+        TopologyPhase(ring, rounds // 3),
+        TopologyPhase(ring, rounds // 3, tuple(active)),
+        TopologyPhase(build_graph("hypercube", n), rounds - 2 * (rounds // 3)),
+    ))
+    psched = make_topology_schedule(ts, comms_per_grad=rate, seed=0)
+    _, p_base = consensus_curve(ring, psched, False)
+    _, p_acid = consensus_curve(ring, psched, True)
+    report["scenarios"]["ring_churn_hypercube"] = {
+        "phases": [{"graph": ph.graph.name, "rounds": ph.rounds,
+                    "active_workers": int(ph.active_mask().sum()),
+                    "chi1": ph.chis()[0], "chi2": ph.chis()[1]}
+                   for ph in ts.phases],
+        "consensus_baseline": np.asarray(p_base, np.float64).tolist(),
+        "consensus_acid": np.asarray(p_acid, np.float64).tolist(),
+    }
+
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_topology.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    rows.append("topology_scenarios,0.0,"
+                f"stragglers_gain="
+                f"{report['scenarios']['ring_stragglers']['acid_gain']:.3f}")
+    return rows
+
+
 def bench_roofline_summary() -> list[str]:
     """Roofline terms from the dry-run artifacts (if present)."""
     import json
@@ -301,6 +402,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "simulator": bench_simulator_throughput,
     "gossip": bench_gossip_engine,
+    "topology": bench_topology_sweep,
     "roofline": bench_roofline_summary,
 }
 

@@ -4,11 +4,13 @@ from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
                      mixing_coeff, p2p_event, params_from_graph, worker_mean)
 from .engine import FlatGossipEngine, mix_flat
 from .events import (CoalescedSchedule, EventStream, Schedule,
-                     coalesce_schedule, coalesced_stream,
-                     empirical_laplacian, make_schedule)
+                     coalesce_schedule, coalesced_stream, concat_schedules,
+                     empirical_laplacian, make_schedule,
+                     make_topology_schedule)
 from .flatbuf import FlatLayout, LeafSpec
-from .gossip import GossipMixer, matching_bank
-from .graphs import (Graph, build_graph, complete_graph, exponential_graph,
+from .gossip import GossipMixer, matching_bank, phase_banks
+from .graphs import (Graph, TopologyPhase, TopologySchedule, build_graph,
+                     complete_graph, exponential_graph, hypercube_graph,
                      ring_graph, star_graph, torus_graph)
 from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
 
@@ -17,10 +19,12 @@ __all__ = [
     "consensus_distance", "gradient_event", "matched_p2p_update",
     "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
     "CoalescedSchedule", "EventStream", "Schedule", "coalesce_schedule",
-    "coalesced_stream", "empirical_laplacian", "make_schedule",
+    "coalesced_stream", "concat_schedules", "empirical_laplacian",
+    "make_schedule", "make_topology_schedule",
     "FlatGossipEngine", "mix_flat", "FlatLayout", "LeafSpec",
-    "GossipMixer", "matching_bank",
-    "Graph", "build_graph", "complete_graph", "exponential_graph",
+    "GossipMixer", "matching_bank", "phase_banks",
+    "Graph", "TopologyPhase", "TopologySchedule", "build_graph",
+    "complete_graph", "exponential_graph", "hypercube_graph",
     "ring_graph", "star_graph", "torus_graph",
     "SimState", "SimTrace", "Simulator", "allreduce_sgd",
 ]

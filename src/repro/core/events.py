@@ -25,7 +25,25 @@ import dataclasses
 
 import numpy as np
 
-from .graphs import Graph
+from .graphs import Graph, TopologySchedule
+
+
+def _alive_arr(rounds: int, n: int, alive: np.ndarray | None) -> np.ndarray:
+    """(R, n) bool aliveness, materialized (None = all alive)."""
+    if alive is None:
+        return np.ones((rounds, n), dtype=bool)
+    return np.asarray(alive, dtype=bool)
+
+
+def _grad_scale(rounds: int, n: int, grad_mask: np.ndarray | None,
+                alive: np.ndarray | None) -> np.ndarray:
+    """(R, n) f32 gradient-application scale: 1.0 iff the worker both takes
+    the tick (grad_mask) and is attached (alive)."""
+    s = np.ones((rounds, n), dtype=bool)
+    if grad_mask is not None:
+        s &= np.asarray(grad_mask, dtype=bool)
+    s &= _alive_arr(rounds, n, alive)
+    return s.astype(np.float32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +56,22 @@ class Schedule:
                                     repeat the previous valid time
       event_mask  (R, K) bool
       grad_times  (R, n) float32  — time of each worker's gradient event
+
+    Heterogeneous-world extensions (None = homogeneous, all-True):
+      grad_mask   (R, n) bool — straggler thinning: a False tick means the
+                  worker is ALIVE (clock advances, mixing applies) but skips
+                  the gradient computation this round
+      alive       (R, n) bool — churn: a False row entry means the worker is
+                  DETACHED — no matchings (by schedule construction), no
+                  gradient, and its event clock freezes for the round
     """
 
     partners: np.ndarray
     event_times: np.ndarray
     event_mask: np.ndarray
     grad_times: np.ndarray
+    grad_mask: np.ndarray | None = None
+    alive: np.ndarray | None = None
 
     @property
     def rounds(self) -> int:
@@ -53,15 +81,25 @@ class Schedule:
     def n(self) -> int:
         return self.partners.shape[2]
 
-    def num_comm_events(self) -> int:
-        """Total pairwise communications in the schedule (counted per pair)."""
-        total = 0
+    def alive_arr(self) -> np.ndarray:
+        return _alive_arr(self.rounds, self.n, self.alive)
+
+    def grad_scale(self) -> np.ndarray:
+        return _grad_scale(self.rounds, self.n, self.grad_mask, self.alive)
+
+    def comm_events_per_round(self) -> np.ndarray:
+        """(R,) pairwise communication count per round (benchmark x-axis)."""
+        idx = np.arange(self.n)
+        out = np.zeros(self.rounds, dtype=np.int64)
         for r in range(self.rounds):
             for k in range(self.partners.shape[1]):
                 if self.event_mask[r, k]:
-                    p = self.partners[r, k]
-                    total += int(np.sum(p != np.arange(self.n))) // 2
-        return total
+                    out[r] += int(np.sum(self.partners[r, k] != idx)) // 2
+        return out
+
+    def num_comm_events(self) -> int:
+        """Total pairwise communications in the schedule (counted per pair)."""
+        return int(self.comm_events_per_round().sum())
 
 
 def make_schedule(
@@ -70,47 +108,217 @@ def make_schedule(
     comms_per_grad: float = 1.0,
     seed: int = 0,
     jitter_grad_times: bool = True,
+    grad_rates: np.ndarray | None = None,
+    edge_rates: np.ndarray | None = None,
+    per_edge: bool | None = None,
+    t_offset: float = 0.0,
+    active: np.ndarray | None = None,
 ) -> Schedule:
-    """Build a Poisson event schedule.
+    """Build a Poisson event schedule, homogeneous or heterogeneous.
 
     comms_per_grad — expected number of p2p averagings per worker between two
     of its gradient steps (the paper's "#com/#grad" knob, Tab 5).
+
+    Heterogeneous knobs (all default off; with them off — or set to their
+    uniform values — the schedule is bit-for-bit the homogeneous one under
+    the same seed, because heterogeneity draws come from a separate rng
+    stream):
+
+    grad_rates — (n,) per-worker gradient rates in [0, 1]: worker i takes
+      its round-r gradient tick with probability grad_rates[i] (Bernoulli
+      thinning of the unit-rate tick process — stragglers take fewer grad
+      ticks but stay alive: clocks advance, mixing applies).
+    edge_rates — (E,) per-edge communication rates overriding
+      ``graph.rates``.  Non-uniform rates switch scheduling to the per-edge
+      point process of Def 3.1: edge e fires Poisson(comms_per_grad *
+      rate_e) times per round, each firing a single-pair event, so the
+      empirical Laplacian converges to the rate-weighted Lambda exactly.
+      ``edge_rates`` equal to ``graph.rates`` keeps the paper's
+      maximal-matching emulation (the exact homogeneous reduction).
+    per_edge — force the per-edge path on/off (None = auto as above).
+    t_offset — shift all event/gradient times (phase concatenation).
+    active — (n,) churn mask: detached workers are cut out of the graph
+      (no matchings) and marked dead for every round of this schedule.
     """
     rng = np.random.default_rng(seed)
+    # heterogeneity draws come from an independent stream so that uniform
+    # rates leave the main stream — and hence the schedule — untouched
+    het = np.random.default_rng(np.random.SeedSequence([int(seed), 0x48455]))
     n = graph.n
 
-    counts = rng.poisson(lam=comms_per_grad, size=rounds)
-    kmax = max(1, int(counts.max()))
+    # rate override first (edge_rates align with the FULL graph's edges),
+    # churn subgraph second (it filters rates along with edges)
+    if edge_rates is not None:
+        edge_rates = np.asarray(edge_rates, dtype=np.float64)
+        if per_edge is None:
+            per_edge = not np.allclose(edge_rates, graph.rates)
+        graph = graph.with_rates(edge_rates)
+    elif per_edge is None:
+        per_edge = False
+    if active is not None:
+        active = np.asarray(active, dtype=bool)
+        if not active.all():
+            graph = graph.subgraph(active)
 
+    if per_edge:
+        partners, event_times, event_mask = _per_edge_events(
+            graph, rounds, comms_per_grad, rng, t_offset)
+        kmax = partners.shape[1]
+    else:
+        counts = rng.poisson(lam=comms_per_grad, size=rounds)
+        kmax = max(1, int(counts.max()))
+        partners = np.tile(np.arange(n, dtype=np.int32), (rounds, kmax, 1))
+        event_times = np.zeros((rounds, kmax), dtype=np.float32)
+        event_mask = np.zeros((rounds, kmax), dtype=bool)
+        for r in range(rounds):
+            k = int(counts[r])
+            times = np.sort(rng.uniform(r + t_offset, r + t_offset + 1,
+                                        size=k)).astype(np.float32)
+            last = np.float32(r + t_offset)
+            for e in range(kmax):
+                if e < k:
+                    matching = graph.sample_matching(rng)
+                    partners[r, e] = graph.matching_to_partner(
+                        matching).astype(np.int32)
+                    event_times[r, e] = times[e]
+                    event_mask[r, e] = True
+                    last = times[e]
+                else:
+                    # masked: dt contribution handled by mask
+                    event_times[r, e] = last
+
+    grad_times = np.zeros((rounds, n), dtype=np.float32)
+    for r in range(rounds):
+        if jitter_grad_times:
+            # each worker's gradient lands at a jittered point in the second
+            # half of the round (unit-rate process, staggered workers)
+            grad_times[r] = (r + t_offset + 0.5
+                             + 0.5 * rng.uniform(size=n)).astype(np.float32)
+        else:
+            grad_times[r] = np.float32(r + t_offset + 1.0)
+        # gradient events must come after the last comm event of the round for
+        # the per-round scan ordering to be exact
+        grad_times[r] = np.maximum(grad_times[r],
+                                   event_times[r].max() + 1e-4)
+
+    grad_mask = None
+    if grad_rates is not None:
+        gr = np.clip(np.asarray(grad_rates, dtype=np.float64), 0.0, 1.0)
+        if gr.shape != (n,):
+            raise ValueError(f"grad_rates must be ({n},), got {gr.shape}")
+        grad_mask = het.uniform(size=(rounds, n)) < gr
+    alive = None
+    if active is not None and not active.all():
+        alive = np.broadcast_to(active, (rounds, n)).copy()
+
+    return Schedule(partners, event_times, event_mask, grad_times,
+                    grad_mask=grad_mask, alive=alive)
+
+
+def _per_edge_events(graph: Graph, rounds: int, comms_per_grad: float,
+                     rng: np.random.Generator, t_offset: float):
+    """Per-edge Poisson firing (Def 3.1): edge e fires Poisson(c * rate_e)
+    times per round; each firing is a single-pair event."""
+    n, E = graph.n, graph.num_edges
+    lam = comms_per_grad * np.asarray(graph.rates, dtype=np.float64)
+    counts = rng.poisson(lam=lam, size=(rounds, max(E, 1))) if E else \
+        np.zeros((rounds, 1), dtype=np.int64)
+    kmax = max(1, int(counts.sum(axis=1).max()))
     partners = np.tile(np.arange(n, dtype=np.int32), (rounds, kmax, 1))
     event_times = np.zeros((rounds, kmax), dtype=np.float32)
     event_mask = np.zeros((rounds, kmax), dtype=bool)
-    grad_times = np.zeros((rounds, n), dtype=np.float32)
-
     for r in range(rounds):
-        k = int(counts[r])
-        times = np.sort(rng.uniform(r, r + 1, size=k)).astype(np.float32)
-        last = np.float32(r)
+        fired = np.repeat(np.arange(counts.shape[1]), counts[r]) if E else \
+            np.zeros(0, np.int64)
+        k = len(fired)
+        rng.shuffle(fired)  # decorrelate edge identity from the sorted times
+        times = np.sort(rng.uniform(r + t_offset, r + t_offset + 1,
+                                    size=k)).astype(np.float32)
+        last = np.float32(r + t_offset)
         for e in range(kmax):
             if e < k:
-                matching = graph.sample_matching(rng)
-                partners[r, e] = graph.matching_to_partner(matching).astype(np.int32)
+                i, j = graph.edges[int(fired[e])]
+                partners[r, e, i] = j
+                partners[r, e, j] = i
                 event_times[r, e] = times[e]
                 event_mask[r, e] = True
                 last = times[e]
             else:
-                event_times[r, e] = last  # masked: dt contribution handled by mask
-        if jitter_grad_times:
-            # each worker's gradient lands at a jittered point in the second
-            # half of the round (unit-rate process, staggered workers)
-            grad_times[r] = (r + 0.5 + 0.5 * rng.uniform(size=n)).astype(np.float32)
-        else:
-            grad_times[r] = np.float32(r + 1.0)
-        # gradient events must come after the last comm event of the round for
-        # the per-round scan ordering to be exact
-        grad_times[r] = np.maximum(grad_times[r], event_times[r].max() + 1e-4)
+                event_times[r, e] = last
+    return partners, event_times, event_mask
 
-    return Schedule(partners, event_times, event_mask, grad_times)
+
+def concat_schedules(schedules: list[Schedule]) -> Schedule:
+    """Concatenate per-phase schedules (absolute times) into one Schedule.
+
+    Rounds are padded to the widest per-phase kmax with masked
+    identity-partner slots, so both replay paths consume the result exactly
+    like a single-phase schedule.
+    """
+    if not schedules:
+        raise ValueError("need at least one schedule")
+    if len(schedules) == 1:
+        return schedules[0]
+    n = schedules[0].n
+    if any(s.n != n for s in schedules):
+        raise ValueError("schedules must share one worker count")
+    kmax = max(s.partners.shape[1] for s in schedules)
+    parts, times, masks = [], [], []
+    for s in schedules:
+        R, K, _ = s.partners.shape
+        if K < kmax:
+            pad_p = np.tile(np.arange(n, dtype=np.int32), (R, kmax - K, 1))
+            # masked pads repeat the row's last time (dt handled by mask)
+            pad_t = np.repeat(s.event_times[:, -1:], kmax - K, axis=1)
+            parts.append(np.concatenate([s.partners, pad_p], axis=1))
+            times.append(np.concatenate([s.event_times, pad_t], axis=1))
+            masks.append(np.concatenate(
+                [s.event_mask, np.zeros((R, kmax - K), bool)], axis=1))
+        else:
+            parts.append(s.partners)
+            times.append(s.event_times)
+            masks.append(s.event_mask)
+    any_gmask = any(s.grad_mask is not None for s in schedules)
+    any_alive = any(s.alive is not None for s in schedules)
+    gmask = np.concatenate(
+        [s.grad_mask if s.grad_mask is not None
+         else np.ones((s.rounds, n), bool) for s in schedules]) \
+        if any_gmask else None
+    alive = np.concatenate([s.alive_arr() for s in schedules]) \
+        if any_alive else None
+    return Schedule(
+        np.concatenate(parts), np.concatenate(times).astype(np.float32),
+        np.concatenate(masks),
+        np.concatenate([s.grad_times for s in schedules]).astype(np.float32),
+        grad_mask=gmask, alive=alive)
+
+
+def make_topology_schedule(
+    tsched: TopologySchedule,
+    comms_per_grad: float = 1.0,
+    seed: int = 0,
+    jitter_grad_times: bool = True,
+    grad_rates: np.ndarray | None = None,
+    per_edge: bool | None = None,
+) -> Schedule:
+    """Compile a time-varying topology into one concatenated event schedule.
+
+    Phase p covers rounds [start_p, start_p + rounds_p) with its own graph
+    and churn mask; per-phase seeds are ``seed + p`` so a single-phase
+    topology schedule reproduces ``make_schedule(graph, ..., seed)``
+    bit-for-bit.  Per-edge rate heterogeneity is expressed through each
+    phase graph's own ``rates`` (``Graph.with_rates``); ``per_edge`` forces
+    the Def 3.1 single-pair point process for every phase.
+    """
+    starts = tsched.phase_starts()
+    phases = []
+    for p, ph in enumerate(tsched.phases):
+        phases.append(make_schedule(
+            ph.graph, ph.rounds, comms_per_grad, seed=seed + p,
+            jitter_grad_times=jitter_grad_times, grad_rates=grad_rates,
+            per_edge=per_edge, t_offset=float(starts[p]),
+            active=ph.active_mask()))
+    return concat_schedules(phases)
 
 
 # ---------------------------------------------------------------------------
@@ -133,12 +341,16 @@ class CoalescedSchedule:
                                      worker is involved, i.e. partner != i)
       batch_active (R, B) bool     — False = padding, skip the sweep
       grad_times   (R, n) f32      — unchanged from the raw schedule
+      grad_mask / alive — heterogeneous-world masks carried through from the
+                          raw schedule (see Schedule)
     """
 
     partners: np.ndarray
     wtimes: np.ndarray
     batch_active: np.ndarray
     grad_times: np.ndarray
+    grad_mask: np.ndarray | None = None
+    alive: np.ndarray | None = None
 
     @property
     def rounds(self) -> int:
@@ -147,6 +359,12 @@ class CoalescedSchedule:
     @property
     def n(self) -> int:
         return self.partners.shape[2]
+
+    def alive_arr(self) -> np.ndarray:
+        return _alive_arr(self.rounds, self.n, self.alive)
+
+    def grad_scale(self) -> np.ndarray:
+        return _grad_scale(self.rounds, self.n, self.grad_mask, self.alive)
 
     def num_batches(self) -> int:
         """Fused sweeps the engine performs (vs kmax*rounds in the raw path)."""
@@ -202,7 +420,9 @@ def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
             wtimes[r, b] = wtime
             batch_active[r, b] = True
     return CoalescedSchedule(partners, wtimes, batch_active,
-                             schedule.grad_times.astype(np.float32))
+                             schedule.grad_times.astype(np.float32),
+                             grad_mask=schedule.grad_mask,
+                             alive=schedule.alive)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,19 +438,25 @@ class EventStream:
     host-side: the jit'd loop carries no clock arithmetic.
 
     Shapes (S = steps, n = workers, R = rounds):
-      prologue  (n,) f32
-      partners  (S, n) int32 — identity rows for gradient steps
-      dt_next   (S, n) f32
-      is_grad   (S,) bool
-      grad_pos  (R,) int32   — step index of round r's gradient tick (for
+      prologue   (n,) f32
+      partners   (S, n) int32 — identity rows for gradient steps
+      dt_next    (S, n) f32
+      is_grad    (S,) bool
+      grad_scale (S, n) f32  — gradient-application scale at gradient steps
+                               (straggler thinning x churn); 1.0 elsewhere
+      grad_pos   (R,) int32  — step index of round r's gradient tick (for
                                compacting per-step metrics back to per-round)
+      t_final    (n,) f32    — per-worker clock after the last step (frozen
+                               at detach time for churned workers)
     """
 
     prologue: np.ndarray
     partners: np.ndarray
     dt_next: np.ndarray
     is_grad: np.ndarray
+    grad_scale: np.ndarray
     grad_pos: np.ndarray
+    t_final: np.ndarray
 
     @property
     def steps(self) -> int:
@@ -238,14 +464,22 @@ class EventStream:
 
 
 def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
-    """Flatten a coalesced schedule into an EventStream given start clocks."""
+    """Flatten a coalesced schedule into an EventStream given start clocks.
+
+    Heterogeneous worlds ride along as schedule data: a detached worker's
+    clock never advances (zero dt segments — its row is a fixed point of the
+    replay), a straggler's masked gradient tick still advances its clock and
+    mixing horizon but contributes grad_scale 0.
+    """
     R, B, n = cs.partners.shape
     idx = np.arange(n)
-    partners, dt_next, is_grad, grad_pos = [], [], [], []
+    alive = cs.alive_arr()
+    gscale = cs.grad_scale()
+    partners, dt_next, is_grad, grad_scale, grad_pos = [], [], [], [], []
     prologue = None
     tl = np.array(t0, np.float32).copy()
 
-    def emit(partner, delta, grad):
+    def emit(partner, delta, grad, gs):
         nonlocal prologue
         if prologue is None:
             prologue = delta
@@ -254,7 +488,9 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
         partners.append(partner)
         dt_next.append(np.zeros(n, np.float32))
         is_grad.append(grad)
+        grad_scale.append(gs)
 
+    ones = np.ones(n, np.float32)
     for r in range(R):
         for b in range(B):
             if not cs.batch_active[r, b]:
@@ -263,10 +499,11 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
             delta = np.zeros(n, np.float32)
             delta[inv] = cs.wtimes[r, b, inv] - tl[inv]
             tl[inv] = cs.wtimes[r, b, inv]
-            emit(cs.partners[r, b].astype(np.int32), delta, False)
-        delta = (cs.grad_times[r] - tl).astype(np.float32)
-        tl = cs.grad_times[r].astype(np.float32).copy()
-        emit(idx.astype(np.int32), delta, True)
+            emit(cs.partners[r, b].astype(np.int32), delta, False, ones)
+        adv = alive[r]
+        delta = np.where(adv, cs.grad_times[r] - tl, 0.0).astype(np.float32)
+        tl = np.where(adv, cs.grad_times[r], tl).astype(np.float32)
+        emit(idx.astype(np.int32), delta, True, gscale[r])
         grad_pos.append(len(partners) - 1)
 
     return EventStream(
@@ -274,7 +511,9 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
         partners=np.stack(partners),
         dt_next=np.stack(dt_next),
         is_grad=np.asarray(is_grad, bool),
+        grad_scale=np.stack(grad_scale).astype(np.float32),
         grad_pos=np.asarray(grad_pos, np.int32),
+        t_final=tl.copy(),
     )
 
 

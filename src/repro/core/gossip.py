@@ -27,7 +27,7 @@ import numpy as np
 
 from .a2cid2 import A2CiD2Params, apply_mixing
 from .engine import FlatGossipEngine
-from .graphs import Graph
+from .graphs import Graph, TopologySchedule
 
 PyTree = Any
 
@@ -37,8 +37,12 @@ def matching_bank(graph: Graph) -> np.ndarray:
 
     Returns (M, n) int32: bank[k, i] = partner of worker i in matching k
     (i itself if idle).  Union over k covers every edge exactly once.
+    An edgeless graph (e.g. a fully-churned phase) yields one identity row.
     """
     import networkx as nx
+
+    if not graph.edges:
+        return np.arange(graph.n, dtype=np.int32)[None, :]
 
     G = nx.Graph()
     G.add_nodes_from(range(graph.n))
@@ -67,6 +71,24 @@ def bank_edge_rates(graph: Graph, bank: np.ndarray) -> np.ndarray:
         w[k] = float(np.mean(edge_rs)) if edge_rs else 0.0
     s = w.sum()
     return w / s if s > 0 else np.full(bank.shape[0], 1.0 / bank.shape[0])
+
+
+def phase_banks(tsched: TopologySchedule
+                ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-phase (matching bank, sampling probs) for a time-varying topology.
+
+    Each phase's bank is rebuilt from its *effective* graph (churned workers
+    isolated — their rows are identity in every matching, so a detached
+    worker's flat-buffer row is a fixed point of the gossip loop).  Clock
+    continuity is the trainers' concern: the bank switch itself carries no
+    state, so phases swap by swapping static branch tables between steps.
+    """
+    out = []
+    for ph in tsched.phases:
+        g = ph.effective_graph()
+        bank = matching_bank(g)
+        out.append((bank, bank_edge_rates(g, bank)))
+    return out
 
 
 class GossipMixer:

@@ -120,6 +120,8 @@ class Graph:
         Edges with higher rate are proportionally more likely to be scanned
         first (weighted order), matching the expected Laplacian.
         """
+        if not self.edges:  # e.g. a fully-churned phase
+            return []
         order = rng.permutation(self.num_edges)
         w = np.asarray(self.rates, dtype=np.float64)
         if not np.allclose(w, w[0]):
@@ -141,6 +143,35 @@ class Graph:
         for (i, j) in matching:
             p[i], p[j] = j, i
         return p
+
+    # ---------------------------------------------------------- derivations
+    def with_rates(self, rates) -> "Graph":
+        """Same topology with per-edge rates replaced (heterogeneous worlds:
+        hot links, degraded links).  Rates align with ``self.edges``."""
+        rates = tuple(float(r) for r in np.asarray(rates, dtype=np.float64))
+        return Graph(self.n, self.edges, rates, name=self.name)
+
+    def subgraph(self, active, relabel: bool = False) -> "Graph":
+        """Induced subgraph on the ``active`` worker mask.
+
+        relabel=False keeps all n worker slots (detached workers become
+        isolated nodes — partner arrays stay n-wide, the scenario-engine
+        form); relabel=True compacts to the active workers only (the form
+        on which chi1/chi2 of a churned phase are well defined).
+        """
+        active = np.asarray(active, dtype=bool)
+        if active.shape != (self.n,):
+            raise ValueError(f"active mask must be ({self.n},)")
+        keep = [(e, r) for e, r in zip(self.edges, self.rates)
+                if active[e[0]] and active[e[1]]]
+        edges = tuple(e for e, _ in keep)
+        rates = tuple(r for _, r in keep)
+        if not relabel:
+            return Graph(self.n, edges, rates, name=f"{self.name}|churn")
+        idx = np.cumsum(active) - 1  # old -> new labels
+        edges = tuple((int(idx[i]), int(idx[j])) for (i, j) in edges)
+        return Graph(int(active.sum()), edges, rates,
+                     name=f"{self.name}|churn")
 
 
 # ------------------------------------------------------------------ builders
@@ -204,6 +235,17 @@ def torus_graph(side: int, rate_per_worker: float = 1.0) -> Graph:
     return Graph(n, edges, tuple(r for _ in edges), name="torus")
 
 
+def hypercube_graph(dim: int, rate_per_worker: float = 1.0) -> Graph:
+    """d-dimensional hypercube on n = 2^d workers (paper's well-connected
+    family at n=64 alongside ring/torus); each worker has ``dim`` neighbors
+    => edge rate = rate/dim."""
+    n = 1 << dim
+    edges = tuple(sorted((i, i ^ (1 << k)) for i in range(n)
+                         for k in range(dim) if i < i ^ (1 << k)))
+    r = rate_per_worker / dim
+    return Graph(n, edges, tuple(r for _ in edges), name="hypercube")
+
+
 _BUILDERS = {
     "complete": complete_graph,
     "ring": ring_graph,
@@ -218,6 +260,91 @@ def build_graph(name: str, n: int, rate_per_worker: float = 1.0) -> Graph:
         if side * side != n:
             raise ValueError("torus needs a square worker count")
         return torus_graph(side, rate_per_worker)
+    if name == "hypercube":
+        dim = int(round(np.log2(n)))
+        if (1 << dim) != n:
+            raise ValueError("hypercube needs a power-of-two worker count")
+        return hypercube_graph(dim, rate_per_worker)
     if name not in _BUILDERS:
-        raise ValueError(f"unknown graph '{name}', have {sorted(_BUILDERS)} + torus")
+        raise ValueError(f"unknown graph '{name}', have {sorted(_BUILDERS)}"
+                         " + torus + hypercube")
     return _BUILDERS[name](n, rate_per_worker)
+
+
+# -------------------------------------------------------- topology schedules
+
+@dataclasses.dataclass(frozen=True)
+class TopologyPhase:
+    """One phase of a time-varying topology: a graph held for ``rounds``
+    units of simulated time, with an optional churn mask detaching workers.
+
+    ``active[i] = False`` detaches worker i for the whole phase: it joins no
+    matchings, takes no gradient ticks, and its event clock freezes (the
+    lazy-mixing ODE integrates over the full outage at its first event after
+    rejoin — see DESIGN.md §8)."""
+
+    graph: Graph
+    rounds: int
+    active: tuple[bool, ...] | None = None
+
+    def __post_init__(self):
+        if self.rounds <= 0:
+            raise ValueError("phase needs rounds >= 1")
+        if self.active is not None and len(self.active) != self.graph.n:
+            raise ValueError("active mask must have one entry per worker")
+
+    def active_mask(self) -> np.ndarray:
+        if self.active is None:
+            return np.ones(self.graph.n, dtype=bool)
+        return np.asarray(self.active, dtype=bool)
+
+    def effective_graph(self) -> Graph:
+        """The phase's communication graph with churned workers isolated
+        (n-wide — what scheduling/matching banks consume)."""
+        m = self.active_mask()
+        return self.graph if m.all() else self.graph.subgraph(m)
+
+    def chis(self) -> tuple[float, float]:
+        """(chi1, chi2) of the phase, computed on the active workers only
+        (isolated churned nodes would make the full-n chi1 infinite)."""
+        g = self.graph.subgraph(self.active_mask(), relabel=True)
+        return g.chi1(), g.chi2()
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A sequence of topology phases — ring->exponential switches, churn
+    windows, degraded-link episodes.  ``events.make_topology_schedule``
+    compiles it (plus rate heterogeneity) into one concatenated event
+    schedule that both simulator replay paths consume unchanged."""
+
+    phases: tuple[TopologyPhase, ...]
+
+    def __post_init__(self):
+        if not self.phases:
+            raise ValueError("need at least one phase")
+        ns = {p.graph.n for p in self.phases}
+        if len(ns) != 1:
+            raise ValueError(f"all phases must share one worker count, got {ns}")
+
+    @property
+    def n(self) -> int:
+        return self.phases[0].graph.n
+
+    @property
+    def total_rounds(self) -> int:
+        return sum(p.rounds for p in self.phases)
+
+    def phase_starts(self) -> np.ndarray:
+        """Start round of each phase (cumulative durations, leading 0)."""
+        return np.concatenate(
+            [[0], np.cumsum([p.rounds for p in self.phases])[:-1]]).astype(int)
+
+    def phase_at(self, rnd: int) -> int:
+        """Index of the phase covering simulated round ``rnd``."""
+        if not (0 <= rnd < self.total_rounds):
+            raise ValueError(f"round {rnd} outside [0, {self.total_rounds})")
+        return int(np.searchsorted(self.phase_starts(), rnd, side="right") - 1)
+
+    def phase_chis(self) -> list[tuple[float, float]]:
+        return [p.chis() for p in self.phases]

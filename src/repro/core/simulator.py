@@ -88,22 +88,31 @@ class Simulator:
         return (x, x_tilde, t_last), None
 
     def _round(self, state: SimState, round_sched) -> tuple[SimState, dict]:
-        partners, times, mask, grad_times = round_sched
+        partners, times, mask, grad_times, grad_scale, alive = round_sched
         carry = (state.x, state.x_tilde, state.t_last)
         carry, _ = jax.lax.scan(self._comm_event, carry, (partners, times, mask))
         x, x_tilde, t_last = carry
 
-        # gradient event per worker at its own clock
-        dt = grad_times - t_last
+        # gradient event per worker at its own clock; detached (not-alive)
+        # workers neither advance their clock nor mix, stragglers (alive but
+        # grad_scale 0) advance and mix but skip the gradient
+        dt = jnp.where(alive, grad_times - t_last, 0.0)
         x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
         n = grad_times.shape[0]
         key, sub = jax.random.split(state.key)
         keys = jax.random.split(sub, n)
         losses, grads = jax.vmap(self.grad_fn)(x, keys, jnp.arange(n))
-        x = jax.tree.map(lambda p, g: p - self.gamma * g, x, grads)
-        x_tilde = jax.tree.map(lambda p, g: p - self.gamma * g, x_tilde, grads)
 
-        new_state = SimState(x, x_tilde, grad_times, key)
+        def upd(p, g):
+            s = jnp.reshape(grad_scale, grad_scale.shape
+                            + (1,) * (g.ndim - 1)).astype(g.dtype)
+            return p - self.gamma * (s * g)
+
+        x = jax.tree.map(upd, x, grads)
+        x_tilde = jax.tree.map(upd, x_tilde, grads)
+
+        new_state = SimState(x, x_tilde,
+                             jnp.where(alive, grad_times, t_last), key)
         metrics = {
             "loss": jnp.mean(losses),
             "consensus": consensus_distance(x),
@@ -116,12 +125,12 @@ class Simulator:
     def _engine_step(self, engine: FlatGossipEngine, n: int, carry, xs):
         """One event-stream step: a fused comm batch OR a gradient tick,
         each followed by the precomputed mixing segment to the next step."""
-        partner, dt_nxt, is_grad = xs
+        partner, dt_nxt, is_grad, gscale = xs
 
         def comm(args):
             bx, bxt, key = args
             bx, bxt = engine.batch(bx, bxt, partner, dt_nxt)
-            z = jnp.zeros(())
+            z = jnp.zeros((), jnp.float32)
             return (bx, bxt, key), (z, z, z)
 
         def grad(args):
@@ -131,13 +140,15 @@ class Simulator:
             losses, grads = jax.vmap(self.grad_fn)(engine.unpack(bx), keys,
                                                    jnp.arange(n))
             g = engine.pack(grads)
+            # grad_scale masks straggler/churned ticks (1.0 elsewhere)
+            g = gscale[:, None].astype(g.dtype) * g
             bx = bx - self.gamma * g
             bxt = bxt - self.gamma * g
             mean = jnp.mean(bx, axis=0, keepdims=True)
             # padding columns are zero across workers: they add 0 to both
-            loss = jnp.mean(losses)
-            consensus = jnp.sum((bx - mean) ** 2) / n
-            mean_norm = jnp.sum(mean ** 2)
+            loss = jnp.mean(losses).astype(jnp.float32)
+            consensus = (jnp.sum((bx - mean) ** 2) / n).astype(jnp.float32)
+            mean_norm = jnp.sum(mean ** 2).astype(jnp.float32)
             bx, bxt = engine.mix(bx, bxt, dt_nxt)
             return (bx, bxt, key), (loss, consensus, mean_norm)
 
@@ -154,7 +165,8 @@ class Simulator:
     @partial(jax.jit, static_argnums=0)
     def _run_coalesced_jit(self, state: SimState, stream_arrays
                            ) -> tuple[SimState, SimTrace]:
-        prologue, partners, dt_next, is_grad, grad_pos, t_final = stream_arrays
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
                                              stacked=True,
                                              backend=self.backend)
@@ -164,7 +176,7 @@ class Simulator:
         n = prologue.shape[0]
         (bx, bxt, key), ys = jax.lax.scan(
             partial(self._engine_step, engine, n), (bx, bxt, state.key),
-            (partners, dt_next, is_grad))
+            (partners, dt_next, is_grad, grad_scale))
         loss, consensus, mean_norm = ys
         final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
         # compact per-step metrics back to per-round (gradient-tick rows)
@@ -181,8 +193,16 @@ class Simulator:
                                   np.asarray(state.t_last))
         return (jnp.asarray(stream.prologue), jnp.asarray(stream.partners),
                 jnp.asarray(stream.dt_next), jnp.asarray(stream.is_grad),
+                jnp.asarray(stream.grad_scale),
                 jnp.asarray(stream.grad_pos),
-                jnp.asarray(sched.grad_times[-1]))
+                jnp.asarray(stream.t_final))
+
+    def reference_arrays(self, sched: Schedule):
+        """Schedule arrays for the per-event reference replay (``run``)."""
+        return (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
+                jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times),
+                jnp.asarray(sched.grad_scale()),
+                jnp.asarray(sched.alive_arr()))
 
     def run_coalesced(self, state: SimState, stream_arrays
                       ) -> tuple[SimState, SimTrace]:
@@ -200,9 +220,7 @@ class Simulator:
         if engine:
             return self.run_coalesced(state, self.coalesced_arrays(state,
                                                                    sched))
-        arrays = (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
-                  jnp.asarray(sched.event_mask), jnp.asarray(sched.grad_times))
-        return self.run(state, arrays)
+        return self.run(state, self.reference_arrays(sched))
 
 
 # --------------------------------------------------------------- AR-SGD ref

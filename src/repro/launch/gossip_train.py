@@ -37,6 +37,19 @@ from ..optim.optimizers import Optimizer
 PyTree = Any
 
 
+def _rate_vec(grad_rates, n: int) -> jax.Array | None:
+    """Validated per-worker gradient-rate vector (None = homogeneous).
+
+    A mis-sized tuple must raise here: a short vector would otherwise
+    gather with silent index clamping inside the step."""
+    if grad_rates is None:
+        return None
+    if len(grad_rates) != n:
+        raise ValueError(f"grad_rates must have {n} entries, "
+                         f"got {len(grad_rates)}")
+    return jnp.asarray(grad_rates, jnp.float32)
+
+
 class GossipTrainState(NamedTuple):
     params: PyTree       # x   — per-worker replica (sharded over data/model)
     momentum: PyTree     # x~  — the A2CiD2 continuous-momentum buffer
@@ -58,6 +71,11 @@ class GossipTrainer:
     comms_per_step: int = 1
     axis_name: str = "worker"
     backend: str = "auto"  # fused gossip-kernel backend for the event loop
+    # per-worker gradient rates (straggler clocks): worker i's grad events
+    # arrive at Poisson rate grad_rates[i] — its inter-event gaps are
+    # Exp(1)/rate, the time-dilation realization of the same rate process
+    # the simulator expresses by tick thinning (DESIGN.md §8).  None = all 1.
+    grad_rates: tuple[float, ...] | None = None
 
     def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
         return GossipTrainState(
@@ -73,6 +91,7 @@ class GossipTrainer:
         mixer = GossipMixer(self.graph, self.acid, self.axis_name,
                             backend=self.backend)
         n_events = self.comms_per_step
+        rates = _rate_vec(self.grad_rates, self.graph.n)
 
         def step(state: GossipTrainState, batch: PyTree):
             key, k_ev, k_dt = jax.random.split(state.key, 3)
@@ -84,6 +103,8 @@ class GossipTrainer:
             # (k_ev) are global and shared by construction.
             wid = jax.lax.axis_index(self.axis_name)
             dt_grad = jax.random.exponential(jax.random.fold_in(k_dt, wid), ())
+            if rates is not None:
+                dt_grad = dt_grad / rates[wid]
             x, xt = mixer.mix(x, xt, dt_grad)
             (loss, metrics), grads = jax.value_and_grad(
                 self.loss_fn, has_aux=True)(x, batch)
@@ -168,6 +189,9 @@ class StackedGossipTrainer:
     lr: float = 0.1
     comms_per_step: int = 1
     backend: str = "auto"  # fused gossip-kernel backend for the event loop
+    # per-worker gradient rates (straggler clocks) — see GossipTrainer;
+    # matches events.make_schedule(grad_rates=...) in distribution
+    grad_rates: tuple[float, ...] | None = None
 
     def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
         n = self.graph.n
@@ -189,11 +213,17 @@ class StackedGossipTrainer:
         E = self.comms_per_step
         acid = self.acid
 
+        rate_vec = _rate_vec(self.grad_rates, n)
+
         def step(state: StackedGossipState, batch: PyTree):
             key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
             x, xt = state.x, state.x_tilde
-            # per-worker gradient-event clocks ~ Exp(1)
+            # per-worker gradient-event clocks ~ Exp(1)/rate_i: stragglers
+            # (rate < 1) see longer inter-gradient gaps — the same rate
+            # process the simulator's schedule expresses by tick thinning
             dts = jax.random.exponential(k_dt, (n,))
+            if rate_vec is not None:
+                dts = dts / rate_vec
             x, xt = apply_mixing(x, xt, acid.eta, dts)
             (losses, _aux), grads = jax.vmap(self.grad_fn)(x, batch)
             x2, opt = jax.vmap(
@@ -289,10 +319,14 @@ class StackedGossipTrainer:
 
         from ..core.a2cid2 import apply_mixing
 
+        rate_vec = _rate_vec(self.grad_rates, n)
+
         def step(state: StackedGossipState, batch: PyTree):
             key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
             x, xt = state.x, state.x_tilde
             dts = jax.random.exponential(k_dt, (n,))
+            if rate_vec is not None:
+                dts = dts / rate_vec
             x, xt = apply_mixing(x, xt, acid.eta, dts)
             (losses, _aux), grads = jax.vmap(self.grad_fn)(x, batch)
             x2, opt = jax.vmap(

@@ -240,8 +240,10 @@ def test_layout_infers_native_dtype_for_uniform_trees():
     layout = FlatLayout.from_pytree(tree)
     assert layout.buf_dtype == jnp.dtype(jnp.bfloat16)
     assert layout.pack_local(tree).dtype == jnp.bfloat16
-    # mixed sub-f32 floats widen to f32, not further
-    mixed = {"w": jnp.zeros((2,), jnp.bfloat16), "b": jnp.zeros((2,))}
+    # mixed sub-f32 floats widen to f32, not further (explicit f32 leaf so
+    # the assertion is mode-independent under JAX_ENABLE_X64)
+    mixed = {"w": jnp.zeros((2,), jnp.bfloat16),
+             "b": jnp.zeros((2,), jnp.float32)}
     assert FlatLayout.from_pytree(mixed).buf_dtype == jnp.dtype(jnp.float32)
 
 

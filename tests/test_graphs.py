@@ -2,10 +2,11 @@
 import numpy as np
 import pytest
 
-from repro.core import build_graph, complete_graph, exponential_graph, ring_graph
+from repro.core import (build_graph, complete_graph, exponential_graph,
+                        hypercube_graph, ring_graph)
 
 
-GRAPHS = ["complete", "ring", "exponential", "star"]
+GRAPHS = ["complete", "ring", "exponential", "star", "hypercube"]
 
 
 @pytest.mark.parametrize("name", GRAPHS)
@@ -66,6 +67,78 @@ def test_matchings_are_valid(n, seed):
         assert tuple(sorted(e)) in edge_set         # real edges only
     p = g.matching_to_partner(m)
     assert np.all(p[p] == np.arange(n))             # involution
+
+
+# ------------------------------------------------- closed-form chi values
+#
+# With the builders' per-worker rate normalization, chi1 = 1/lambda_2 of the
+# rate-weighted Laplacian has a closed form per family, and chi2 (half the
+# max effective resistance over edges) follows from Foster's theorem for
+# edge-transitive graphs: all |E| edge resistances are equal and sum to
+# (n-1)/r, so chi2 = (n-1) / (2 |E| r) for uniform edge rate r.
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_ring_chi_closed_form(n):
+    g = ring_graph(n)  # edge rate 1/2 => lambda_2 = 2r(1-cos(2pi/n))
+    assert g.chi1() == pytest.approx(1.0 / (1.0 - np.cos(2 * np.pi / n)),
+                                     rel=1e-9)
+    assert g.chi2() == pytest.approx((n - 1) / n, rel=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_complete_chi_closed_form(n):
+    g = complete_graph(n)  # edge rate 1/(n-1) => lambda_2 = n/(n-1)
+    assert g.chi1() == pytest.approx((n - 1) / n, rel=1e-9)
+    assert g.chi2() == pytest.approx((n - 1) / n, rel=1e-6)
+
+
+@pytest.mark.parametrize("dim", [3, 4, 6])
+def test_hypercube_chi_closed_form(dim):
+    g = hypercube_graph(dim)  # edge rate 1/d => lambda_2 = 2/d
+    n = 1 << dim
+    assert g.n == n and g.num_edges == dim * n // 2
+    assert g.chi1() == pytest.approx(dim / 2.0, rel=1e-9)
+    assert g.chi2() == pytest.approx((n - 1) / n, rel=1e-6)
+    # Laplacian spectrum is {2k/d * d choose-k multiplicities}: check the
+    # extreme eigenvalue too
+    lam = np.linalg.eigvalsh(g.laplacian())
+    assert lam[-1] == pytest.approx(2.0, rel=1e-9)
+
+
+def test_hetero_empirical_laplacian_matches_def31():
+    """A long per-edge heterogeneous schedule realizes the rate-weighted
+    instantaneous Laplacian of Def 3.1 (the scenario-engine counterpart of
+    the paper's App E.2 uniformity check)."""
+    from repro.core import empirical_laplacian, make_schedule
+
+    g = ring_graph(8)
+    rates = np.linspace(0.2, 1.0, g.num_edges)
+    sched = make_schedule(g, rounds=1500, comms_per_grad=1.0, seed=1,
+                          edge_rates=rates)
+    L_emp = empirical_laplacian(sched)
+    L = g.with_rates(rates).laplacian()
+    nz = np.abs(L) > 1e-9
+    assert np.all((np.abs(L_emp) > 1e-9) == nz)
+    np.testing.assert_allclose(L_emp[nz], L[nz], rtol=0.3)
+    # and the hot edge really does gossip more than the cold one
+    e_cold, e_hot = g.edges[0], g.edges[-1]
+    assert -L_emp[e_hot[0], e_hot[1]] > 2.0 * -L_emp[e_cold[0], e_cold[1]]
+
+
+def test_subgraph_and_with_rates():
+    g = ring_graph(8)
+    h = g.with_rates(np.arange(1, 9, dtype=float))
+    assert h.edges == g.edges and h.rates == tuple(float(r)
+                                                   for r in range(1, 9))
+    active = np.ones(8, bool)
+    active[0] = False
+    s = g.subgraph(active)
+    assert s.n == 8 and all(0 not in e for e in s.edges)
+    # relabeled: ring minus one node is a 7-node path — still connected,
+    # and chi1/chi2 are finite (what TopologyPhase.chis computes)
+    r = g.subgraph(active, relabel=True)
+    assert r.n == 7 and r.is_connected()
+    assert 0 < r.chi2() <= r.chi1() < np.inf
 
 
 def test_matching_bank_covers_all_edges():

@@ -1,0 +1,323 @@
+"""Heterogeneous-world scenario engine: reduction-to-homogeneous equivalence,
+straggler clocks, churn masks, and time-varying topologies (see DESIGN.md §8).
+
+The contract under test: every heterogeneous axis is pure schedule data, so
+(a) uniform rates reproduce the homogeneous schedule bit-for-bit, (b) a
+single-phase TopologySchedule is indistinguishable from the static-Graph
+path, and (c) the flat-buffer engine and the per-event reference replay any
+heterogeneous schedule identically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Simulator, TopologyPhase, TopologySchedule,
+                        build_graph, coalesce_schedule, concat_schedules,
+                        make_schedule, make_topology_schedule,
+                        params_from_graph, phase_banks, ring_graph)
+
+SCHED_FIELDS = ("partners", "event_times", "event_mask", "grad_times")
+
+
+def _quad_grad_fn(b):
+    def grad_fn(x, key, wid):
+        # cast keeps the state dtype stable when JAX_ENABLE_X64 makes the
+        # random targets f64 (this suite runs in the x64 CI job)
+        g = (x - b[wid]).astype(x.dtype)
+        return 0.5 * jnp.sum(g ** 2), g
+    return grad_fn
+
+
+def _sim(b, g, *, accelerated=True, backend="ref", gamma=0.05):
+    return Simulator(_quad_grad_fn(b), params_from_graph(g, accelerated),
+                     gamma=gamma, backend=backend)
+
+
+# ------------------------------------------------- reduction to homogeneous
+
+def test_uniform_rates_reduce_bit_for_bit():
+    """grad_rates=1 and edge_rates=graph.rates through the new API must
+    reproduce the homogeneous schedule exactly (heterogeneity draws come
+    from a separate rng stream, so the main stream is untouched)."""
+    g = ring_graph(16)
+    hom = make_schedule(g, rounds=40, comms_per_grad=1.5, seed=9)
+    het = make_schedule(g, rounds=40, comms_per_grad=1.5, seed=9,
+                        grad_rates=np.ones(16),
+                        edge_rates=np.asarray(g.rates))
+    for f in SCHED_FIELDS:
+        np.testing.assert_array_equal(getattr(hom, f), getattr(het, f))
+    assert hom.grad_mask is None and hom.alive is None
+    assert het.grad_mask is not None and het.grad_mask.all()
+    np.testing.assert_array_equal(hom.grad_scale(), het.grad_scale())
+
+
+def test_single_phase_topology_matches_static_schedule():
+    g = ring_graph(16)
+    hom = make_schedule(g, rounds=30, comms_per_grad=1.0, seed=4)
+    ts = make_topology_schedule(TopologySchedule((TopologyPhase(g, 30),)),
+                                comms_per_grad=1.0, seed=4)
+    for f in SCHED_FIELDS:
+        np.testing.assert_array_equal(getattr(hom, f), getattr(ts, f))
+    assert ts.alive is None
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_single_phase_topology_matches_static_run(engine):
+    """Same dynamics through Simulator.run_schedule on both backends."""
+    n, d = 8, 12
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    g = ring_graph(n)
+    sim = _sim(b, g)
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(2))
+    hom = make_schedule(g, rounds=15, comms_per_grad=1.0, seed=4)
+    ts = make_topology_schedule(TopologySchedule((TopologyPhase(g, 15),)),
+                                comms_per_grad=1.0, seed=4)
+    fin_h, tr_h = sim.run_schedule(st, hom, engine=engine)
+    fin_t, tr_t = sim.run_schedule(st, ts, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin_h.x), np.asarray(fin_t.x))
+    np.testing.assert_array_equal(np.asarray(tr_h.consensus),
+                                  np.asarray(tr_t.consensus))
+
+
+def test_uniform_grad_rates_same_dynamics_through_engine():
+    """StackedGossipTrainer with grad_rates=1 == grad_rates=None, same key."""
+    from repro.launch.gossip_train import StackedGossipTrainer
+    from repro.optim import sgd
+
+    g = ring_graph(4)
+
+    def grad_fn(p, batch):
+        return (0.5 * jnp.sum((p["w"] - batch) ** 2), None), \
+            {"w": p["w"] - batch}
+
+    def run(grad_rates):
+        tr = StackedGossipTrainer(grad_fn,
+                                  sgd(momentum=0.0, weight_decay=0.0), g,
+                                  params_from_graph(g, True),
+                                  comms_per_step=2, backend="ref",
+                                  grad_rates=grad_rates)
+        state = tr.init({"w": jnp.zeros((3,), jnp.float32)},
+                        jax.random.PRNGKey(0))
+        batch = jnp.ones((4, 3), jnp.float32)
+        state, m = jax.jit(tr.make_step())(state, batch)
+        return np.asarray(state.x["w"]), float(m["loss"])
+
+    x_none, l_none = run(None)
+    x_ones, l_ones = run((1.0, 1.0, 1.0, 1.0))
+    np.testing.assert_array_equal(x_none, x_ones)
+    assert l_none == l_ones
+
+
+# ----------------------------------------------- heterogeneous equivalence
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_engine_matches_reference_on_hetero_world(backend):
+    """The hard equivalence: straggler thinning + per-edge rates + phase
+    switch + churn, replayed by the fused engine and the per-event
+    reference, must agree on params, momentum, clocks, and traces."""
+    n, d = 8, 12
+    rounds = 6 if backend == "pallas_interpret" else 12
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    ring = ring_graph(n)
+    active = np.ones(n, bool)
+    active[2] = False
+    ts = TopologySchedule((
+        TopologyPhase(ring, rounds),
+        TopologyPhase(build_graph("exponential", n), rounds, tuple(active)),
+    ))
+    sched = make_topology_schedule(ts, comms_per_grad=1.3, seed=5,
+                                   grad_rates=np.linspace(0.3, 1.0, n),
+                                   per_edge=True)
+    sim = _sim(b, ring, backend=backend)
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(2))
+    fin_r, tr_r = sim.run_schedule(st, sched, engine=False)
+    fin_e, tr_e = sim.run_schedule(st, sched, engine=True)
+    np.testing.assert_allclose(fin_e.x, fin_r.x, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_e.x_tilde, fin_r.x_tilde,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_e.t_last, fin_r.t_last, atol=1e-6)
+    np.testing.assert_allclose(tr_e.loss, tr_r.loss, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(tr_e.consensus, tr_r.consensus,
+                               atol=1e-5, rtol=1e-4)
+
+
+# -------------------------------------------------- straggler + churn laws
+
+def test_zero_rate_straggler_only_moves_by_gossip():
+    """A grad_rate-0 worker never applies a gradient: with communication
+    also disabled for it (churned), its row must be exactly frozen; with
+    gossip on, it still moves (partners pull it) — the two differ."""
+    n, d = 6, 5
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    g = ring_graph(n)
+    rates = np.ones(n)
+    rates[4] = 0.0
+    sim = _sim(b, g)
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(2))
+    sched = make_schedule(g, rounds=25, comms_per_grad=1.0, seed=0,
+                          grad_rates=rates)
+    assert not sched.grad_mask[:, 4].any()
+    fin, _ = sim.run_schedule(st, sched)
+    # gossip still moves the straggler toward its neighbors' params
+    assert float(jnp.sum(jnp.abs(fin.x[4]))) > 0.0
+
+    active = np.ones(n, bool)
+    active[4] = False
+    ts = TopologySchedule((TopologyPhase(g, 25, tuple(active)),))
+    churned = make_topology_schedule(ts, comms_per_grad=1.0, seed=0)
+    fin_c, _ = sim.run_schedule(st, churned)
+    np.testing.assert_array_equal(np.asarray(fin_c.x)[4],
+                                  np.asarray(st.x)[4])
+    np.testing.assert_array_equal(np.asarray(fin_c.x_tilde)[4],
+                                  np.asarray(st.x_tilde)[4])
+    np.testing.assert_array_equal(np.asarray(fin_c.t_last)[4], 0.0)
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_churned_phase_rows_are_fixed_points(engine):
+    """During a churn phase the detached worker's row must not change; after
+    rejoin it must move again.  Holds on both replay paths."""
+    n, d = 8, 6
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    g = ring_graph(n)
+    active = np.ones(n, bool)
+    active[5] = False
+    ts = TopologySchedule((
+        TopologyPhase(g, 10),
+        TopologyPhase(g, 10, tuple(active)),
+        TopologyPhase(g, 10),
+    ))
+    sim = _sim(b, g)
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(2))
+    # replay phase 1 alone, then the full three phases: worker 5's row at
+    # the end of phase 2 must equal its row at the end of phase 1
+    p1 = make_topology_schedule(TopologySchedule(ts.phases[:1]), seed=7)
+    p12 = concat_schedules([
+        make_schedule(g, 10, seed=7),
+        make_schedule(g, 10, seed=8, t_offset=10.0, active=active)])
+    fin1, _ = sim.run_schedule(st, p1, engine=engine)
+    fin2, _ = sim.run_schedule(st, p12, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin1.x)[5],
+                                  np.asarray(fin2.x)[5])
+    np.testing.assert_array_equal(np.asarray(fin1.t_last)[5],
+                                  np.asarray(fin2.t_last)[5])
+    # full schedule: rejoined worker moves again in phase 3
+    full = make_topology_schedule(ts, seed=7)
+    fin3, _ = sim.run_schedule(st, full, engine=engine)
+    assert not np.array_equal(np.asarray(fin3.x)[5], np.asarray(fin2.x)[5])
+
+
+def test_straggler_thinning_statistics():
+    """Thinned tick counts track the requested per-worker rates."""
+    n = 8
+    g = ring_graph(n)
+    rates = np.linspace(0.1, 1.0, n)
+    sched = make_schedule(g, rounds=2000, comms_per_grad=0.5, seed=0,
+                          grad_rates=rates)
+    freq = sched.grad_mask.mean(axis=0)
+    np.testing.assert_allclose(freq, rates, atol=0.05)
+
+
+def test_edge_rates_compose_with_churn():
+    """edge_rates align with the FULL graph's edges; churn filters both
+    together (rate override must apply before the subgraph)."""
+    n = 8
+    g = ring_graph(n)
+    rates = np.linspace(0.2, 1.0, g.num_edges)
+    active = np.ones(n, bool)
+    active[0] = False
+    sched = make_schedule(g, rounds=30, comms_per_grad=1.0, seed=0,
+                          edge_rates=rates, active=active)
+    # the detached worker never communicates, hot surviving edges still do
+    assert not any(sched.partners[r, e, 0] != 0
+                   for r in range(sched.rounds)
+                   for e in range(sched.partners.shape[1]))
+    assert sched.num_comm_events() > 0
+
+
+def test_fully_churned_phase_freezes_everything():
+    """An all-dead phase yields an edgeless graph (sample_matching must not
+    crash) and freezes every row and clock on both backends."""
+    n, d = 6, 4
+    g = ring_graph(n)
+    ts = TopologySchedule((TopologyPhase(g, 4, tuple([False] * n)),))
+    sched = make_topology_schedule(ts, seed=0)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    sim = _sim(b, g)
+    st = sim.init(jnp.ones(d, jnp.float32), n, jax.random.PRNGKey(2))
+    for engine in (True, False):
+        fin, _ = sim.run_schedule(st, sched, engine=engine)
+        np.testing.assert_array_equal(np.asarray(fin.x), np.asarray(st.x))
+        np.testing.assert_array_equal(np.asarray(fin.t_last),
+                                      np.asarray(st.t_last))
+
+
+# ------------------------------------------------------- topology plumbing
+
+def test_topology_schedule_validation_and_lookup():
+    g = ring_graph(8)
+    ts = TopologySchedule((TopologyPhase(g, 5), TopologyPhase(g, 7)))
+    assert ts.total_rounds == 12 and ts.n == 8
+    assert [ts.phase_at(r) for r in (0, 4, 5, 11)] == [0, 0, 1, 1]
+    with pytest.raises(ValueError):
+        TopologySchedule(())
+    with pytest.raises(ValueError):
+        TopologySchedule((TopologyPhase(g, 5),
+                          TopologyPhase(ring_graph(4), 5)))
+    with pytest.raises(ValueError):
+        TopologyPhase(g, 0)
+
+
+def test_phase_banks_rebuild_per_phase():
+    """Each phase's matching bank covers exactly its effective edge set —
+    churned workers are identity in every matching of their phase."""
+    g = ring_graph(8)
+    active = np.ones(8, bool)
+    active[0] = False
+    ts = TopologySchedule((
+        TopologyPhase(g, 5),
+        TopologyPhase(build_graph("exponential", 8), 5, tuple(active)),
+    ))
+    banks = phase_banks(ts)
+    assert len(banks) == 2
+    for (bank, probs), ph in zip(banks, ts.phases):
+        covered = set()
+        for k in range(bank.shape[0]):
+            assert np.all(bank[k][bank[k]] == np.arange(8))  # involutions
+            for i, j in enumerate(bank[k]):
+                if int(j) != i:
+                    covered.add((min(i, int(j)), max(i, int(j))))
+        assert covered == {tuple(sorted(e))
+                           for e in ph.effective_graph().edges}
+        np.testing.assert_allclose(probs.sum(), 1.0)
+    # churned worker 0 is idle in every matching of phase 2
+    assert np.all(banks[1][0][:, 0] == 0)
+
+
+def test_multi_phase_coalesce_and_comm_counts():
+    """Coalescing a concatenated multi-phase schedule preserves the per-
+    worker event lists exactly (same invariant as the single-phase suite)."""
+    n = 8
+    active = np.ones(n, bool)
+    active[1] = False
+    ts = TopologySchedule((
+        TopologyPhase(ring_graph(n), 12),
+        TopologyPhase(build_graph("complete", n), 12, tuple(active)),
+    ))
+    sched = make_topology_schedule(ts, comms_per_grad=2.0, seed=3)
+    cs = coalesce_schedule(sched)
+    for w in range(n):
+        raw = [(float(sched.event_times[r, e]), int(sched.partners[r, e, w]))
+               for r in range(sched.rounds)
+               for e in range(sched.partners.shape[1])
+               if sched.event_mask[r, e] and sched.partners[r, e, w] != w]
+        coal = [(float(cs.wtimes[r, b, w]), int(cs.partners[r, b, w]))
+                for r in range(cs.rounds)
+                for b in range(cs.partners.shape[1])
+                if cs.batch_active[r, b] and cs.partners[r, b, w] != w]
+        assert raw == coal
+    # the churned worker has no events at all in the second phase
+    assert not any(sched.partners[r, e, 1] != 1
+                   for r in range(12, 24)
+                   for e in range(sched.partners.shape[1]))

@@ -83,6 +83,80 @@ def test_mixing_kernel_hypothesis_sweep(n, eta, dt, alpha_t, seed):
     np.testing.assert_allclose(ot, rt, atol=1e-4)
 
 
+# --------------------------------------------------- heterogeneous worlds
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), rate_lo=st.floats(0.05, 0.9),
+       comms=st.floats(0.3, 2.5))
+def test_hetero_coalesce_preserves_events_and_elapsed_time(seed, rate_lo,
+                                                           comms):
+    """Under straggler + per-edge rate heterogeneity, coalescing preserves
+    the per-worker (time, partner) event multiset exactly, and the flattened
+    stream's per-worker elapsed time telescopes to t_final - t0."""
+    from repro.core import coalesce_schedule, coalesced_stream, make_schedule
+
+    n = 8
+    g = ring_graph(n)
+    rng = np.random.default_rng(seed)
+    sched = make_schedule(
+        g, rounds=12, comms_per_grad=comms, seed=seed,
+        grad_rates=rng.uniform(rate_lo, 1.0, size=n),
+        edge_rates=rng.uniform(0.1, 1.0, size=g.num_edges))
+    cs = coalesce_schedule(sched)
+    for w in range(n):
+        raw = [(float(sched.event_times[r, e]), int(sched.partners[r, e, w]))
+               for r in range(sched.rounds)
+               for e in range(sched.partners.shape[1])
+               if sched.event_mask[r, e] and sched.partners[r, e, w] != w]
+        coal = [(float(cs.wtimes[r, b, w]), int(cs.partners[r, b, w]))
+                for r in range(cs.rounds)
+                for b in range(cs.partners.shape[1])
+                if cs.batch_active[r, b] and cs.partners[r, b, w] != w]
+        assert raw == coal
+    t0 = np.zeros(n, np.float32)
+    stream = coalesced_stream(cs, t0)
+    elapsed = stream.prologue + stream.dt_next.sum(axis=0)
+    np.testing.assert_allclose(elapsed, stream.t_final - t0, atol=1e-3)
+    # gradient multiset: grad_scale at gradient steps == thinned tick mask
+    np.testing.assert_array_equal(
+        stream.grad_scale[stream.is_grad], sched.grad_scale())
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 300), dead=st.integers(0, 7))
+def test_churn_masked_rows_are_engine_fixed_points(seed, dead):
+    """A churned worker's flat-buffer row is a fixed point of the engine
+    replay, for any schedule realization and any choice of dead worker."""
+    from repro.core import (Simulator, TopologyPhase, TopologySchedule,
+                            make_topology_schedule, params_from_graph)
+
+    n, d = 8, 6
+    active = np.ones(n, bool)
+    active[dead] = False
+    g = ring_graph(n)
+    sched = make_topology_schedule(
+        TopologySchedule((TopologyPhase(g, 8, tuple(active)),)),
+        comms_per_grad=1.0, seed=seed)
+    b = jax.random.normal(jax.random.PRNGKey(seed), (n, d)).astype(
+        jnp.float32)
+
+    def grad_fn(x, key, wid):
+        gr = (x - b[wid]).astype(x.dtype)
+        return 0.5 * jnp.sum(gr ** 2), gr
+
+    sim = Simulator(grad_fn, params_from_graph(g, True), gamma=0.05,
+                    backend="ref")
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(1))
+    fin, _ = sim.run_schedule(st, sched, engine=True)
+    np.testing.assert_array_equal(np.asarray(fin.x)[dead],
+                                  np.asarray(st.x)[dead])
+    np.testing.assert_array_equal(np.asarray(fin.x_tilde)[dead],
+                                  np.asarray(st.x_tilde)[dead])
+    # everyone else took gradient steps
+    others = np.delete(np.arange(n), dead)
+    assert np.all(np.any(np.asarray(fin.x)[others] != 0.0, axis=1))
+
+
 # --------------------------------------------------------------- substrates
 
 @settings(max_examples=20, deadline=None)
