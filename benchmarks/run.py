@@ -6,8 +6,14 @@ CPU-scale analogue via the event simulator and reports the decisive derived
 quantity; timing-style artifacts (Tab 2/3/6) are measured or analytically
 derived from the event model.
 
-    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run                    # all
     PYTHONPATH=src python -m benchmarks.run --only table2
+    PYTHONPATH=src python -m benchmarks.run --only topology --seed 7
+    PYTHONPATH=src python -m benchmarks.run --only topology --small  # CI
+
+``--seed`` threads into every world compilation; ``--only topology`` emits
+``BENCH_topology.json`` with a serialized ``World`` spec and a wall-clock
+axis (bandwidth-aware LinkModel) per curve.
 """
 from __future__ import annotations
 
@@ -39,14 +45,15 @@ def _quad_grad_fn(b, noise=0.05):
 
 
 def _sim_consensus(graph_name, n, accel, rate, rounds=250, d=64, seed=0):
-    from repro.core import (Simulator, build_graph, make_schedule,
-                            params_from_graph)
+    from repro.core import Simulator, World, build_graph, params_from_graph
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     g = build_graph(graph_name, n)
     sim = Simulator(_quad_grad_fn(b), params_from_graph(g, accelerated=accel),
                     gamma=0.05)
     st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
-    sched = make_schedule(g, rounds=rounds, comms_per_grad=rate, seed=seed)
+    # compile host-side BEFORE the timer: the us column measures the replay
+    # only, comparable with pre-World artifacts
+    sched = World(topology=g, comms_per_grad=rate).compile(rounds, seed=seed)
     t0 = time.perf_counter()
     _, trace = sim.run_schedule(st, sched)
     us = (time.perf_counter() - t0) * 1e6
@@ -55,7 +62,7 @@ def _sim_consensus(graph_name, n, accel, rate, rounds=250, d=64, seed=0):
 
 # ----------------------------------------------------------- paper artifacts
 
-def bench_table2_comm_rates() -> list[str]:
+def bench_table2_comm_rates(seed: int = 0) -> list[str]:
     """Tab 2: #communications per time unit for A2CiD2's rate condition
     sqrt(chi1 chi2)=O(1), per graph (analytic, from the Laplacian)."""
     from repro.core import build_graph
@@ -73,10 +80,10 @@ def bench_table2_comm_rates() -> list[str]:
     return rows
 
 
-def bench_table3_training_time() -> list[str]:
+def bench_table3_training_time(seed: int = 0) -> list[str]:
     """Tab 3/6: async event timeline vs synchronous barriers — derived idle
     fraction of the slowest worker under jittered step durations."""
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     n, steps = 16, 200
     # per-step durations: lognormal jitter around 1 (stragglers)
     dur = rng.lognormal(mean=0.0, sigma=0.15, size=(steps, n))
@@ -88,23 +95,23 @@ def bench_table3_training_time() -> list[str]:
     return [f"table3_async_speedup,{us:.1f},{speedup:.3f}"]
 
 
-def bench_table4_cifar_topologies() -> list[str]:
+def bench_table4_cifar_topologies(seed: int = 0) -> list[str]:
     """Tab 4 analogue: final consensus distance per topology, w/ and w/o
     A2CiD2 (ring shows the gap; complete does not)."""
     rows = []
     for name in ("complete", "ring"):
         for accel in (False, True):
-            us, cons = _sim_consensus(name, 16, accel, 1.0)
+            us, cons = _sim_consensus(name, 16, accel, 1.0, seed=seed)
             tag = "acid" if accel else "base"
             rows.append(f"table4_consensus_{name}_{tag},{us:.0f},{cons:.4f}")
     return rows
 
 
-def bench_fig1_virtual_doubling() -> list[str]:
+def bench_fig1_virtual_doubling(seed: int = 0) -> list[str]:
     """Fig 1 / Fig 5b: A2CiD2 @ rate 1 vs baseline @ rate 2 on the ring."""
-    us1, base1 = _sim_consensus("ring", 16, False, 1.0)
-    us2, base2 = _sim_consensus("ring", 16, False, 2.0)
-    us3, acid1 = _sim_consensus("ring", 16, True, 1.0)
+    us1, base1 = _sim_consensus("ring", 16, False, 1.0, seed=seed)
+    us2, base2 = _sim_consensus("ring", 16, False, 2.0, seed=seed)
+    us3, acid1 = _sim_consensus("ring", 16, True, 1.0, seed=seed)
     ratio = acid1 / base2
     return [
         f"fig1_base_rate1,{us1:.0f},{base1:.4f}",
@@ -114,20 +121,20 @@ def bench_fig1_virtual_doubling() -> list[str]:
     ]
 
 
-def bench_table5_worker_scaling() -> list[str]:
+def bench_table5_worker_scaling(seed: int = 0) -> list[str]:
     """Tab 5 trend: ring-graph consensus degradation with n, and A2CiD2's
     recovery (n = 16, 32)."""
     rows = []
     for n in (16, 32):
-        _, base = _sim_consensus("ring", n, False, 1.0)
-        _, acid = _sim_consensus("ring", n, True, 1.0)
+        _, base = _sim_consensus("ring", n, False, 1.0, seed=seed)
+        _, acid = _sim_consensus("ring", n, True, 1.0, seed=seed)
         rows.append(f"table5_ring_n{n}_gain,0.0,{base / max(acid, 1e-9):.3f}")
     return rows
 
 
 # --------------------------------------------------------- systems benchmarks
 
-def bench_kernels() -> list[str]:
+def bench_kernels(seed: int = 0) -> list[str]:
     """Microbenchmarks of the Pallas kernels' oracle paths (CPU timing).
 
     The a2cid2_mixing rows report the FULL HBM traffic of one gossip event
@@ -195,10 +202,10 @@ def _sim_setup(seed=0):
     return sim, st, sched, cs, ref_arrays, eng_arrays
 
 
-def bench_simulator_throughput() -> list[str]:
+def bench_simulator_throughput(seed: int = 0) -> list[str]:
     """Event-simulator throughput (rounds/s) — the repro's own hot loop,
     on the flat-buffer coalesced/fused engine path (the default)."""
-    sim, st, _, _, _, eng_arrays = _sim_setup()
+    sim, st, _, _, _, eng_arrays = _sim_setup(seed)
     run = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
     run()  # compile
     t0 = time.perf_counter()
@@ -207,7 +214,7 @@ def bench_simulator_throughput() -> list[str]:
     return [f"simulator_100rounds_n16,{dt*1e6:.0f},{100/dt:.0f}_rounds_per_s"]
 
 
-def bench_gossip_engine() -> list[str]:
+def bench_gossip_engine(seed: int = 0) -> list[str]:
     """Fused flat-buffer event engine vs the per-event reference path on the
     same schedule (100 rounds, n=16, d=256), plus the event-coalescing and
     HBM-traffic accounting.  Emits BENCH_gossip.json next to the repo root.
@@ -221,7 +228,7 @@ def bench_gossip_engine() -> list[str]:
     import json
     import os
 
-    sim, st, sched, cs, ref_arrays, eng_arrays = _sim_setup()
+    sim, st, sched, cs, ref_arrays, eng_arrays = _sim_setup(seed)
     ref = lambda: sim.run(st, ref_arrays)[1].loss.block_until_ready()
     eng = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
     ref(); eng()  # compile both
@@ -274,24 +281,40 @@ _TOPO_BENCH = {"n": 64, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
                "families": ["ring", "torus", "hypercube", "complete"]}
 
 
-def bench_topology_sweep() -> list[str]:
+def bench_topology_sweep(seed: int = 0) -> list[str]:
     """Paper-figure-shaped artifact: consensus-distance-vs-communication
     curves, accelerated vs baseline, across the paper's topology families at
     n=64 (Tab 4/5 + Fig 4 regime: the ring/torus gains, the complete-graph
     wash), plus heterogeneous-world scenarios (straggler clocks, a
-    ring->hypercube phase switch with churn).  Emits BENCH_topology.json.
+    ring->hypercube phase switch with churn, Poisson failure/repair churn,
+    and a bandwidth-degraded ring).  Emits BENCH_topology.json.
+
+    Every curve is described by a declarative ``World`` (core/world.py);
+    its serialized spec is embedded next to the curve so the artifact names
+    the exact scenario that produced it, and each world carries a
+    bandwidth-aware ``LinkModel`` (TPU ICI bandwidth from
+    ``analysis/roofline.py``) giving the curves a wall-clock x-axis.
     """
     import json
     import os
 
-    from repro.core import (Simulator, TopologyPhase, TopologySchedule,
-                            build_graph, make_schedule,
-                            make_topology_schedule, params_from_graph)
+    from repro.analysis.roofline import HBM_BW, ICI_BW
+    from repro.core import (ChurnProcess, LinkModel, PhaseSwitch, Simulator,
+                            WorkerModel, World, build_graph,
+                            params_from_graph)
 
     n, d = _TOPO_BENCH["n"], _TOPO_BENCH["d"]
     rounds, rate = _TOPO_BENCH["rounds"], _TOPO_BENCH["comms_per_grad"]
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     grad_fn = _quad_grad_fn(b, noise=_TOPO_BENCH["noise"])
+    # one p2p message = the d-float replica; a gradient tick reads + writes
+    # the replica through HBM (the memory term of the roofline)
+    msg_bytes = float(d * 4)
+    grad_seconds = 2 * msg_bytes / HBM_BW
+
+    def link_model(bandwidth=ICI_BW):
+        return LinkModel(bandwidth_bytes_per_s=bandwidth,
+                         msg_bytes=msg_bytes, grad_seconds=grad_seconds)
 
     def consensus_curve(graph, sched, accel):
         sim = Simulator(grad_fn, params_from_graph(graph, accelerated=accel),
@@ -302,63 +325,90 @@ def bench_topology_sweep() -> list[str]:
         cons = np.asarray(trace.consensus)
         return (time.perf_counter() - t0) * 1e6, cons
 
-    rows, report = [], {"config": dict(_TOPO_BENCH), "families": {},
-                        "scenarios": {}}
-    for name in _TOPO_BENCH["families"]:
-        g = build_graph(name, n)
-        sched = make_schedule(g, rounds=rounds, comms_per_grad=rate, seed=0)
-        events = np.cumsum(sched.comm_events_per_round())
-        us_b, base = consensus_curve(g, sched, False)
-        us_a, acid = consensus_curve(g, sched, True)
+    def curve_entry(world, chi_graph):
+        """Run baseline + accelerated on one world; return
+        (entry, sched, us)."""
+        sched = world.compile(rounds, seed=seed)
+        us_b, base = consensus_curve(chi_graph, sched, False)
+        us_a, acid = consensus_curve(chi_graph, sched, True)
         tail_b = float(base[-30:].mean())
         tail_a = float(acid[-30:].mean())
-        gain = tail_b / max(tail_a, 1e-12)
-        report["families"][name] = {
-            "chi1": g.chi1(), "chi2": g.chi2(),
-            "cumulative_comm_events": events.tolist(),
+        wall = world.round_seconds(sched)
+        entry = {
+            "world": world.to_dict(),
+            "cumulative_comm_events":
+                np.cumsum(sched.comm_events_per_round()).tolist(),
+            "wall_clock_seconds": np.cumsum(wall).tolist(),
             "consensus_baseline": np.asarray(base, np.float64).tolist(),
             "consensus_acid": np.asarray(acid, np.float64).tolist(),
             "tail_consensus_baseline": tail_b,
             "tail_consensus_acid": tail_a,
-            "acid_gain": gain,
+            "acid_gain": tail_b / max(tail_a, 1e-12),
         }
-        rows.append(f"topology_{name}_n{n},{us_b + us_a:.0f},"
-                    f"gain={gain:.3f};chi1={g.chi1():.1f}")
+        return entry, sched, us_b + us_a
+
+    rows, report = [], {"config": dict(_TOPO_BENCH), "seed": seed,
+                        "families": {}, "scenarios": {}}
+    for name in _TOPO_BENCH["families"]:
+        g = build_graph(name, n)
+        entry, _, us = curve_entry(World(topology=g, links=link_model(),
+                                         comms_per_grad=rate), g)
+        entry.update(chi1=g.chi1(), chi2=g.chi2())
+        report["families"][name] = entry
+        rows.append(f"topology_{name}_n{n},{us:.0f},"
+                    f"gain={entry['acid_gain']:.3f};chi1={g.chi1():.1f}")
+
+    ring = build_graph("ring", n)
 
     # scenario 1: straggler clocks on the ring (half the workers at 1/4 rate)
-    ring = build_graph("ring", n)
     grad_rates = np.where(np.arange(n) % 2 == 0, 1.0, 0.25)
-    sched = make_schedule(ring, rounds=rounds, comms_per_grad=rate, seed=0,
-                          grad_rates=grad_rates)
-    _, s_base = consensus_curve(ring, sched, False)
-    _, s_acid = consensus_curve(ring, sched, True)
-    report["scenarios"]["ring_stragglers"] = {
-        "grad_rates": grad_rates.tolist(),
-        "consensus_baseline": np.asarray(s_base, np.float64).tolist(),
-        "consensus_acid": np.asarray(s_acid, np.float64).tolist(),
-        "acid_gain": float(s_base[-30:].mean() / max(s_acid[-30:].mean(),
-                                                     1e-12)),
-    }
+    entry, _, _ = curve_entry(
+        World(topology=ring, workers=WorkerModel(grad_rates=grad_rates),
+              links=link_model(), comms_per_grad=rate), ring)
+    report["scenarios"]["ring_stragglers"] = entry
 
-    # scenario 2: phase switch ring -> hypercube with a churn window
+    # scenario 2: phase switch ring -> hypercube with a churn window,
+    # expressed as PhaseSwitch faults on a static ring world
     active = np.ones(n, bool)
     active[: n // 8] = False
-    ts = TopologySchedule((
-        TopologyPhase(ring, rounds // 3),
-        TopologyPhase(ring, rounds // 3, tuple(active)),
-        TopologyPhase(build_graph("hypercube", n), rounds - 2 * (rounds // 3)),
-    ))
-    psched = make_topology_schedule(ts, comms_per_grad=rate, seed=0)
-    _, p_base = consensus_curve(ring, psched, False)
-    _, p_acid = consensus_curve(ring, psched, True)
-    report["scenarios"]["ring_churn_hypercube"] = {
-        "phases": [{"graph": ph.graph.name, "rounds": ph.rounds,
-                    "active_workers": int(ph.active_mask().sum()),
-                    "chi1": ph.chis()[0], "chi2": ph.chis()[1]}
-                   for ph in ts.phases],
-        "consensus_baseline": np.asarray(p_base, np.float64).tolist(),
-        "consensus_acid": np.asarray(p_acid, np.float64).tolist(),
-    }
+    pworld = World(
+        topology=ring,
+        links=link_model(),
+        faults=(PhaseSwitch(rounds // 3, active=tuple(active)),
+                PhaseSwitch(2 * (rounds // 3),
+                            topology=build_graph("hypercube", n))),
+        comms_per_grad=rate)
+    entry, _, _ = curve_entry(pworld, ring)
+    entry["phases"] = [
+        {"graph": ph.graph.name, "rounds": ph.rounds,
+         "active_workers": int(ph.active_mask().sum()),
+         "chi1": ph.chis()[0], "chi2": ph.chis()[1]}
+        for ph in pworld.phase_plan(rounds, seed).phases]
+    report["scenarios"]["ring_churn_hypercube"] = entry
+
+    # scenario 3: Poisson failure/repair churn on the ring (expected ~9% of
+    # workers down in steady state: fail/(fail+repair))
+    cworld = World(topology=ring, links=link_model(),
+                   faults=(ChurnProcess(fail_rate=0.02, repair_rate=0.2),),
+                   comms_per_grad=rate)
+    entry, csched, _ = curve_entry(cworld, ring)
+    entry["mean_alive_fraction"] = float(csched.alive_arr().mean())
+    entry["num_segments"] = len(cworld.segments(rounds, seed))
+    report["scenarios"]["ring_poisson_churn"] = entry
+
+    # scenario 4: bandwidth-degraded ring — every 8th link at 1/8 capacity.
+    # Rates follow bandwidth (slow links fire less, Def 3.1 per-edge path)
+    # and the wall-clock axis stretches where the slow links serialize.
+    bw = np.full(ring.num_edges, ICI_BW)
+    bw[::8] /= 8.0
+    bworld = World(topology=ring,
+                   links=LinkModel(bandwidth_bytes_per_s=tuple(bw),
+                                   msg_bytes=msg_bytes,
+                                   grad_seconds=grad_seconds),
+                   comms_per_grad=rate)
+    entry, _, _ = curve_entry(bworld, ring)
+    entry["slow_links"] = int((bw < ICI_BW).sum())
+    report["scenarios"]["ring_degraded_links"] = entry
 
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_topology.json")
@@ -367,11 +417,13 @@ def bench_topology_sweep() -> list[str]:
         f.write("\n")
     rows.append("topology_scenarios,0.0,"
                 f"stragglers_gain="
-                f"{report['scenarios']['ring_stragglers']['acid_gain']:.3f}")
+                f"{report['scenarios']['ring_stragglers']['acid_gain']:.3f};"
+                f"churn_alive="
+                f"{report['scenarios']['ring_poisson_churn']['mean_alive_fraction']:.3f}")
     return rows
 
 
-def bench_roofline_summary() -> list[str]:
+def bench_roofline_summary(seed: int = 0) -> list[str]:
     """Roofline terms from the dry-run artifacts (if present)."""
     import json
     import os
@@ -411,14 +463,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated bench names, e.g. kernels,simulator")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="rng seed threaded into every world compilation "
+                         "(schedules, scenario sampling)")
+    ap.add_argument("--small", action="store_true",
+                    help="CI-sized topology sweep (n=16, fewer rounds/"
+                         "families) — for the scenario-smoke job")
     args = ap.parse_args()
+    if args.small:
+        _TOPO_BENCH.update(n=16, rounds=60,
+                           families=["ring", "complete"])
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     print("name,us_per_call,derived")
     for name in names:
-        for row in BENCHES[name]():
+        for row in BENCHES[name](seed=args.seed):
             print(row)
 
 

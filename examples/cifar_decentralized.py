@@ -9,8 +9,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Simulator, build_graph, make_schedule,
-                        params_from_graph, worker_mean)
+from repro.core import (Simulator, World, build_graph, params_from_graph,
+                        worker_mean)
 from repro.data import SyntheticCIFAR
 from repro.models.resnet import init_resnet, resnet8_cifar, resnet_loss
 
@@ -21,6 +21,7 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--graph", default="ring")
     ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = resnet8_cifar()
@@ -34,8 +35,7 @@ def main():
         return jax.value_and_grad(loss_fn)(params)
 
     graph = build_graph(args.graph, args.workers)
-    sched = make_schedule(graph, rounds=args.rounds, comms_per_grad=1.0,
-                          seed=0)
+    sched = World(topology=graph).compile(args.rounds, seed=args.seed)
     params0 = init_resnet(jax.random.PRNGKey(0), cfg)
 
     for accel in (False, True):

@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (Simulator, make_schedule, params_from_graph,
-                        ring_graph)
+from repro.core import Simulator, World, params_from_graph, ring_graph
 from repro.data import LMTaskStream
 from repro.models import Model
 
@@ -27,6 +26,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config("nano-lm", reduced=not args.full)
@@ -42,8 +42,7 @@ def main():
         return jax.value_and_grad(loss_fn)(params)
 
     graph = ring_graph(args.workers)
-    sched = make_schedule(graph, rounds=args.rounds, comms_per_grad=1.0,
-                          seed=0)
+    sched = World(topology=graph).compile(args.rounds, seed=args.seed)
     params0 = model.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree.leaves(params0))
     print(f"nano-lm: {n_params/1e6:.1f}M params, {args.workers} workers, "

@@ -1,7 +1,8 @@
 """Quickstart: A2CiD2 in 60 lines — decentralized optimization of a
 heterogeneous quadratic on a ring, accelerated vs baseline, then the same
 world made hostile: straggler workers and a mid-run topology switch with a
-churn window (the scenario engine, DESIGN.md §8).
+churn window, described declaratively with the World API (DESIGN.md §9)
+and compiled to one event schedule.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,10 +10,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Simulator, TopologyPhase, TopologySchedule,
-                        hypercube_graph, make_schedule,
-                        make_topology_schedule, params_from_graph,
-                        ring_graph, worker_mean)
+from repro.core import (PhaseSwitch, Simulator, WorkerModel, World,
+                        hypercube_graph, params_from_graph, ring_graph,
+                        worker_mean)
 
 N_WORKERS, DIM, ROUNDS = 16, 64, 300
 
@@ -31,30 +31,34 @@ print(f"ring graph: chi1={graph.chi1():.1f} chi2={graph.chi2():.2f} "
       f"(A2CiD2 accelerates chi1 -> sqrt(chi1*chi2)="
       f"{(graph.chi1()*graph.chi2())**0.5:.1f})")
 
-schedule = make_schedule(graph, rounds=ROUNDS, comms_per_grad=1.0, seed=0)
+calm = World(topology=graph)
 for accelerated in (False, True):
     acid = params_from_graph(graph, accelerated=accelerated)
     sim = Simulator(grad_fn, acid, gamma=0.05)
     state = sim.init(jnp.zeros(DIM), N_WORKERS, jax.random.PRNGKey(2))
-    state, trace = sim.run_schedule(state, schedule)
+    state, trace = sim.run_world(state, calm, ROUNDS, seed=0)
     err = float(jnp.sum((worker_mean(state.x) - jnp.mean(b, 0)) ** 2))
     name = "A2CiD2  " if accelerated else "baseline"
     print(f"{name}: consensus distance {float(trace.consensus[-1]):.3f}  "
           f"distance to optimum {err:.2e}")
 
-# -- the same ring made hostile: odd workers compute gradients at 1/4 rate,
-#    two workers drop out mid-run, and the survivors switch to a hypercube
+# -- the same ring made hostile, declared as a World: odd workers compute
+#    gradients at 1/4 rate, two workers drop out mid-run, and the survivors
+#    switch to a hypercube.  The description is serializable (to_json) and
+#    compiles to ONE event schedule both replay paths consume unchanged.
 print("\nheterogeneous world: stragglers + churn + ring->hypercube switch")
 stragglers = np.where(np.arange(N_WORKERS) % 2 == 0, 1.0, 0.25)
 active = np.ones(N_WORKERS, bool)
 active[:2] = False
-world = TopologySchedule((
-    TopologyPhase(graph, ROUNDS // 3),                        # calm ring
-    TopologyPhase(graph, ROUNDS // 3, tuple(active)),         # churn window
-    TopologyPhase(hypercube_graph(4), ROUNDS // 3),           # rewire + rejoin
-))
-hostile = make_topology_schedule(world, comms_per_grad=1.0, seed=0,
-                                 grad_rates=stragglers)
+world = World(
+    topology=graph,                                           # calm ring
+    workers=WorkerModel(grad_rates=stragglers),
+    faults=(PhaseSwitch(ROUNDS // 3, active=tuple(active)),   # churn window
+            PhaseSwitch(2 * (ROUNDS // 3),
+                        topology=hypercube_graph(4))),        # rewire+rejoin
+)
+hostile = world.compile(ROUNDS, seed=0)
+phases = world.phase_plan(ROUNDS)
 for accelerated in (False, True):
     acid = params_from_graph(graph, accelerated=accelerated)
     sim = Simulator(grad_fn, acid, gamma=0.05)
@@ -63,4 +67,4 @@ for accelerated in (False, True):
     name = "A2CiD2  " if accelerated else "baseline"
     print(f"{name}: consensus distance {float(trace.consensus[-1]):.3f}  "
           f"(per-phase chi1: "
-          f"{', '.join(f'{c1:.1f}' for c1, _ in world.phase_chis())})")
+          f"{', '.join(f'{c1:.1f}' for c1, _ in phases.phase_chis())})")

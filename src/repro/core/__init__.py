@@ -8,13 +8,15 @@ from .events import (CoalescedSchedule, EventStream, Schedule,
                      empirical_laplacian, make_schedule,
                      make_topology_schedule)
 from .flatbuf import FlatLayout, LeafSpec
-from .gossip import GossipMixer, matching_bank, phase_banks
+from .gossip import GossipMixer, matching_bank, phase_banks, world_banks
 from .graphs import (Graph, TopologyPhase, TopologySchedule, build_graph,
                      complete_graph, exponential_graph, hypercube_graph,
                      ring_graph, star_graph, torus_graph)
 from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
+from .world import ChurnProcess, LinkModel, PhaseSwitch, WorkerModel, World
 
 __all__ = [
+    "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
     "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",
     "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
@@ -22,7 +24,7 @@ __all__ = [
     "coalesced_stream", "concat_schedules", "empirical_laplacian",
     "make_schedule", "make_topology_schedule",
     "FlatGossipEngine", "mix_flat", "FlatLayout", "LeafSpec",
-    "GossipMixer", "matching_bank", "phase_banks",
+    "GossipMixer", "matching_bank", "phase_banks", "world_banks",
     "Graph", "TopologyPhase", "TopologySchedule", "build_graph",
     "complete_graph", "exponential_graph", "hypercube_graph",
     "ring_graph", "star_graph", "torus_graph",

@@ -64,6 +64,17 @@ class Schedule:
       alive       (R, n) bool — churn: a False row entry means the worker is
                   DETACHED — no matchings (by schedule construction), no
                   gradient, and its event clock freezes for the round
+
+    Extension channel:
+      extras      dict of named per-event attribute arrays, each (R, K, n) —
+                  the generic slot future scenario axes ride in (per-event
+                  corruption masks, staleness offsets, ...).  Extras are pure
+                  schedule data: ``concat_schedules`` pads and concatenates
+                  them, ``coalesce_schedule`` merges them alongside the
+                  partner involution, and ``coalesced_stream`` flattens them
+                  to one (S, n) row per scan step — so a new axis never adds
+                  a scan branch, only a named array.  Attach with
+                  ``with_extras``.
     """
 
     partners: np.ndarray
@@ -72,6 +83,7 @@ class Schedule:
     grad_times: np.ndarray
     grad_mask: np.ndarray | None = None
     alive: np.ndarray | None = None
+    extras: dict[str, np.ndarray] | None = None
 
     @property
     def rounds(self) -> int:
@@ -86,6 +98,29 @@ class Schedule:
 
     def grad_scale(self) -> np.ndarray:
         return _grad_scale(self.rounds, self.n, self.grad_mask, self.alive)
+
+    def extras_dict(self) -> dict[str, np.ndarray]:
+        return dict(self.extras) if self.extras else {}
+
+    def with_extras(self, **arrays: np.ndarray) -> "Schedule":
+        """Attach named per-event attribute arrays (merged with existing).
+
+        Each array must be (R, K, n) — per event, per worker — or (R, K)
+        (a per-event scalar, broadcast across workers here so downstream
+        compilation stages handle one shape).
+        """
+        R, K, n = self.partners.shape
+        out = self.extras_dict()
+        for name, a in arrays.items():
+            a = np.asarray(a)
+            if a.shape == (R, K):
+                a = np.broadcast_to(a[:, :, None], (R, K, n)).copy()
+            if a.shape != (R, K, n):
+                raise ValueError(
+                    f"extras[{name!r}] must have shape ({R}, {K}, {n}) = "
+                    f"(rounds, kmax, n) or ({R}, {K}), got {a.shape}")
+            out[name] = a
+        return dataclasses.replace(self, extras=out)
 
     def comm_events_per_round(self) -> np.ndarray:
         """(R,) pairwise communication count per round (benchmark x-axis)."""
@@ -116,6 +151,12 @@ def make_schedule(
 ) -> Schedule:
     """Build a Poisson event schedule, homogeneous or heterogeneous.
 
+    Thin wrapper over the declarative World API (``core/world.py``): the
+    kwargs are lowered onto ``World(topology, workers, links)`` and
+    compiled — bit-for-bit identical to the pre-World sampler under the
+    same seed (asserted in ``tests/test_world.py``).  World validates every
+    field's shape/dtype/range with errors naming the offending input.
+
     comms_per_grad — expected number of p2p averagings per worker between two
     of its gradient steps (the paper's "#com/#grad" knob, Tab 5).
 
@@ -139,6 +180,34 @@ def make_schedule(
     t_offset — shift all event/gradient times (phase concatenation).
     active — (n,) churn mask: detached workers are cut out of the graph
       (no matchings) and marked dead for every round of this schedule.
+    """
+    from .world import LinkModel, WorkerModel, World
+
+    world = World(topology=graph,
+                  workers=WorkerModel(grad_rates=grad_rates, active=active),
+                  links=LinkModel(rates=edge_rates, per_edge=per_edge),
+                  comms_per_grad=comms_per_grad,
+                  jitter_grad_times=jitter_grad_times,
+                  t_offset=t_offset)
+    return world.compile(rounds, seed=seed)
+
+
+def _sample_schedule(
+    graph: Graph,
+    rounds: int,
+    comms_per_grad: float = 1.0,
+    seed: int = 0,
+    jitter_grad_times: bool = True,
+    grad_rates: np.ndarray | None = None,
+    edge_rates: np.ndarray | None = None,
+    per_edge: bool | None = None,
+    t_offset: float = 0.0,
+    active: np.ndarray | None = None,
+) -> Schedule:
+    """The raw Poisson sampler one World segment compiles through.
+
+    This is the pre-World ``make_schedule`` body, unchanged — the bit-for-bit
+    compatibility contract of the wrapper rests on it staying byte-stable.
     """
     rng = np.random.default_rng(seed)
     # heterogeneity draws come from an independent stream so that uniform
@@ -286,11 +355,33 @@ def concat_schedules(schedules: list[Schedule]) -> Schedule:
         if any_gmask else None
     alive = np.concatenate([s.alive_arr() for s in schedules]) \
         if any_alive else None
+    # extension channel: union of keys; schedules without a key contribute
+    # zero rows, the K axis pads with zeros like masked slots
+    keys: list[str] = []
+    for s in schedules:
+        keys += [k for k in s.extras_dict() if k not in keys]
+    extras = None
+    if keys:
+        extras = {}
+        for k in keys:
+            dtype = next(s.extras[k].dtype for s in schedules
+                         if s.extras_dict().get(k) is not None)
+            chunks = []
+            for s in schedules:
+                a = s.extras_dict().get(k)
+                if a is None:
+                    a = np.zeros((s.rounds, kmax, n), dtype)
+                elif a.shape[1] < kmax:
+                    a = np.concatenate(
+                        [a, np.zeros((s.rounds, kmax - a.shape[1], n),
+                                     a.dtype)], axis=1)
+                chunks.append(a)
+            extras[k] = np.concatenate(chunks)
     return Schedule(
         np.concatenate(parts), np.concatenate(times).astype(np.float32),
         np.concatenate(masks),
         np.concatenate([s.grad_times for s in schedules]).astype(np.float32),
-        grad_mask=gmask, alive=alive)
+        grad_mask=gmask, alive=alive, extras=extras)
 
 
 def make_topology_schedule(
@@ -303,6 +394,7 @@ def make_topology_schedule(
 ) -> Schedule:
     """Compile a time-varying topology into one concatenated event schedule.
 
+    Thin wrapper over the declarative World API (``core/world.py``).
     Phase p covers rounds [start_p, start_p + rounds_p) with its own graph
     and churn mask; per-phase seeds are ``seed + p`` so a single-phase
     topology schedule reproduces ``make_schedule(graph, ..., seed)``
@@ -310,15 +402,14 @@ def make_topology_schedule(
     phase graph's own ``rates`` (``Graph.with_rates``); ``per_edge`` forces
     the Def 3.1 single-pair point process for every phase.
     """
-    starts = tsched.phase_starts()
-    phases = []
-    for p, ph in enumerate(tsched.phases):
-        phases.append(make_schedule(
-            ph.graph, ph.rounds, comms_per_grad, seed=seed + p,
-            jitter_grad_times=jitter_grad_times, grad_rates=grad_rates,
-            per_edge=per_edge, t_offset=float(starts[p]),
-            active=ph.active_mask()))
-    return concat_schedules(phases)
+    from .world import LinkModel, WorkerModel, World
+
+    world = World(topology=tsched,
+                  workers=WorkerModel(grad_rates=grad_rates),
+                  links=LinkModel(per_edge=per_edge),
+                  comms_per_grad=comms_per_grad,
+                  jitter_grad_times=jitter_grad_times)
+    return world.compile(seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +434,10 @@ class CoalescedSchedule:
       grad_times   (R, n) f32      — unchanged from the raw schedule
       grad_mask / alive — heterogeneous-world masks carried through from the
                           raw schedule (see Schedule)
+      extras       dict of named (R, B, n) attribute arrays — the raw
+                   schedule's extension channel, merged exactly like the
+                   partner involution (each involved worker carries its own
+                   event's attribute; idle workers read 0)
     """
 
     partners: np.ndarray
@@ -351,6 +446,7 @@ class CoalescedSchedule:
     grad_times: np.ndarray
     grad_mask: np.ndarray | None = None
     alive: np.ndarray | None = None
+    extras: dict[str, np.ndarray] | None = None
 
     @property
     def rounds(self) -> int:
@@ -365,6 +461,9 @@ class CoalescedSchedule:
 
     def grad_scale(self) -> np.ndarray:
         return _grad_scale(self.rounds, self.n, self.grad_mask, self.alive)
+
+    def extras_dict(self) -> dict[str, np.ndarray]:
+        return dict(self.extras) if self.extras else {}
 
     def num_batches(self) -> int:
         """Fused sweeps the engine performs (vs kmax*rounds in the raw path)."""
@@ -383,9 +482,10 @@ def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
     """
     R, K, n = schedule.partners.shape
     idx = np.arange(n)
-    per_round: list[list[tuple[np.ndarray, np.ndarray]]] = []
+    raw_ext = schedule.extras_dict()
+    per_round: list[list[tuple]] = []
     for r in range(R):
-        batches: list[tuple[np.ndarray, np.ndarray]] = []  # (partner, wtime)
+        batches: list[tuple] = []  # (partner, wtime, {name: (n,) attr})
         busy = np.zeros(n, dtype=bool)  # workers involved in current batch
         for e in range(K):
             if not schedule.event_mask[r, e]:
@@ -397,7 +497,7 @@ def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
             t = schedule.event_times[r, e]
             if batches and not (busy & involved).any():
                 # disjoint from the open batch: merge
-                partner, wtime = batches[-1]
+                partner, wtime, ext = batches[-1]
                 partner[involved] = p[involved]
                 wtime[involved] = t
             else:
@@ -405,8 +505,11 @@ def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
                 partner[involved] = p[involved]
                 wtime = np.zeros(n, dtype=np.float32)
                 wtime[involved] = t
-                batches.append((partner, wtime))
+                ext = {k: np.zeros(n, a.dtype) for k, a in raw_ext.items()}
+                batches.append((partner, wtime, ext))
                 busy = np.zeros(n, dtype=bool)
+            for k, a in raw_ext.items():
+                ext[k][involved] = a[r, e, involved]
             busy |= involved
         per_round.append(batches)
 
@@ -414,15 +517,20 @@ def coalesce_schedule(schedule: Schedule) -> CoalescedSchedule:
     partners = np.tile(idx.astype(np.int32), (R, B, 1))
     wtimes = np.zeros((R, B, n), dtype=np.float32)
     batch_active = np.zeros((R, B), dtype=bool)
+    extras = {k: np.zeros((R, B, n), a.dtype) for k, a in raw_ext.items()} \
+        if raw_ext else None
     for r, batches in enumerate(per_round):
-        for b, (partner, wtime) in enumerate(batches):
+        for b, (partner, wtime, ext) in enumerate(batches):
             partners[r, b] = partner
             wtimes[r, b] = wtime
             batch_active[r, b] = True
+            if extras is not None:
+                for k in extras:
+                    extras[k][r, b] = ext[k]
     return CoalescedSchedule(partners, wtimes, batch_active,
                              schedule.grad_times.astype(np.float32),
                              grad_mask=schedule.grad_mask,
-                             alive=schedule.alive)
+                             alive=schedule.alive, extras=extras)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -448,6 +556,9 @@ class EventStream:
                                compacting per-step metrics back to per-round)
       t_final    (n,) f32    — per-worker clock after the last step (frozen
                                at detach time for churned workers)
+      extras     dict of named (S, n) attribute arrays — the schedule's
+                 extension channel flattened to one row per step (zero rows
+                 at gradient ticks), ready for a future engine's scan xs
     """
 
     prologue: np.ndarray
@@ -457,6 +568,7 @@ class EventStream:
     grad_scale: np.ndarray
     grad_pos: np.ndarray
     t_final: np.ndarray
+    extras: dict[str, np.ndarray] | None = None
 
     @property
     def steps(self) -> int:
@@ -475,11 +587,14 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
     idx = np.arange(n)
     alive = cs.alive_arr()
     gscale = cs.grad_scale()
+    cs_ext = cs.extras_dict()
     partners, dt_next, is_grad, grad_scale, grad_pos = [], [], [], [], []
+    ext_rows: dict[str, list[np.ndarray]] = {k: [] for k in cs_ext}
+    ext_zero = {k: np.zeros(n, a.dtype) for k, a in cs_ext.items()}
     prologue = None
     tl = np.array(t0, np.float32).copy()
 
-    def emit(partner, delta, grad, gs):
+    def emit(partner, delta, grad, gs, ext):
         nonlocal prologue
         if prologue is None:
             prologue = delta
@@ -489,6 +604,8 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
         dt_next.append(np.zeros(n, np.float32))
         is_grad.append(grad)
         grad_scale.append(gs)
+        for k in ext_rows:
+            ext_rows[k].append(ext[k])
 
     ones = np.ones(n, np.float32)
     for r in range(R):
@@ -499,11 +616,12 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
             delta = np.zeros(n, np.float32)
             delta[inv] = cs.wtimes[r, b, inv] - tl[inv]
             tl[inv] = cs.wtimes[r, b, inv]
-            emit(cs.partners[r, b].astype(np.int32), delta, False, ones)
+            emit(cs.partners[r, b].astype(np.int32), delta, False, ones,
+                 {k: a[r, b] for k, a in cs_ext.items()})
         adv = alive[r]
         delta = np.where(adv, cs.grad_times[r] - tl, 0.0).astype(np.float32)
         tl = np.where(adv, cs.grad_times[r], tl).astype(np.float32)
-        emit(idx.astype(np.int32), delta, True, gscale[r])
+        emit(idx.astype(np.int32), delta, True, gscale[r], ext_zero)
         grad_pos.append(len(partners) - 1)
 
     return EventStream(
@@ -514,6 +632,8 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
         grad_scale=np.stack(grad_scale).astype(np.float32),
         grad_pos=np.asarray(grad_pos, np.int32),
         t_final=tl.copy(),
+        extras={k: np.stack(v) for k, v in ext_rows.items()}
+        if ext_rows else None,
     )
 
 

@@ -91,6 +91,22 @@ def phase_banks(tsched: TopologySchedule
     return out
 
 
+def world_banks(world, rounds: int | None = None, seed: int = 0
+                ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-segment (matching bank, sampling probs) for a declarative World
+    (``core/world.py``) — the mesh-trainer counterpart of ``World.compile``.
+
+    Segments come from ``World.segment_graphs`` (link-model rates applied,
+    churned workers isolated), so the banks line up one-to-one with the
+    compiled schedule's phase structure under the same (rounds, seed).
+    """
+    out = []
+    for g in world.segment_graphs(rounds, seed):
+        bank = matching_bank(g)
+        out.append((bank, bank_edge_rates(g, bank)))
+    return out
+
+
 class GossipMixer:
     """Applies A2CiD2 events across the worker mesh axis (use inside shard_map
     or under a mesh with explicit out-of-shard_map collectives via pjit —

@@ -144,6 +144,20 @@ class Graph:
             p[i], p[j] = j, i
         return p
 
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """JSON-ready description (the World spec embeds this; see
+        ``world.World.to_json``)."""
+        return {"n": self.n, "edges": [list(e) for e in self.edges],
+                "rates": list(self.rates), "name": self.name}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Graph":
+        return Graph(int(d["n"]),
+                     tuple((int(i), int(j)) for i, j in d["edges"]),
+                     tuple(float(r) for r in d["rates"]),
+                     name=d.get("name", "custom"))
+
     # ---------------------------------------------------------- derivations
     def with_rates(self, rates) -> "Graph":
         """Same topology with per-edge rates replaced (heterogeneous worlds:
@@ -310,6 +324,20 @@ class TopologyPhase:
         g = self.graph.subgraph(self.active_mask(), relabel=True)
         return g.chi1(), g.chi2()
 
+    def to_dict(self) -> dict:
+        # bool() strips np.bool_ entries (tuple(np_mask) keeps them), which
+        # the json encoder rejects
+        return {"graph": self.graph.to_dict(), "rounds": int(self.rounds),
+                "active": None if self.active is None
+                else [bool(b) for b in self.active]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "TopologyPhase":
+        active = d.get("active")
+        return TopologyPhase(Graph.from_dict(d["graph"]), int(d["rounds"]),
+                             None if active is None
+                             else tuple(bool(b) for b in active))
+
 
 @dataclasses.dataclass(frozen=True)
 class TopologySchedule:
@@ -348,3 +376,11 @@ class TopologySchedule:
 
     def phase_chis(self) -> list[tuple[float, float]]:
         return [p.chis() for p in self.phases]
+
+    def to_dict(self) -> dict:
+        return {"phases": [p.to_dict() for p in self.phases]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "TopologySchedule":
+        return TopologySchedule(tuple(TopologyPhase.from_dict(p)
+                                      for p in d["phases"]))

@@ -209,6 +209,16 @@ class Simulator:
         """Flat-buffer engine replay of a coalesced event stream (hot path)."""
         return self._run_coalesced_jit(state, stream_arrays)
 
+    def run_world(self, state: SimState, world, rounds: int | None = None, *,
+                  seed: int = 0, engine: bool = True):
+        """Compile a declarative ``world.World`` and replay it.
+
+        Sugar for ``run_schedule(state, world.compile(rounds, seed))`` —
+        the scenario description stays first-class up to the replay call.
+        """
+        return self.run_schedule(state, world.compile(rounds, seed=seed),
+                                 engine=engine)
+
     def run_schedule(self, state: SimState, sched: Schedule, *,
                      engine: bool = True):
         if engine:

@@ -1,0 +1,680 @@
+"""Declarative World API — compile scenarios, don't kwarg them (DESIGN.md §9).
+
+The paper's claims live in *worlds*: a topology, per-worker speeds, per-link
+rates, failures.  A ``World`` is a declarative, serializable description of
+one such scenario:
+
+    World(topology=ring_graph(16),
+          workers=WorkerModel(grad_rates=[1, .25, ...]),
+          links=LinkModel(bandwidth_bytes_per_s=50e9, msg_bytes=4 * D),
+          faults=(ChurnProcess(fail_rate=0.02, repair_rate=0.2),
+                  PhaseSwitch(at_round=100, topology=hypercube_graph(4))))
+
+``world.compile(rounds, seed)`` lowers the description to the existing
+``events.Schedule`` — plain numpy event data that both jit'd replay paths
+(the per-event reference and the flat-buffer engine) consume unchanged.  The
+legacy ``events.make_schedule`` / ``events.make_topology_schedule`` entry
+points are thin wrappers that construct a ``World`` and compile it, and are
+bit-for-bit identical to the pre-World sampler under the same seed
+(``tests/test_world.py``).
+
+Compilation model (all host-side numpy; no new jit'd control flow):
+
+  1. topology + faults  ->  a list of *segments*, each a (graph, rounds,
+     active-mask) triple.  ``PhaseSwitch`` faults cut the timeline at fixed
+     rounds; ``ChurnProcess`` samples a per-worker failure/repair Markov
+     chain (its own rng stream) and cuts at every aliveness change.
+  2. each segment samples its own Poisson events (per-segment seed
+     ``seed + p``, times offset by the segment start) via the same sampler
+     the kwarg API always used.
+  3. ``events.concat_schedules`` fuses the segments into ONE schedule.
+
+``LinkModel`` is where communication physics lives: explicit per-edge
+``rates``, or bandwidth-derived rates (``bandwidth_bytes_per_s`` /
+``msg_bytes`` — faster links fire proportionally more often, normalized so
+the mean worker communicates ``comms_per_grad`` times per round) plus the
+wall-clock mapping ``round_seconds`` used by ``benchmarks/run.py`` to give
+``BENCH_topology.json`` a seconds x-axis (default bandwidth/HBM constants
+come from ``analysis/roofline.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from .graphs import Graph, TopologyPhase, TopologySchedule
+
+# rng-stream tag for churn draws — independent of the schedule's main stream
+# (events.py uses 0x48455 for straggler thinning)
+_CHURN_TAG = 0xC50C4
+
+
+def _as_float_tuple(x, field: str) -> tuple[float, ...] | None:
+    if x is None:
+        return None
+    arr = np.asarray(x, dtype=np.float64)
+    if arr.ndim != 1:
+        raise ValueError(
+            f"{field} must be a 1-D sequence, got shape {arr.shape}")
+    if not np.all(np.isfinite(arr)):
+        raise ValueError(f"{field} must be finite, got {arr}")
+    return tuple(float(v) for v in arr)
+
+
+def _as_bool_tuple(x, field: str) -> tuple[bool, ...] | None:
+    if x is None:
+        return None
+    arr = np.asarray(x)
+    if arr.ndim != 1:
+        raise ValueError(
+            f"{field} must be a 1-D sequence, got shape {arr.shape}")
+    if arr.dtype != bool and not np.all(np.isin(arr, (0, 1))):
+        raise ValueError(f"{field} must be boolean, got dtype {arr.dtype}")
+    return tuple(bool(v) for v in arr)
+
+
+# ---------------------------------------------------------------- components
+
+@dataclasses.dataclass(frozen=True)
+class WorkerModel:
+    """Per-worker physics.
+
+    grad_rates — per-worker gradient-tick rates in [0, 1] relative to the
+      unit tick process (straggler thinning; DESIGN.md §8).  None = all 1.
+    active — static churn mask: ``active[i] = False`` detaches worker i for
+      the whole world (no matchings, no gradients, frozen clock).
+    """
+
+    grad_rates: tuple[float, ...] | None = None
+    active: tuple[bool, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "grad_rates",
+                           _as_float_tuple(self.grad_rates,
+                                           "workers.grad_rates"))
+        object.__setattr__(self, "active",
+                           _as_bool_tuple(self.active, "workers.active"))
+        if self.grad_rates is not None:
+            bad = [r for r in self.grad_rates if not 0.0 <= r <= 1.0]
+            if bad:
+                raise ValueError(
+                    "workers.grad_rates are thinning probabilities and must "
+                    f"lie in [0, 1], got {bad}")
+
+    def grad_rates_arr(self) -> np.ndarray | None:
+        if self.grad_rates is None:
+            return None
+        return np.asarray(self.grad_rates, dtype=np.float64)
+
+    def active_arr(self) -> np.ndarray | None:
+        if self.active is None:
+            return None
+        return np.asarray(self.active, dtype=bool)
+
+    def to_dict(self) -> dict:
+        return {"grad_rates": None if self.grad_rates is None
+                else list(self.grad_rates),
+                "active": None if self.active is None else list(self.active)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "WorkerModel":
+        return WorkerModel(grad_rates=d.get("grad_rates"),
+                           active=d.get("active"))
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Per-link physics: how often each edge fires, and what a firing costs.
+
+    Exactly one of two descriptions (or neither, for topology-default rates):
+
+    rates — explicit per-edge event rates overriding ``graph.rates``
+      (aligned with the topology's edge list).
+    bandwidth_bytes_per_s + msg_bytes — bandwidth-aware rates: a link of
+      capacity ``bw`` moves one ``msg_bytes`` message every ``msg_bytes/bw``
+      seconds, so edge event rates are proportional to bandwidth, normalized
+      so the MEAN worker communicates once per unit simulated time (the
+      ``comms_per_grad`` world knob scales from there).  ``bandwidth`` may
+      be a scalar (uniform links) or per-edge.
+
+    grad_seconds — wall-clock seconds of one gradient tick, used only by the
+      wall-clock mapping ``round_seconds`` (couple it to the roofline terms
+      of ``analysis/roofline.py`` for real models).
+    per_edge — force the Def 3.1 single-pair point process on/off
+      (None = auto: per-edge iff rates are non-uniform vs the topology).
+    """
+
+    rates: tuple[float, ...] | None = None
+    bandwidth_bytes_per_s: float | tuple[float, ...] | None = None
+    msg_bytes: float | None = None
+    grad_seconds: float = 0.0
+    per_edge: bool | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "rates",
+                           _as_float_tuple(self.rates, "links.rates"))
+        bw = self.bandwidth_bytes_per_s
+        if bw is not None and not np.isscalar(bw):
+            bw = _as_float_tuple(bw, "links.bandwidth_bytes_per_s")
+            object.__setattr__(self, "bandwidth_bytes_per_s", bw)
+        elif bw is not None:
+            object.__setattr__(self, "bandwidth_bytes_per_s", float(bw))
+        if self.rates is not None and self.bandwidth_bytes_per_s is not None:
+            raise ValueError("links: give either explicit rates OR "
+                             "bandwidth_bytes_per_s, not both")
+        if (self.bandwidth_bytes_per_s is None) != (self.msg_bytes is None):
+            raise ValueError("links: bandwidth_bytes_per_s and msg_bytes "
+                             "must be given together")
+        if self.msg_bytes is not None and not self.msg_bytes > 0:
+            raise ValueError(f"links.msg_bytes must be > 0, "
+                             f"got {self.msg_bytes}")
+        if self.rates is not None and any(r < 0 for r in self.rates):
+            raise ValueError(f"links.rates must be >= 0, got {self.rates}")
+        if self.bandwidth_bytes_per_s is not None:
+            arr = np.atleast_1d(np.asarray(self.bandwidth_bytes_per_s))
+            if not np.all(arr > 0):
+                raise ValueError("links.bandwidth_bytes_per_s must be > 0, "
+                                 f"got {self.bandwidth_bytes_per_s}")
+        if self.grad_seconds < 0:
+            raise ValueError(f"links.grad_seconds must be >= 0, "
+                             f"got {self.grad_seconds}")
+
+    @property
+    def is_default(self) -> bool:
+        return self.rates is None and self.bandwidth_bytes_per_s is None
+
+    def _bandwidth_arr(self, graph: Graph) -> np.ndarray:
+        bw = np.asarray(self.bandwidth_bytes_per_s, dtype=np.float64)
+        if bw.ndim == 0:
+            return np.full(graph.num_edges, float(bw))
+        if bw.shape != (graph.num_edges,):
+            raise ValueError(
+                "links.bandwidth_bytes_per_s must be scalar or shape "
+                f"({graph.num_edges},) = (num_edges,) for topology "
+                f"'{graph.name}', got {bw.shape}")
+        return bw
+
+    def edge_rates(self, graph: Graph) -> np.ndarray | None:
+        """Per-edge event rates this model induces on ``graph`` (None =
+        keep the topology's own rates)."""
+        if self.rates is not None:
+            arr = np.asarray(self.rates, dtype=np.float64)
+            if arr.shape != (graph.num_edges,):
+                raise ValueError(
+                    f"links.rates must have shape ({graph.num_edges},) = "
+                    f"(num_edges,) for topology '{graph.name}', "
+                    f"got {arr.shape}")
+            return arr
+        if self.bandwidth_bytes_per_s is not None:
+            cap = self._bandwidth_arr(graph) / float(self.msg_bytes)
+            # normalize so the mean worker rate is 1 (sum of worker rates =
+            # 2 * sum of edge rates = n); comms_per_grad scales from there
+            return cap * (graph.n / 2.0) / cap.sum()
+        return None
+
+    def seconds_per_event(self, graph: Graph) -> np.ndarray:
+        """(E,) wall seconds one p2p message occupies each link."""
+        if self.bandwidth_bytes_per_s is None:
+            raise ValueError("seconds_per_event needs a bandwidth-aware "
+                             "LinkModel (bandwidth_bytes_per_s + msg_bytes)")
+        return float(self.msg_bytes) / self._bandwidth_arr(graph)
+
+    def round_seconds(self, schedule, graph: Graph,
+                      rounds: range | None = None) -> np.ndarray:
+        """Wall seconds per simulated round under this link model.
+
+        Links transfer in parallel; events on the SAME link serialize, so a
+        round costs ``grad_seconds`` plus the busiest link's transfer time.
+        This is the wall-clock x-axis of ``BENCH_topology.json``.  ``rounds``
+        restricts to a slice of the schedule (``World.round_seconds`` uses
+        it to apply each segment's own graph); default = all rounds.
+        """
+        spe = self.seconds_per_event(graph)
+        eidx = graph.edge_index()
+        rs = range(schedule.rounds) if rounds is None else rounds
+        out = np.full(len(rs), float(self.grad_seconds))
+        for o, r in enumerate(rs):
+            busy = np.zeros(max(graph.num_edges, 1))
+            for k in range(schedule.partners.shape[1]):
+                if not schedule.event_mask[r, k]:
+                    continue
+                p = schedule.partners[r, k]
+                for i in range(schedule.n):
+                    j = int(p[i])
+                    if j > i:
+                        e = eidx.get((i, j))
+                        if e is not None:
+                            busy[e] += spe[e]
+            out[o] += busy.max()
+        return out
+
+    def to_dict(self) -> dict:
+        bw = self.bandwidth_bytes_per_s
+        return {"rates": None if self.rates is None else list(self.rates),
+                "bandwidth_bytes_per_s": list(bw) if isinstance(bw, tuple)
+                else bw,
+                "msg_bytes": self.msg_bytes,
+                "grad_seconds": self.grad_seconds,
+                "per_edge": self.per_edge}
+
+    @staticmethod
+    def from_dict(d: dict) -> "LinkModel":
+        return LinkModel(rates=d.get("rates"),
+                         bandwidth_bytes_per_s=d.get("bandwidth_bytes_per_s"),
+                         msg_bytes=d.get("msg_bytes"),
+                         grad_seconds=d.get("grad_seconds", 0.0),
+                         per_edge=d.get("per_edge"))
+
+
+# -------------------------------------------------------------------- faults
+
+@dataclasses.dataclass(frozen=True)
+class ChurnProcess:
+    """Poisson failure/repair churn: each worker is a 2-state Markov chain
+    (alive -> dead at rate ``fail_rate`` per round, dead -> alive at
+    ``repair_rate``), sampled per round from a dedicated rng stream and
+    compiled onto the schedule as segments of constant aliveness — detached
+    rows keep the exact fixed-point/frozen-clock semantics of DESIGN.md §8.
+
+    workers — optional subset of worker ids eligible to fail (None = all).
+    """
+
+    fail_rate: float
+    repair_rate: float
+    workers: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if not (np.isfinite(self.fail_rate) and self.fail_rate >= 0):
+            raise ValueError(
+                f"ChurnProcess.fail_rate must be >= 0, got {self.fail_rate}")
+        if not (np.isfinite(self.repair_rate) and self.repair_rate >= 0):
+            raise ValueError(f"ChurnProcess.repair_rate must be >= 0, "
+                             f"got {self.repair_rate}")
+        if self.workers is not None:
+            object.__setattr__(self, "workers",
+                               tuple(int(w) for w in self.workers))
+
+    def sample_alive(self, rounds: int, n: int, seed: int) -> np.ndarray:
+        """(R, n) bool aliveness trajectory.  Round 0 starts all-alive; the
+        chain then takes one transition per round.  Draws come from an rng
+        stream independent of the schedule's — the aliveness PATTERN never
+        depends on how events were sampled.  (The compiled events themselves
+        DO change when churn cuts the timeline into differently-seeded
+        segments; only a churn process that never fires leaves the event
+        stream bit-for-bit intact.)"""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([int(seed), _CHURN_TAG]))
+        p_fail = 1.0 - np.exp(-self.fail_rate)
+        p_repair = 1.0 - np.exp(-self.repair_rate)
+        eligible = np.zeros(n, dtype=bool)
+        if self.workers is None:
+            eligible[:] = True
+        else:
+            for w in self.workers:
+                if not 0 <= w < n:
+                    raise ValueError(f"ChurnProcess.workers entry {w} outside "
+                                     f"[0, {n})")
+                eligible[w] = True
+        alive = np.ones((rounds, n), dtype=bool)
+        state = np.ones(n, dtype=bool)
+        u = rng.uniform(size=(rounds, n))
+        for r in range(1, rounds):
+            flip = np.where(state, u[r] < p_fail, u[r] < p_repair) & eligible
+            state = np.where(flip, ~state, state)
+            alive[r] = state
+        return alive
+
+    def to_dict(self) -> dict:
+        return {"kind": "churn", "fail_rate": self.fail_rate,
+                "repair_rate": self.repair_rate,
+                "workers": None if self.workers is None
+                else list(self.workers)}
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSwitch:
+    """Deterministic mid-run world change at a fixed round: a new topology
+    (None = keep the current graph) and/or a new static active mask applying
+    from this round on (None = revert to the worker model's base mask)."""
+
+    at_round: int
+    topology: Graph | None = None
+    active: tuple[bool, ...] | None = None
+
+    def __post_init__(self):
+        if self.at_round <= 0:
+            raise ValueError(
+                f"PhaseSwitch.at_round must be >= 1, got {self.at_round}")
+        object.__setattr__(self, "active",
+                           _as_bool_tuple(self.active, "PhaseSwitch.active"))
+
+    def to_dict(self) -> dict:
+        return {"kind": "phase_switch", "at_round": self.at_round,
+                "topology": None if self.topology is None
+                else self.topology.to_dict(),
+                "active": None if self.active is None else list(self.active)}
+
+
+def _fault_from_dict(d: dict):
+    kind = d.get("kind")
+    if kind == "churn":
+        return ChurnProcess(d["fail_rate"], d["repair_rate"],
+                            workers=d.get("workers"))
+    if kind == "phase_switch":
+        topo = d.get("topology")
+        return PhaseSwitch(d["at_round"],
+                           topology=None if topo is None
+                           else Graph.from_dict(topo),
+                           active=d.get("active"))
+    raise ValueError(f"unknown fault kind {kind!r} "
+                     "(expected 'churn' or 'phase_switch')")
+
+
+# ---------------------------------------------------- topology serialization
+
+def _topology_to_dict(t: Graph | TopologySchedule) -> dict:
+    if isinstance(t, TopologySchedule):
+        return {"kind": "phases", **t.to_dict()}
+    return {"kind": "graph", **t.to_dict()}
+
+
+def _topology_from_dict(d: dict) -> Graph | TopologySchedule:
+    if d.get("kind") == "phases":
+        return TopologySchedule.from_dict(d)
+    return Graph.from_dict(d)
+
+
+# ------------------------------------------------------------------ segments
+
+@dataclasses.dataclass(frozen=True)
+class _Segment:
+    """One compiled slice of the timeline: a graph held for ``rounds`` with
+    a constant active mask, starting at absolute round ``start`` and sampled
+    with seed offset ``seed_offset``."""
+
+    graph: Graph
+    rounds: int
+    start: int
+    active: np.ndarray | None  # (n,) bool or None = all alive
+    seed_offset: int
+
+
+# --------------------------------------------------------------------- world
+
+@dataclasses.dataclass(frozen=True)
+class World:
+    """A declarative, serializable scenario: topology + worker model + link
+    model + fault processes.  ``compile(rounds, seed)`` lowers it to one
+    ``events.Schedule`` consumed unchanged by both replay paths."""
+
+    topology: Graph | TopologySchedule
+    workers: WorkerModel = WorkerModel()
+    links: LinkModel = LinkModel()
+    faults: tuple = ()
+    comms_per_grad: float = 1.0
+    jitter_grad_times: bool = True
+    t_offset: float = 0.0
+
+    def __post_init__(self):
+        if not isinstance(self.topology, (Graph, TopologySchedule)):
+            raise ValueError("topology must be a Graph or TopologySchedule, "
+                             f"got {type(self.topology).__name__}")
+        if not isinstance(self.workers, WorkerModel):
+            raise ValueError("workers must be a WorkerModel, "
+                             f"got {type(self.workers).__name__}")
+        if not isinstance(self.links, LinkModel):
+            raise ValueError("links must be a LinkModel, "
+                             f"got {type(self.links).__name__}")
+        object.__setattr__(self, "faults", tuple(self.faults))
+        for f in self.faults:
+            if not isinstance(f, (ChurnProcess, PhaseSwitch)):
+                raise ValueError("faults must be ChurnProcess/PhaseSwitch "
+                                 f"instances, got {type(f).__name__}")
+            if isinstance(f, ChurnProcess) and f.workers is not None:
+                bad = [w for w in f.workers if not 0 <= w < self.topology.n]
+                if bad:
+                    raise ValueError(
+                        f"ChurnProcess.workers entries {bad} outside "
+                        f"[0, {self.topology.n}) for this topology")
+        if not (np.isfinite(self.comms_per_grad)
+                and self.comms_per_grad >= 0):
+            raise ValueError(f"comms_per_grad must be >= 0, "
+                             f"got {self.comms_per_grad}")
+        n = self.n
+        if self.workers.grad_rates is not None \
+                and len(self.workers.grad_rates) != n:
+            raise ValueError(
+                f"workers.grad_rates must have shape ({n},) = (n_workers,) "
+                f"for this topology, got ({len(self.workers.grad_rates)},)")
+        if self.workers.active is not None \
+                and len(self.workers.active) != n:
+            raise ValueError(
+                f"workers.active must have shape ({n},) = (n_workers,) "
+                f"for this topology, got ({len(self.workers.active)},)")
+        switches = [f for f in self.faults if isinstance(f, PhaseSwitch)]
+        if switches and isinstance(self.topology, TopologySchedule):
+            raise ValueError("PhaseSwitch faults require a static Graph "
+                             "topology; a TopologySchedule already encodes "
+                             "its own phases")
+        ats = [s.at_round for s in switches]
+        if ats != sorted(set(ats)):
+            raise ValueError("PhaseSwitch.at_round values must be strictly "
+                             f"increasing, got {ats}")
+        for s in switches:
+            if s.topology is not None and s.topology.n != n:
+                raise ValueError(
+                    f"PhaseSwitch topology must keep n={n} workers, "
+                    f"got n={s.topology.n}")
+            if s.active is not None and len(s.active) != n:
+                raise ValueError(
+                    f"PhaseSwitch.active must have shape ({n},) = "
+                    f"(n_workers,), got ({len(s.active)},)")
+        multi_graph = isinstance(self.topology, TopologySchedule) or any(
+            s.topology is not None for s in switches)
+        if multi_graph and (self.links.rates is not None or isinstance(
+                self.links.bandwidth_bytes_per_s, tuple)):
+            raise ValueError(
+                "per-edge links.rates/bandwidth need a single static "
+                "topology (edge lists differ across phases) — give each "
+                "phase graph its own rates via Graph.with_rates, or use a "
+                "scalar bandwidth")
+        # eagerly validate per-edge alignment against the static topology
+        if isinstance(self.topology, Graph):
+            self.links.edge_rates(self.topology)
+
+    # ------------------------------------------------------------ structure
+    @property
+    def n(self) -> int:
+        return self.topology.n
+
+    def _base_phases(self, rounds: int | None
+                     ) -> list[tuple[Graph, int, np.ndarray | None]]:
+        """(graph, rounds, active) triples from topology + PhaseSwitch
+        faults, before churn processes cut the timeline further."""
+        base_active = self.workers.active_arr()
+
+        def combine(a, b):
+            if a is None:
+                return None if b is None else b.copy()
+            return a.copy() if b is None else (a & b)
+
+        if isinstance(self.topology, TopologySchedule):
+            if rounds is not None and rounds != self.topology.total_rounds:
+                raise ValueError(
+                    f"rounds={rounds} does not match the TopologySchedule's "
+                    f"total of {self.topology.total_rounds}; pass rounds=None"
+                    " to use the schedule's own duration")
+            return [(p.graph, p.rounds,
+                     combine(base_active,
+                             None if p.active is None else p.active_mask()))
+                    for p in self.topology.phases]
+        if rounds is None:
+            raise ValueError("a World with a static Graph topology needs "
+                             "compile(rounds=...)")
+        switches = sorted((f for f in self.faults
+                           if isinstance(f, PhaseSwitch)),
+                          key=lambda s: s.at_round)
+        cuts = [0] + [s.at_round for s in switches if s.at_round < rounds] \
+            + [rounds]
+        out = []
+        graph = self.topology
+        active = base_active
+        live = [s for s in switches if s.at_round < rounds]
+        for i in range(len(cuts) - 1):
+            if i > 0:
+                sw = live[i - 1]
+                if sw.topology is not None:
+                    graph = sw.topology
+                active = combine(base_active,
+                                 None if sw.active is None
+                                 else np.asarray(sw.active, bool))
+            if cuts[i + 1] > cuts[i]:
+                out.append((graph, cuts[i + 1] - cuts[i], active))
+        return out
+
+    def segments(self, rounds: int | None = None, seed: int = 0
+                 ) -> list[_Segment]:
+        """The fully-resolved compilation plan: phases cut at every
+        ChurnProcess aliveness change, with per-segment seeds and starts."""
+        phases = self._base_phases(rounds)
+        total = sum(r for _, r, _ in phases)
+        churns = [f for f in self.faults if isinstance(f, ChurnProcess)]
+        churn_alive = None
+        for i, c in enumerate(churns):
+            a = c.sample_alive(total, self.n, seed + i)
+            churn_alive = a if churn_alive is None else (churn_alive & a)
+
+        segs: list[_Segment] = []
+        start = 0
+        for graph, ph_rounds, ph_active in phases:
+            if churn_alive is None:
+                segs.append(_Segment(graph, ph_rounds, start, ph_active,
+                                     len(segs)))
+            else:
+                rows = churn_alive[start:start + ph_rounds]
+                if ph_active is not None:
+                    rows = rows & ph_active[None, :]
+                r0 = 0
+                for r in range(1, ph_rounds + 1):
+                    if r == ph_rounds or not np.array_equal(rows[r],
+                                                            rows[r0]):
+                        act = None if rows[r0].all() else rows[r0]
+                        segs.append(_Segment(graph, r - r0, start + r0,
+                                             act, len(segs)))
+                        r0 = r
+            start += ph_rounds
+        return segs
+
+    def phase_plan(self, rounds: int | None = None, seed: int = 0
+                   ) -> TopologySchedule:
+        """The compiled segment structure as a TopologySchedule (for chi
+        inspection, per-phase matching banks, reporting)."""
+        return TopologySchedule(tuple(
+            TopologyPhase(s.graph, s.rounds,
+                          None if s.active is None else tuple(s.active))
+            for s in self.segments(rounds, seed)))
+
+    def segment_graphs(self, rounds: int | None = None, seed: int = 0
+                       ) -> list[Graph]:
+        """Per-segment *effective* communication graphs: link-model rates
+        applied, detached workers isolated (what matching banks consume)."""
+        out = []
+        for s in self.segments(rounds, seed):
+            g = s.graph
+            er = self.links.edge_rates(g)
+            if er is not None:
+                g = g.with_rates(er)
+            if s.active is not None and not s.active.all():
+                g = g.subgraph(s.active)
+            out.append(g)
+        return out
+
+    def static_graph(self) -> Graph:
+        """The single effective graph of a static (fault-free, fully-attached
+        Graph) world — what the mesh trainers derive A²CiD² parameters and
+        matching banks from.  Raises for phased/churned worlds: a detached
+        worker would sit as an isolated node, making chi1 infinite and the
+        derived mixing parameters degenerate (DESIGN.md §8)."""
+        a = self.workers.active_arr()
+        if not isinstance(self.topology, Graph) or self.faults \
+                or (a is not None and not a.all()):
+            raise ValueError(
+                "static_graph needs a fault-free Graph-topology world with "
+                "all workers attached (chi of a world with detached workers "
+                "is only defined per phase) — use segment_graphs()/"
+                "phase_plan() and gossip.phase_banks/world_banks")
+        g = self.topology
+        er = self.links.edge_rates(g)
+        if er is not None:
+            g = g.with_rates(er)
+        return g
+
+    # -------------------------------------------------------------- compile
+    def compile(self, rounds: int | None = None, seed: int = 0):
+        """Lower the world to ONE ``events.Schedule``.
+
+        Bit-for-bit contract: a World mirroring ``make_schedule`` /
+        ``make_topology_schedule`` kwargs produces the identical schedule
+        under the same seed (those entry points are now wrappers over this).
+        """
+        from .events import _sample_schedule, concat_schedules
+
+        grad_rates = self.workers.grad_rates_arr()
+        scheds = []
+        for s in self.segments(rounds, seed):
+            scheds.append(_sample_schedule(
+                s.graph, s.rounds, self.comms_per_grad,
+                seed=seed + s.seed_offset,
+                jitter_grad_times=self.jitter_grad_times,
+                grad_rates=grad_rates,
+                edge_rates=self.links.edge_rates(s.graph),
+                per_edge=self.links.per_edge,
+                t_offset=self.t_offset + float(s.start),
+                active=s.active))
+        return concat_schedules(scheds)
+
+    def round_seconds(self, schedule) -> np.ndarray:
+        """(R,) wall seconds per round of a schedule this world compiled,
+        applying each phase's own graph to the link model (phase switches
+        change the edge set mid-run; churn cuts don't — detached workers
+        simply have no events, so only the graph-per-phase structure
+        matters and the result is seed-independent)."""
+        rounds = None if isinstance(self.topology, TopologySchedule) \
+            else schedule.rounds
+        out = np.zeros(schedule.rounds)
+        start = 0
+        for graph, ph_rounds, _ in self._base_phases(rounds):
+            out[start:start + ph_rounds] = self.links.round_seconds(
+                schedule, graph, range(start, start + ph_rounds))
+            start += ph_rounds
+        return out
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"topology": _topology_to_dict(self.topology),
+                "workers": self.workers.to_dict(),
+                "links": self.links.to_dict(),
+                "faults": [f.to_dict() for f in self.faults],
+                "comms_per_grad": self.comms_per_grad,
+                "jitter_grad_times": self.jitter_grad_times,
+                "t_offset": self.t_offset}
+
+    @staticmethod
+    def from_dict(d: dict) -> "World":
+        return World(topology=_topology_from_dict(d["topology"]),
+                     workers=WorkerModel.from_dict(d.get("workers", {})),
+                     links=LinkModel.from_dict(d.get("links", {})),
+                     faults=tuple(_fault_from_dict(f)
+                                  for f in d.get("faults", ())),
+                     comms_per_grad=d.get("comms_per_grad", 1.0),
+                     jitter_grad_times=d.get("jitter_grad_times", True),
+                     t_offset=d.get("t_offset", 0.0))
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @staticmethod
+    def from_json(s: str) -> "World":
+        return World.from_dict(json.loads(s))

@@ -37,6 +37,20 @@ from ..optim.optimizers import Optimizer
 PyTree = Any
 
 
+def _comms_per_step(world) -> int:
+    """The world's comms_per_grad as the trainers' whole-event count.
+
+    The mesh trainers run an integer number of gossip events per super-step,
+    so a fractional declared rate cannot be honored silently."""
+    cps = float(world.comms_per_grad)
+    if abs(cps - round(cps)) > 1e-9:
+        raise ValueError(
+            f"world.comms_per_grad={cps} is not an integer; the mesh "
+            "trainers run a whole number of gossip events per step — pass "
+            "comms_per_step explicitly to choose one")
+    return int(round(cps))
+
+
 def _rate_vec(grad_rates, n: int) -> jax.Array | None:
     """Validated per-worker gradient-rate vector (None = homogeneous).
 
@@ -76,6 +90,26 @@ class GossipTrainer:
     # Exp(1)/rate, the time-dilation realization of the same rate process
     # the simulator expresses by tick thinning (DESIGN.md §8).  None = all 1.
     grad_rates: tuple[float, ...] | None = None
+
+    @classmethod
+    def from_world(cls, world, loss_fn: Callable, optimizer: Optimizer, *,
+                   accelerated: bool = True, **kw) -> "GossipTrainer":
+        """Build the trainer from a declarative ``core.world.World``.
+
+        The world must be static (fault-free Graph topology —
+        ``World.static_graph``); its link model sets the gossip graph's edge
+        rates, its worker model the straggler clocks, its ``comms_per_grad``
+        the per-step gossip-event count, and the A²CiD² parameters come from
+        the effective graph's chi values.
+        """
+        from ..core.a2cid2 import params_from_graph
+
+        graph = world.static_graph()
+        if "comms_per_step" not in kw:  # explicit override skips the check
+            kw["comms_per_step"] = _comms_per_step(world)
+        return cls(loss_fn, optimizer, graph,
+                   params_from_graph(graph, accelerated=accelerated),
+                   grad_rates=world.workers.grad_rates, **kw)
 
     def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
         return GossipTrainState(
@@ -192,6 +226,20 @@ class StackedGossipTrainer:
     # per-worker gradient rates (straggler clocks) — see GossipTrainer;
     # matches events.make_schedule(grad_rates=...) in distribution
     grad_rates: tuple[float, ...] | None = None
+
+    @classmethod
+    def from_world(cls, world, grad_fn: Callable, optimizer: Optimizer, *,
+                   accelerated: bool = True, **kw) -> "StackedGossipTrainer":
+        """Build the trainer from a declarative ``core.world.World`` (static
+        Graph topology; see ``GossipTrainer.from_world``)."""
+        from ..core.a2cid2 import params_from_graph
+
+        graph = world.static_graph()
+        if "comms_per_step" not in kw:  # explicit override skips the check
+            kw["comms_per_step"] = _comms_per_step(world)
+        return cls(grad_fn, optimizer, graph,
+                   params_from_graph(graph, accelerated=accelerated),
+                   grad_rates=world.workers.grad_rates, **kw)
 
     def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
         n = self.graph.n

@@ -1,0 +1,490 @@
+"""Declarative World API (core/world.py; DESIGN.md §9).
+
+The contract under test: ``make_schedule`` / ``make_topology_schedule`` are
+thin wrappers over ``World(...).compile(...)`` and stay bit-for-bit identical
+to the pre-World sampler under the same seed, across homogeneous, straggler,
+per-edge, and multi-phase-churn worlds, on both replay backends.  On top of
+that: construction-time validation with actionable errors, JSON round-trips,
+the per-event extras channel, Poisson churn compilation, and the
+bandwidth-aware link model.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChurnProcess, LinkModel, PhaseSwitch, Simulator,
+                        TopologyPhase, TopologySchedule, WorkerModel, World,
+                        build_graph, coalesce_schedule, coalesced_stream,
+                        concat_schedules, make_schedule,
+                        make_topology_schedule, matching_bank,
+                        params_from_graph, ring_graph, world_banks)
+
+SCHED_FIELDS = ("partners", "event_times", "event_mask", "grad_times")
+
+
+def _assert_schedules_identical(a, b):
+    for f in SCHED_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    np.testing.assert_array_equal(a.grad_scale(), b.grad_scale())
+    np.testing.assert_array_equal(a.alive_arr(), b.alive_arr())
+
+
+def _quad_grad_fn(b):
+    def grad_fn(x, key, wid):
+        g = (x - b[wid]).astype(x.dtype)
+        return 0.5 * jnp.sum(g ** 2), g
+    return grad_fn
+
+
+# --------------------------------------------------- compatibility contract
+
+N = 12
+
+
+def _compat_cases():
+    g = ring_graph(N)
+    active = np.ones(N, bool)
+    active[3] = False
+    return {
+        "homogeneous": (g, {}, World(topology=g, comms_per_grad=1.5)),
+        "straggler": (
+            g, dict(grad_rates=np.linspace(0.2, 1.0, N)),
+            World(topology=g, comms_per_grad=1.5,
+                  workers=WorkerModel(grad_rates=np.linspace(0.2, 1.0, N)))),
+        "per_edge": (
+            g, dict(edge_rates=np.linspace(0.2, 1.2, g.num_edges)),
+            World(topology=g, comms_per_grad=1.5,
+                  links=LinkModel(rates=np.linspace(0.2, 1.2,
+                                                    g.num_edges)))),
+        "static_churn": (
+            g, dict(active=active),
+            World(topology=g, comms_per_grad=1.5,
+                  workers=WorkerModel(active=active))),
+        "offset_no_jitter": (
+            g, dict(t_offset=7.0, jitter_grad_times=False),
+            World(topology=g, comms_per_grad=1.5, t_offset=7.0,
+                  jitter_grad_times=False)),
+    }
+
+
+@pytest.mark.parametrize("case", sorted(_compat_cases()))
+def test_make_schedule_equals_world_compile(case):
+    """make_schedule(**kw) must be bit-for-bit World(...).compile() — the
+    World here is constructed EXPLICITLY (not through the wrapper), so this
+    pins the kwarg->World lowering, not just wrapper self-consistency."""
+    g, kw, world = _compat_cases()[case]
+    for seed in (0, 11):
+        a = make_schedule(g, rounds=25, comms_per_grad=1.5, seed=seed, **kw)
+        b = world.compile(25, seed=seed)
+        _assert_schedules_identical(a, b)
+
+
+def test_topology_schedule_equals_world_compile():
+    """Multi-phase churn world: the tsched wrapper, the World(topology=ts)
+    form, and the PhaseSwitch-fault form all compile identically."""
+    g = ring_graph(N)
+    exp = build_graph("exponential", N)
+    active = np.ones(N, bool)
+    active[1] = False
+    ts = TopologySchedule((
+        TopologyPhase(g, 8),
+        TopologyPhase(g, 8, tuple(active)),
+        TopologyPhase(exp, 8),
+    ))
+    rates = np.linspace(0.3, 1.0, N)
+    a = make_topology_schedule(ts, comms_per_grad=1.2, seed=5,
+                               grad_rates=rates, per_edge=True)
+    b = World(topology=ts, comms_per_grad=1.2,
+              workers=WorkerModel(grad_rates=rates),
+              links=LinkModel(per_edge=True)).compile(seed=5)
+    c = World(topology=g, comms_per_grad=1.2,
+              workers=WorkerModel(grad_rates=rates),
+              links=LinkModel(per_edge=True),
+              faults=(PhaseSwitch(8, active=tuple(active)),
+                      PhaseSwitch(16, topology=exp))).compile(24, seed=5)
+    _assert_schedules_identical(a, b)
+    _assert_schedules_identical(a, c)
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_world_replay_matches_wrapper_on_both_backends(engine):
+    """Replaying a World-compiled hetero schedule must equal replaying the
+    wrapper-built one on BOTH replay paths (engine and per-event ref)."""
+    n, d = 8, 10
+    g = ring_graph(n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    rates = np.linspace(0.4, 1.0, n)
+    kw = dict(comms_per_grad=1.3, grad_rates=rates,
+              edge_rates=np.linspace(0.5, 1.5, g.num_edges))
+    sched_a = make_schedule(g, rounds=12, seed=2, **kw)
+    world = World(topology=g, comms_per_grad=1.3,
+                  workers=WorkerModel(grad_rates=rates),
+                  links=LinkModel(rates=kw["edge_rates"]))
+    sim = Simulator(_quad_grad_fn(b), params_from_graph(g, True), gamma=0.05,
+                    backend="ref")
+    st = sim.init(jnp.zeros(d, jnp.float32), n, jax.random.PRNGKey(2))
+    fin_a, tr_a = sim.run_schedule(st, sched_a, engine=engine)
+    fin_b, tr_b = sim.run_world(st, world, 12, seed=2, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin_a.x), np.asarray(fin_b.x))
+    np.testing.assert_array_equal(np.asarray(fin_a.t_last),
+                                  np.asarray(fin_b.t_last))
+    np.testing.assert_array_equal(np.asarray(tr_a.consensus),
+                                  np.asarray(tr_b.consensus))
+
+
+# ------------------------------------------------------ validation contract
+
+def test_validation_names_the_offending_field():
+    g = ring_graph(8)
+    with pytest.raises(ValueError, match=r"workers\.grad_rates.*\(8,\)"):
+        World(topology=g, workers=WorkerModel(grad_rates=np.ones(5)))
+    with pytest.raises(ValueError, match=r"workers\.grad_rates.*\[0, 1\]"):
+        WorkerModel(grad_rates=[0.5, 2.0])
+    with pytest.raises(ValueError, match=r"workers\.grad_rates.*1-D"):
+        WorkerModel(grad_rates=np.ones((4, 2)))
+    with pytest.raises(ValueError, match=r"workers\.active.*\(8,\)"):
+        World(topology=g, workers=WorkerModel(active=[True] * 3))
+    with pytest.raises(ValueError, match=r"links\.rates.*\(8,\)"):
+        World(topology=g, links=LinkModel(rates=np.ones(3)))
+    with pytest.raises(ValueError, match="not both"):
+        LinkModel(rates=[1.0], bandwidth_bytes_per_s=1e9, msg_bytes=4.0)
+    with pytest.raises(ValueError, match="msg_bytes"):
+        LinkModel(bandwidth_bytes_per_s=1e9)
+    with pytest.raises(ValueError, match=r"links\.msg_bytes"):
+        LinkModel(bandwidth_bytes_per_s=1e9, msg_bytes=0.0)
+    with pytest.raises(ValueError, match="fail_rate"):
+        ChurnProcess(-0.1, 0.2)
+    with pytest.raises(ValueError, match="at_round"):
+        PhaseSwitch(0)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        World(topology=g, faults=(PhaseSwitch(5), PhaseSwitch(5)))
+    ts = TopologySchedule((TopologyPhase(g, 4),))
+    with pytest.raises(ValueError, match="TopologySchedule already encodes"):
+        World(topology=ts, faults=(PhaseSwitch(2),))
+    with pytest.raises(ValueError, match=r"ChurnProcess\.workers.*\[0, 8\)"):
+        World(topology=g, faults=(ChurnProcess(0.1, 0.1, workers=(99,)),))
+    with pytest.raises(ValueError, match="topology must be a Graph"):
+        World(topology="ring")
+    with pytest.raises(ValueError, match=r"needs compile\(rounds=\.\.\.\)"):
+        World(topology=g).compile()
+    with pytest.raises(ValueError, match="does not match"):
+        World(topology=ts).compile(9)
+    # the wrapper inherits World's validation
+    with pytest.raises(ValueError, match=r"workers\.grad_rates"):
+        make_schedule(g, rounds=5, grad_rates=np.ones(3))
+
+
+def test_per_edge_link_models_need_static_topology():
+    g = ring_graph(8)
+    with pytest.raises(ValueError, match="single static"):
+        World(topology=g, links=LinkModel(rates=np.ones(8)),
+              faults=(PhaseSwitch(3, topology=build_graph("complete", 8)),))
+    # scalar bandwidth composes with phase switches fine
+    World(topology=g,
+          links=LinkModel(bandwidth_bytes_per_s=1e9, msg_bytes=4.0),
+          faults=(PhaseSwitch(3, topology=build_graph("complete", 8)),)
+          ).compile(6, seed=0)
+
+
+# --------------------------------------------------------- json round-trips
+
+def test_world_json_round_trip():
+    g = ring_graph(8)
+    ts = TopologySchedule((TopologyPhase(g, 6),
+                           TopologyPhase(build_graph("exponential", 8), 6,
+                                         (True,) * 7 + (False,))))
+    worlds = [
+        World(topology=g),
+        World(topology=g, comms_per_grad=2.0, jitter_grad_times=False,
+              t_offset=3.5,
+              workers=WorkerModel(grad_rates=np.linspace(0.1, 1, 8),
+                                  active=[True] * 7 + [False]),
+              links=LinkModel(rates=np.linspace(0.5, 1.5, 8),
+                              per_edge=True),
+              faults=(ChurnProcess(0.1, 0.3, workers=(0, 2)),)),
+        World(topology=g,
+              links=LinkModel(bandwidth_bytes_per_s=(1e9,) * 8,
+                              msg_bytes=256.0, grad_seconds=1e-6),
+              faults=(PhaseSwitch(4, active=(True,) * 7 + (False,)),)),
+        World(topology=ts,
+              links=LinkModel(bandwidth_bytes_per_s=5e8, msg_bytes=64.0)),
+    ]
+    for w in worlds:
+        s = w.to_json()
+        json.loads(s)  # valid JSON
+        w2 = World.from_json(s)
+        assert w2 == w
+        rounds = None if isinstance(w.topology, TopologySchedule) else 10
+        _assert_schedules_identical(w.compile(rounds, seed=3),
+                                    w2.compile(rounds, seed=3))
+
+
+def test_fault_from_dict_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        World.from_dict({"topology": {"kind": "graph",
+                                      **ring_graph(4).to_dict()},
+                         "faults": [{"kind": "meteor"}]})
+
+
+# ----------------------------------------------------------- poisson churn
+
+def test_churn_process_compiles_deterministically():
+    g = ring_graph(10)
+    w = World(topology=g, faults=(ChurnProcess(0.05, 0.3),))
+    a = w.compile(30, seed=4)
+    b = w.compile(30, seed=4)
+    _assert_schedules_identical(a, b)
+    c = w.compile(30, seed=5)
+    assert not np.array_equal(a.alive_arr(), c.alive_arr()) \
+        or not np.array_equal(a.partners, c.partners)
+
+
+def test_churn_stationary_alive_fraction():
+    """The per-worker chain's stationary alive probability is
+    repair/(fail+repair) in hazard terms; check the realized fraction."""
+    proc = ChurnProcess(fail_rate=0.1, repair_rate=0.3)
+    alive = proc.sample_alive(4000, 16, seed=0)
+    p_fail = 1 - np.exp(-0.1)
+    p_rep = 1 - np.exp(-0.3)
+    target = p_rep / (p_fail + p_rep)
+    assert abs(alive[2000:].mean() - target) < 0.05
+    assert alive[0].all()  # round 0 starts all-alive
+
+
+def test_churn_respects_worker_subset_and_schedule_semantics():
+    g = ring_graph(8)
+    w = World(topology=g, faults=(ChurnProcess(0.5, 0.1, workers=(2, 5)),))
+    sched = w.compile(40, seed=1)
+    alive = sched.alive_arr()
+    # only the eligible workers ever die
+    always_up = np.ones(8, bool)
+    always_up[[2, 5]] = False
+    assert alive[:, always_up].all()
+    assert not alive[:, [2, 5]].all()
+    # dead workers join no matchings and take no gradient ticks
+    gs = sched.grad_scale()
+    for r in range(sched.rounds):
+        for i in (2, 5):
+            if not alive[r, i]:
+                assert gs[r, i] == 0.0
+                assert (sched.partners[r, :, i] == i).all()
+    # segmentation lines up with the compiled aliveness
+    segs = w.segments(40, seed=1)
+    assert sum(s.rounds for s in segs) == 40
+    assert len(world_banks(w, 40, seed=1)) == len(segs)
+
+
+def test_zero_rate_churn_reduces_to_plain_world():
+    """A ChurnProcess that never fires compiles bit-for-bit like no churn
+    at all (one segment, untouched event stream) — the exact-reduction
+    discipline every heterogeneous axis follows."""
+    g = ring_graph(8)
+    plain = World(topology=g).compile(20, seed=6)
+    churned = World(topology=g,
+                    faults=(ChurnProcess(0.0, 0.5),)).compile(20, seed=6)
+    _assert_schedules_identical(plain, churned)
+    assert churned.alive is None
+
+
+# ------------------------------------------------------ bandwidth-aware links
+
+def test_uniform_bandwidth_reproduces_builder_rates():
+    for name in ("ring", "torus", "complete", "hypercube"):
+        g = build_graph(name, 16)
+        lm = LinkModel(bandwidth_bytes_per_s=50e9, msg_bytes=1024.0)
+        np.testing.assert_allclose(lm.edge_rates(g), np.asarray(g.rates),
+                                   rtol=1e-12)
+
+
+def test_heterogeneous_bandwidth_rates_proportional_and_per_edge():
+    g = ring_graph(8)
+    bw = np.full(g.num_edges, 8e9)
+    bw[0] = 1e9  # one slow link
+    lm = LinkModel(bandwidth_bytes_per_s=tuple(bw), msg_bytes=128.0)
+    er = lm.edge_rates(g)
+    np.testing.assert_allclose(er[1:] / er[0], bw[1:] / bw[0])
+    # mean worker rate normalized to 1
+    np.testing.assert_allclose(2 * er.sum() / g.n, 1.0)
+    # non-uniform rates auto-select the Def 3.1 per-edge path: the slow
+    # link fires ~8x less often than the fast ones
+    sched = World(topology=g, links=lm).compile(600, seed=0)
+    from repro.core import empirical_laplacian
+    L = empirical_laplacian(sched)
+    i, j = g.edges[0]
+    k, l = g.edges[1]
+    assert -L[i, j] < 0.4 * -L[k, l]
+
+
+def test_round_seconds_single_link():
+    """n=2 world: one link, so wall time per round is grad_seconds plus
+    events-in-round x msg/bw exactly."""
+    g = ring_graph(2)
+    lm = LinkModel(bandwidth_bytes_per_s=1e6, msg_bytes=1e3,
+                   grad_seconds=0.5)
+    w = World(topology=g, links=lm, comms_per_grad=2.0)
+    sched = w.compile(12, seed=3)
+    per_event = 1e3 / 1e6
+    expect = 0.5 + sched.comm_events_per_round() * per_event
+    np.testing.assert_allclose(w.round_seconds(sched), expect)
+
+
+def test_round_seconds_spans_phase_switch():
+    """Wall clock applies each segment's own graph (ring -> complete)."""
+    g = ring_graph(8)
+    lm = LinkModel(bandwidth_bytes_per_s=1e9, msg_bytes=4e3)
+    w = World(topology=g, links=lm,
+              faults=(PhaseSwitch(5, topology=build_graph("complete", 8)),))
+    sched = w.compile(10, seed=0)
+    rs = w.round_seconds(sched)
+    assert rs.shape == (10,)
+    assert (rs >= 0).all() and rs.max() > 0
+
+
+def test_seconds_per_event_requires_bandwidth():
+    with pytest.raises(ValueError, match="bandwidth"):
+        LinkModel(rates=(1.0, 1.0)).seconds_per_event(ring_graph(2))
+
+
+# --------------------------------------------------------- extras channel
+
+def test_with_extras_validates_and_broadcasts():
+    g = ring_graph(6)
+    sched = make_schedule(g, rounds=5, seed=0)
+    R, K, n = sched.partners.shape
+    with pytest.raises(ValueError, match=r"extras\['corrupt'\]"):
+        sched.with_extras(corrupt=np.zeros((R, K + 1, n)))
+    s2 = sched.with_extras(stale=np.ones((R, K)))  # per-event scalar
+    assert s2.extras["stale"].shape == (R, K, n)
+    assert sched.extras is None  # original untouched
+    s3 = s2.with_extras(corrupt=np.zeros((R, K, n), bool))
+    assert set(s3.extras_dict()) == {"stale", "corrupt"}
+
+
+def test_extras_survive_concat_with_padding():
+    g = ring_graph(6)
+    a = make_schedule(g, rounds=4, seed=0, comms_per_grad=2.0)
+    b = make_schedule(g, rounds=4, seed=1, t_offset=4.0)
+    Ra, Ka, n = a.partners.shape
+    a = a.with_extras(corrupt=np.ones((Ra, Ka, n), np.float32))
+    cat = concat_schedules([a, b])
+    ext = cat.extras["corrupt"]
+    assert ext.shape == cat.partners.shape
+    # schedule-a rows keep their values (K-padding is zero)...
+    np.testing.assert_array_equal(ext[:4, :Ka], 1.0)
+    np.testing.assert_array_equal(ext[:4, Ka:], 0.0)
+    # ...and schedule b (no extras) contributes zero rows
+    np.testing.assert_array_equal(ext[4:], 0.0)
+
+
+def test_extras_thread_through_coalesce_and_stream():
+    """Every (time, partner, extra) triple a worker sees in the raw schedule
+    survives coalescing, and the flattened stream carries extras rows with
+    zeros at gradient ticks."""
+    g = ring_graph(8)
+    sched = make_schedule(g, rounds=6, seed=2, comms_per_grad=2.0)
+    R, K, n = sched.partners.shape
+    rng = np.random.default_rng(0)
+    sched = sched.with_extras(
+        tag=rng.uniform(1.0, 2.0, size=(R, K, n)).astype(np.float32))
+    cs = coalesce_schedule(sched)
+    assert cs.extras["tag"].shape == cs.partners.shape
+    for wk in range(n):
+        raw = sorted((float(sched.event_times[r, e]),
+                      int(sched.partners[r, e, wk]),
+                      float(sched.extras["tag"][r, e, wk]))
+                     for r in range(R) for e in range(K)
+                     if sched.event_mask[r, e]
+                     and sched.partners[r, e, wk] != wk)
+        coal = sorted((float(cs.wtimes[r, bb, wk]),
+                       int(cs.partners[r, bb, wk]),
+                       float(cs.extras["tag"][r, bb, wk]))
+                      for r in range(R) for bb in range(cs.partners.shape[1])
+                      if cs.batch_active[r, bb]
+                      and cs.partners[r, bb, wk] != wk)
+        assert raw == coal
+    stream = coalesced_stream(cs, np.zeros(n))
+    tag = stream.extras["tag"]
+    assert tag.shape == (stream.steps, n)
+    np.testing.assert_array_equal(tag[stream.is_grad], 0.0)
+    # involved workers carry their event's value, idle workers read 0
+    involved = stream.partners != np.arange(n)
+    assert (tag[involved] >= 1.0).all()
+    np.testing.assert_array_equal(tag[~involved], 0.0)
+
+
+# ----------------------------------------------------- trainers and banks
+
+def test_static_world_banks_and_trainer_from_world():
+    from repro.launch.gossip_train import StackedGossipTrainer
+    from repro.optim import sgd
+
+    g = ring_graph(8)
+    w = World(topology=g,
+              workers=WorkerModel(grad_rates=np.full(8, 0.5)))
+    banks = world_banks(w, rounds=5)
+    assert len(banks) == 1
+    np.testing.assert_array_equal(banks[0][0], matching_bank(g))
+
+    def grad_fn(p, batch):
+        return (0.5 * jnp.sum((p["w"] - batch) ** 2), None), \
+            {"w": p["w"] - batch}
+
+    tr = StackedGossipTrainer.from_world(w, grad_fn,
+                                         sgd(momentum=0.0, weight_decay=0.0),
+                                         backend="ref")
+    assert tr.graph == g
+    assert tr.grad_rates == (0.5,) * 8
+    assert tr.comms_per_step == 1  # inherited from world.comms_per_grad
+    assert tr.acid == params_from_graph(g, accelerated=True)
+    # one step runs end to end
+    state = tr.init({"w": jnp.zeros((3,), jnp.float32)},
+                    jax.random.PRNGKey(0))
+    batch = jnp.ones((8, 3), jnp.float32)
+    state, m = jax.jit(tr.make_step())(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_trainer_from_world_rejects_phased_worlds():
+    from repro.launch.gossip_train import GossipTrainer
+    from repro.optim import sgd
+
+    g = ring_graph(8)
+    w = World(topology=g, faults=(ChurnProcess(0.1, 0.1),))
+    with pytest.raises(ValueError, match="static_graph"):
+        GossipTrainer.from_world(w, lambda p, b: (0.0, {}),
+                                 sgd(momentum=0.0, weight_decay=0.0))
+    # a static churn mask would leave isolated nodes -> chi1 = inf ->
+    # degenerate A2CiD2 parameters, so it must be rejected too
+    w2 = World(topology=g,
+               workers=WorkerModel(active=[False] + [True] * 7))
+    with pytest.raises(ValueError, match="all workers attached"):
+        GossipTrainer.from_world(w2, lambda p, b: (0.0, {}),
+                                 sgd(momentum=0.0, weight_decay=0.0))
+
+
+def test_trainer_from_world_honors_comms_per_grad():
+    """The declared communication rate must reach the trainer: integer
+    rates map to comms_per_step, fractional ones fail loudly."""
+    from repro.launch.gossip_train import StackedGossipTrainer
+    from repro.optim import sgd
+
+    g = ring_graph(8)
+    opt = sgd(momentum=0.0, weight_decay=0.0)
+    grad = lambda p, b: ((0.0, {}), p)
+    tr = StackedGossipTrainer.from_world(World(topology=g, comms_per_grad=3),
+                                         grad, opt)
+    assert tr.comms_per_step == 3
+    # explicit override wins — even on a fractional-rate world
+    tr = StackedGossipTrainer.from_world(World(topology=g, comms_per_grad=3),
+                                         grad, opt, comms_per_step=5)
+    assert tr.comms_per_step == 5
+    tr = StackedGossipTrainer.from_world(World(topology=g,
+                                               comms_per_grad=1.5),
+                                         grad, opt, comms_per_step=2)
+    assert tr.comms_per_step == 2
+    with pytest.raises(ValueError, match="not an integer"):
+        StackedGossipTrainer.from_world(World(topology=g,
+                                              comms_per_grad=1.5), grad, opt)
