@@ -37,6 +37,67 @@ def _parse_only(arg):
     return [s.strip() for s in arg.split(",") if s.strip()]
 
 
+# ------------------------------------------------------- artifact emission
+
+_MAX_CURVE_POINTS = 48  # per-curve cap in the emitted JSON artifacts
+
+
+def _curve_indices(length: int, max_points: int = _MAX_CURVE_POINTS):
+    """Evenly spaced sample indices keeping first and last points."""
+    if length <= max_points:
+        return np.arange(length)
+    return np.unique(np.linspace(0, length - 1, max_points).round()
+                     .astype(int))
+
+
+def _downsample_entry(entry: dict, keys: tuple) -> dict:
+    """Downsample a curve entry's per-round arrays on SHARED indices (the
+    x-axis and every consensus curve stay aligned); scalars, world specs,
+    and anything not listed pass through untouched."""
+    lengths = [len(entry[k]) for k in keys if k in entry]
+    if not lengths:
+        return entry
+    idxs = _curve_indices(max(lengths))
+    out = dict(entry)
+    for k in keys:
+        if k in entry:
+            arr = entry[k]
+            out[k] = [arr[i] for i in idxs if i < len(arr)]
+    return out
+
+
+def _finite_or_none(x: float):
+    """JSON-safe scalar: divergent (nan/inf) values become null."""
+    x = float(x)
+    return x if np.isfinite(x) else None
+
+
+def _sanitize_json(obj):
+    """Recursively null out NaN/Inf floats so every bench writer is safe
+    against a diverged curve (json with allow_nan=False would otherwise
+    throw away a whole completed sweep at write time)."""
+    if isinstance(obj, dict):
+        return {k: _sanitize_json(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize_json(v) for v in obj]
+    if isinstance(obj, float):
+        return _finite_or_none(obj)
+    return obj
+
+
+def _dump_json(path_base: str, name: str, report: dict) -> None:
+    """Compact-writer for every BENCH_*.json artifact: no indentation
+    whitespace (the topology artifact was ~17k lines indented) and
+    NaN/Inf-free (``_sanitize_json``)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(path_base), "..", name)
+    with open(path, "w") as f:
+        json.dump(_sanitize_json(report), f, separators=(",", ":"),
+                  allow_nan=False)
+        f.write("\n")
+
+
 def _quad_grad_fn(b, noise=0.05):
     def grad_fn(x, key, wid):
         g = (x - b[wid]) + noise * jax.random.normal(key, x.shape)
@@ -225,9 +286,6 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
     sweeps only coalesced BATCHES, each one fused pass of 3 reads + 2 writes
     (x self + x partner rows + x~ self; the trailing mix rides along free).
     """
-    import json
-    import os
-
     sim, st, sched, cs, ref_arrays, eng_arrays = _sim_setup(seed)
     ref = lambda: sim.run(st, ref_arrays)[1].loss.block_until_ready()
     eng = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
@@ -260,10 +318,7 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
             "fused_reads_writes": fused_rw,
         },
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_gossip.json")
-    with open(path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    _dump_json(__file__, "BENCH_gossip.json", report)
     return [
         f"gossip_ref_100rounds_n16,{us_ref:.0f},{1e8/us_ref:.0f}_rounds_per_s",
         f"gossip_engine_100rounds_n16,{us_eng:.0f},"
@@ -294,10 +349,9 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
     the exact scenario that produced it, and each world carries a
     bandwidth-aware ``LinkModel`` (TPU ICI bandwidth from
     ``analysis/roofline.py``) giving the curves a wall-clock x-axis.
+    Curves are downsampled to <= 48 points (shared indices per entry) and
+    the JSON is written compact; world specs stay intact.
     """
-    import json
-    import os
-
     from repro.analysis.roofline import HBM_BW, ICI_BW
     from repro.core import (ChurnProcess, LinkModel, PhaseSwitch, Simulator,
                             WorkerModel, World, build_graph,
@@ -345,6 +399,10 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
             "tail_consensus_acid": tail_a,
             "acid_gain": tail_b / max(tail_a, 1e-12),
         }
+        entry = _downsample_entry(entry, ("cumulative_comm_events",
+                                          "wall_clock_seconds",
+                                          "consensus_baseline",
+                                          "consensus_acid"))
         return entry, sched, us_b + us_a
 
     rows, report = [], {"config": dict(_TOPO_BENCH), "seed": seed,
@@ -410,16 +468,161 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
     entry["slow_links"] = int((bw < ICI_BW).sum())
     report["scenarios"]["ring_degraded_links"] = entry
 
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_topology.json")
-    with open(path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    _dump_json(__file__, "BENCH_topology.json", report)
     rows.append("topology_scenarios,0.0,"
                 f"stragglers_gain="
                 f"{report['scenarios']['ring_stragglers']['acid_gain']:.3f};"
                 f"churn_alive="
                 f"{report['scenarios']['ring_poisson_churn']['mean_alive_fraction']:.3f}")
+    return rows
+
+
+_CHAN_BENCH = {
+    "n": 32, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
+    "gamma": 0.05, "noise": 0.05,
+    "horizons": [0, 2, 4, 8],          # staleness sweep (ring-buffer depth)
+    "stale_prob": 1.0,
+    "byz_fracs": [0.0, 0.05, 0.1, 0.2],  # fraction of ring edges Byzantine
+    "byz_mode": "scale", "byz_scale": 1e3, "byz_prob": 0.5,
+    "robust_clip": 5.0, "robust_rule": "trim",
+}
+
+
+def bench_channel_sweep(seed: int = 0) -> list[str]:
+    """Unreliable-channel artifact (DESIGN.md §10): consensus + breakdown
+    curves vs staleness horizon and vs the fraction of Byzantine edges on
+    the ring, accelerated vs baseline, with the robust-aggregation (norm
+    trim) replay next to the non-robust one.  Emits BENCH_channel.json.
+
+    The Byzantine family is a garbage-injection adversary (``scale`` mode
+    at 1e3, 50% duty cycle — an intermittent compromised link): without
+    the defense the replay diverges outright; with ``robust_rule='trim'``
+    the corrupted exchanges are rejected wholesale while the honest duty
+    cycle keeps the ring connected, so the accelerated gain survives.
+    The headline numbers are ``summary.gain_retention_at_0.1`` (robust
+    gain on the 10%-Byzantine ring over the clean-channel gain; the
+    acceptance bar is >= 0.8) and the divergent non-robust tails.
+
+    Every curve embeds its serialized ``World`` spec — channel included —
+    and NaN/Inf tails of diverged non-robust replays are emitted as null
+    plus a ``diverged`` flag.
+    """
+    from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
+                            Simulator, World, build_graph,
+                            params_from_graph)
+
+    cfg = _CHAN_BENCH
+    n, d, rounds = cfg["n"], cfg["d"], cfg["rounds"]
+    rate = cfg["comms_per_grad"]
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    grad_fn = _quad_grad_fn(b, noise=cfg["noise"])
+    ring = build_graph("ring", n)
+
+    def run_curve(world, accel, robust):
+        sim = Simulator(grad_fn, params_from_graph(ring, accelerated=accel),
+                        gamma=cfg["gamma"],
+                        robust_clip=cfg["robust_clip"] if robust else None,
+                        robust_rule=cfg["robust_rule"])
+        st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+        t0 = time.perf_counter()
+        _, trace = sim.run_schedule(st, world.compile(rounds, seed=seed))
+        us = (time.perf_counter() - t0) * 1e6
+        return np.asarray(trace.consensus, np.float64), us
+
+    def nantail(curve):
+        tail = curve[-30:]
+        if not np.isfinite(tail).any():
+            return float("nan")
+        return float(np.nanmean(tail))
+
+    def curve_entry(world, robust):
+        base, us_b = run_curve(world, False, robust)
+        acid, us_a = run_curve(world, True, robust)
+        tail_b = nantail(base)
+        tail_a = nantail(acid)
+        diverged = not (np.isfinite(base).all() and np.isfinite(acid).all())
+        gain = tail_b / max(tail_a, 1e-12) if np.isfinite(tail_b) \
+            and np.isfinite(tail_a) else float("nan")
+        entry = {
+            "world": world.to_dict(),
+            "robust": bool(robust),
+            "consensus_baseline": [_finite_or_none(v) for v in base],
+            "consensus_acid": [_finite_or_none(v) for v in acid],
+            "tail_consensus_baseline": _finite_or_none(tail_b),
+            "tail_consensus_acid": _finite_or_none(tail_a),
+            "acid_gain": _finite_or_none(gain),
+            "diverged": diverged,
+        }
+        entry = _downsample_entry(entry, ("consensus_baseline",
+                                          "consensus_acid"))
+        return entry, us_b + us_a
+
+    def fmt(g):  # sanitized gains are None when a replay diverged
+        return "None" if g is None else f"{g:.3f}"
+
+    rows = []
+    report = {"config": dict(cfg), "seed": seed,
+              "staleness": {}, "byzantine": {}, "summary": {}}
+
+    # family 1: staleness horizon sweep (all reads stale, uniform in
+    # [1, H]; H=0 is the clean exact-reduction anchor)
+    for h in cfg["horizons"]:
+        delay = DelayProcess(horizon=int(h), prob=cfg["stale_prob"])
+        world = World(topology=ring, comms_per_grad=rate,
+                      channel=None if h == 0
+                      else ChannelModel(delay=delay))
+        entry, us = curve_entry(world, robust=False)
+        report["staleness"][f"h{h}"] = entry
+        rows.append(f"channel_stale_h{h}_n{n},{us:.0f},"
+                    f"gain={fmt(entry['acid_gain'])}")
+
+    # family 2: Byzantine-edge fraction sweep, non-robust vs robust replay
+    E = ring.num_edges
+    for frac in cfg["byz_fracs"]:
+        k = int(round(frac * E))
+        tag = f"f{frac:g}"
+        if k == 0:
+            world = World(topology=ring, comms_per_grad=rate)
+        else:
+            picks = np.linspace(0, E, k, endpoint=False).astype(int)
+            adversary = ByzantineEdges(
+                tuple(ring.edges[i] for i in picks), cfg["byz_mode"],
+                scale=cfg["byz_scale"], prob=cfg["byz_prob"])
+            world = World(topology=ring, comms_per_grad=rate,
+                          channel=ChannelModel(adversary=adversary))
+        nonrobust, us1 = curve_entry(world, robust=False)
+        robust, us2 = curve_entry(world, robust=True)
+        report["byzantine"][tag] = {"edge_fraction": k / E,
+                                    "num_byzantine_edges": k,
+                                    "nonrobust": nonrobust,
+                                    "robust": robust}
+        gains = (nonrobust["acid_gain"], robust["acid_gain"])
+        rows.append(
+            f"channel_byz_{tag}_n{n},{us1 + us2:.0f},"
+            f"gain_nonrobust={gains[0]};gain_robust={gains[1]};"
+            f"diverged={nonrobust['diverged']}")
+
+    clean_gain = report["byzantine"]["f0"]["nonrobust"]["acid_gain"]
+    summary = {"clean_gain": clean_gain}
+    for frac in cfg["byz_fracs"]:
+        if frac == 0.0:
+            continue
+        cell = report["byzantine"][f"f{frac:g}"]
+        rg = cell["robust"]["acid_gain"]
+        summary[f"gain_retention_at_{frac:g}"] = (
+            None if rg is None or not clean_gain
+            else rg / clean_gain)
+        summary[f"nonrobust_diverged_at_{frac:g}"] = \
+            cell["nonrobust"]["diverged"]
+    report["summary"] = summary
+    _dump_json(__file__, "BENCH_channel.json", report)
+    nonzero = [f for f in cfg["byz_fracs"] if f > 0]
+    headline = min(nonzero, key=lambda f: abs(f - 0.1)) if nonzero else None
+    retention = summary.get(f"gain_retention_at_{headline:g}") \
+        if headline is not None else None
+    rows.append(f"channel_summary,0.0,clean_gain={fmt(clean_gain)};"
+                f"retention_at_{headline:g}="
+                f"{retention if retention is None else round(retention, 3)}")
     return rows
 
 
@@ -455,6 +658,7 @@ BENCHES = {
     "simulator": bench_simulator_throughput,
     "gossip": bench_gossip_engine,
     "topology": bench_topology_sweep,
+    "channel": bench_channel_sweep,
     "roofline": bench_roofline_summary,
 }
 
@@ -467,12 +671,16 @@ def main() -> None:
                     help="rng seed threaded into every world compilation "
                          "(schedules, scenario sampling)")
     ap.add_argument("--small", action="store_true",
-                    help="CI-sized topology sweep (n=16, fewer rounds/"
-                         "families) — for the scenario-smoke job")
+                    help="CI-sized sweeps (n=16, fewer rounds/families/"
+                         "channel points) — for the scenario-smoke jobs")
     args = ap.parse_args()
     if args.small:
         _TOPO_BENCH.update(n=16, rounds=60,
                            families=["ring", "complete"])
+        # cap the channel family too: 2 horizons + 2 Byzantine fractions at
+        # n=16/60 rounds keeps the CI smoke step inside its current budget
+        _CHAN_BENCH.update(n=16, rounds=60, horizons=[0, 2],
+                           byz_fracs=[0.0, 0.125])
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -2,6 +2,7 @@
 from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
                      consensus_distance, gradient_event, matched_p2p_update,
                      mixing_coeff, p2p_event, params_from_graph, worker_mean)
+from .channel import ByzantineEdges, ChannelModel, DelayProcess
 from .engine import FlatGossipEngine, mix_flat
 from .events import (CoalescedSchedule, EventStream, Schedule,
                      coalesce_schedule, coalesced_stream, concat_schedules,
@@ -16,6 +17,7 @@ from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
 from .world import ChurnProcess, LinkModel, PhaseSwitch, WorkerModel, World
 
 __all__ = [
+    "ByzantineEdges", "ChannelModel", "DelayProcess",
     "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
     "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",

@@ -1,0 +1,358 @@
+"""Unreliable-channel subsystem: stale reads, Byzantine edges, drops
+(DESIGN.md §10).
+
+The paper's asynchronous p2p averaging assumes honest, instantaneous
+pairwise exchanges.  Production regimes are exactly the opposite: messages
+arrive late (AD-PSGD-style overlap makes stale partner reads the common
+case, not the exception), links silently lose packets, and a subset of
+edges may be adversarial.  A :class:`ChannelModel` is the declarative,
+serializable description of one such channel:
+
+    ChannelModel(delay=DelayProcess(horizon=4, prob=0.5),
+                 adversary=ByzantineEdges(((0, 1), (5, 6)), "sign_flip"),
+                 drop_prob=0.02)
+
+It plugs into ``World(..., channel=...)`` and compiles — through the
+generic ``Schedule.extras`` machinery (PR 3) — to per-event arrays the
+replay engines consume without any new scan branch:
+
+  * ``extras["stale"]``  (R, K, n) int32 — staleness offset of worker i's
+    READ at event (r, k): 0 = fresh (the partner's current value), s >= 1 =
+    the partner's flat state snapshotted at the end of round ``r - s``.
+    The engines maintain a ring buffer of the last ``H`` flat states
+    (rotated at each gradient tick) to serve these reads.
+  * ``extras["corrupt"]`` (R, K, n) float32 — multiplier OFFSET applied to
+    the received partner value: the engine reads ``(1 + corrupt) * x_p``,
+    so the zero-filled padding that concat/coalesce/stream produce means
+    "honest" (multiplier 1).  ``sign_flip`` is offset -2, ``zero`` is -1,
+    ``scale`` is ``scale - 1``.
+  * message drops rewrite the partner involution itself (the dropped pair
+    reverts to identity partners), so a drop needs no engine support at
+    all — both replay paths already treat identity rows as no-ops.
+
+All channel randomness comes from a dedicated rng stream
+(``SeedSequence([seed, _CHANNEL_TAG, substream])``), independent of the
+schedule's main stream and of the straggler/churn streams — a trivial
+channel (``horizon=0``, no adversary, ``drop_prob=0``) therefore leaves a
+compiled schedule bit-for-bit identical to the channel-free world.
+
+The *defense* against a hostile channel — the clipped/trimmed p2p delta in
+the fused kernel's m-term — is a replay knob (``Simulator(robust_clip=...)``
+/ ``FlatGossipEngine(robust_clip=...)``), not channel data: the same world
+replays with and without robust aggregation so benchmarks can show what
+the defense buys (``benchmarks/run.py --only channel``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# rng-stream tag for channel draws — independent of the schedule's main
+# stream and of the straggler (0x48455) / churn (0xC50C4) streams
+_CHANNEL_TAG = 0xC4A77
+# canonical Schedule.extras keys the channel compiles to (reserved by
+# ROADMAP since PR 3; both replay paths key on exactly these names)
+STALE_KEY = "stale"
+CORRUPT_KEY = "corrupt"
+
+# corrupt-value multipliers per adversary mode: the receiver sees
+# multiplier * x_partner instead of x_partner
+_MODE_MULTIPLIER = {"sign_flip": -1.0, "zero": 0.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayProcess:
+    """Per-read message staleness.
+
+    Each directed read (worker i receiving from its matched partner j) is
+    independently stale with probability ``prob``; a stale read returns the
+    partner's flat state snapshotted ``s`` rounds ago, with ``s`` drawn
+    from ``kind``:
+
+      * ``"uniform"`` — s ~ Uniform{1, ..., horizon}
+      * ``"fixed"``   — s = horizon
+
+    Offsets are clamped to the rounds actually elapsed (round r can look
+    back at most r snapshots), so the ring buffer is never read before it
+    is written.  ``horizon=0`` disables delay entirely — the exact
+    reduction every channel axis must honor.
+    """
+
+    horizon: int
+    prob: float = 1.0
+    kind: str = "uniform"
+
+    def __post_init__(self):
+        if not isinstance(self.horizon, (int, np.integer)) \
+                or isinstance(self.horizon, bool) or self.horizon < 0:
+            raise ValueError("DelayProcess.horizon must be an int >= 0, "
+                             f"got {self.horizon!r}")
+        object.__setattr__(self, "horizon", int(self.horizon))
+        if not (np.isfinite(self.prob) and 0.0 <= self.prob <= 1.0):
+            raise ValueError(f"DelayProcess.prob must lie in [0, 1], "
+                             f"got {self.prob}")
+        if self.kind not in ("uniform", "fixed"):
+            raise ValueError("DelayProcess.kind must be 'uniform' or "
+                             f"'fixed', got {self.kind!r}")
+
+    @property
+    def is_trivial(self) -> bool:
+        return self.horizon == 0 or self.prob == 0.0
+
+    def sample_offsets(self, shape, rng: np.random.Generator) -> np.ndarray:
+        """Raw (unclamped) staleness draws; 0 where the read is fresh."""
+        hit = rng.uniform(size=shape) < self.prob
+        if self.kind == "fixed":
+            offs = np.full(shape, self.horizon, np.int32)
+        else:
+            offs = rng.integers(1, self.horizon + 1, size=shape,
+                                dtype=np.int32)
+        return np.where(hit, offs, 0).astype(np.int32)
+
+    def to_dict(self) -> dict:
+        return {"horizon": self.horizon, "prob": self.prob,
+                "kind": self.kind}
+
+    @staticmethod
+    def from_dict(d: dict) -> "DelayProcess":
+        return DelayProcess(horizon=d["horizon"], prob=d.get("prob", 1.0),
+                            kind=d.get("kind", "uniform"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineEdges:
+    """Adversarial partners on a fixed subset of edges.
+
+    A message crossing a listed edge is corrupted — with duty cycle
+    ``prob`` per exchange (both directions of the exchange together: the
+    fault sits on the link) — before the receiver applies its p2p update:
+
+      * ``"sign_flip"`` — the receiver sees ``-x_partner``
+      * ``"zero"``      — the receiver sees ``0`` (null-message attack)
+      * ``"scale"``     — the receiver sees ``scale * x_partner`` (large
+        scales model garbage injection; the norm-trim robust rule rejects
+        exactly these)
+
+    ``prob < 1`` models an intermittent fault (flaky NIC, duty-cycled
+    adversary evading detection): the honest fraction of exchanges keeps
+    the edge — and hence the topology — alive under a trimming defense.
+    The honest workers incident to a Byzantine edge still transmit their
+    true state on their OTHER edges — corruption is a property of the
+    edge, not the worker (the robust-aggregation threat model), so the
+    robust m-term trim/clip can contain the damage locally.
+    """
+
+    edges: tuple[tuple[int, int], ...]
+    mode: str = "sign_flip"
+    scale: float = 1.0
+    prob: float = 1.0
+
+    def __post_init__(self):
+        try:
+            edges = tuple((int(i), int(j)) for i, j in self.edges)
+        except (TypeError, ValueError):
+            raise ValueError("ByzantineEdges.edges must be (i, j) pairs, "
+                             f"got {self.edges!r}") from None
+        if not edges:
+            raise ValueError("ByzantineEdges.edges must be non-empty — an "
+                             "edgeless adversary is ChannelModel(adversary="
+                             "None)")
+        for (i, j) in edges:
+            if i == j or i < 0 or j < 0:
+                raise ValueError("ByzantineEdges.edges entries must pair two "
+                                 f"distinct workers, got ({i}, {j})")
+        object.__setattr__(
+            self, "edges", tuple((min(i, j), max(i, j)) for i, j in edges))
+        if self.mode not in ("sign_flip", "zero", "scale"):
+            raise ValueError("ByzantineEdges.mode must be 'sign_flip', "
+                             f"'zero', or 'scale', got {self.mode!r}")
+        if not np.isfinite(self.scale):
+            raise ValueError(f"ByzantineEdges.scale must be finite, "
+                             f"got {self.scale}")
+        if not (np.isfinite(self.prob) and 0.0 < self.prob <= 1.0):
+            raise ValueError(f"ByzantineEdges.prob must lie in (0, 1], "
+                             f"got {self.prob}")
+
+    def multiplier(self) -> float:
+        """The received-value multiplier this mode applies."""
+        return _MODE_MULTIPLIER.get(self.mode, self.scale)
+
+    def corrupt_offset(self) -> float:
+        """Multiplier offset stored in ``extras["corrupt"]`` (honest = 0)."""
+        return self.multiplier() - 1.0
+
+    def edge_set(self) -> frozenset:
+        return frozenset(self.edges)
+
+    def lookup(self, n: int) -> np.ndarray:
+        """(n, n) bool adjacency of the Byzantine edge set."""
+        out = np.zeros((n, n), dtype=bool)
+        for (i, j) in self.edges:
+            if j >= n:
+                raise ValueError(f"ByzantineEdges edge ({i}, {j}) names a "
+                                 f"worker outside [0, {n})")
+            out[i, j] = out[j, i] = True
+        return out
+
+    def to_dict(self) -> dict:
+        return {"edges": [list(e) for e in self.edges], "mode": self.mode,
+                "scale": self.scale, "prob": self.prob}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ByzantineEdges":
+        return ByzantineEdges(edges=tuple((int(i), int(j))
+                                          for i, j in d["edges"]),
+                              mode=d.get("mode", "sign_flip"),
+                              scale=d.get("scale", 1.0),
+                              prob=d.get("prob", 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Declarative unreliable-channel model: delay + adversary + drops.
+
+    ``apply(schedule, seed)`` compiles the channel onto an already-sampled
+    event schedule (drops rewrite partner pairs; delay/adversary attach
+    the ``stale``/``corrupt`` extras arrays).  A trivial channel returns
+    the schedule object unchanged — the exact-reduction contract.
+    """
+
+    delay: DelayProcess | None = None
+    adversary: ByzantineEdges | None = None
+    drop_prob: float = 0.0
+
+    def __post_init__(self):
+        if self.delay is not None and not isinstance(self.delay,
+                                                     DelayProcess):
+            raise ValueError("channel.delay must be a DelayProcess, "
+                             f"got {type(self.delay).__name__}")
+        if self.adversary is not None and not isinstance(self.adversary,
+                                                         ByzantineEdges):
+            raise ValueError("channel.adversary must be ByzantineEdges, "
+                             f"got {type(self.adversary).__name__}")
+        if not (np.isfinite(self.drop_prob)
+                and 0.0 <= self.drop_prob < 1.0):
+            raise ValueError(f"channel.drop_prob must lie in [0, 1), "
+                             f"got {self.drop_prob}")
+
+    @property
+    def is_trivial(self) -> bool:
+        return ((self.delay is None or self.delay.is_trivial)
+                and self.adversary is None and self.drop_prob == 0.0)
+
+    @property
+    def horizon(self) -> int:
+        """Ring-buffer depth the replay needs for this channel."""
+        if self.delay is None or self.delay.is_trivial:
+            return 0
+        return self.delay.horizon
+
+    def validate_for(self, n: int, edge_sets=()) -> None:
+        """Check adversary edges against a world: worker ids in [0, n) and,
+        when candidate edge sets are known, membership in at least one."""
+        if self.adversary is None:
+            return
+        self.adversary.lookup(n)  # id range check
+        sets = [s for s in edge_sets if s]
+        if sets:
+            known = frozenset().union(*sets)
+            missing = sorted(e for e in self.adversary.edges
+                             if e not in known)
+            if missing:
+                raise ValueError(
+                    f"channel.adversary edges {missing} are not edges of "
+                    "this world's topology (an adversary needs a link to "
+                    "corrupt)")
+
+    # --------------------------------------------------------------- compile
+    def apply(self, schedule, seed: int = 0):
+        """Compile the channel onto one ``events.Schedule``.
+
+        Host-side numpy, like every schedule stage: drops first (a dropped
+        message produces neither a stale read nor a corruption), then the
+        ``stale``/``corrupt`` extras over the surviving pairs.  Draws come
+        from per-axis substreams of the channel's own rng stream, so each
+        axis is reproducible independently of the others.
+        """
+        if self.is_trivial:
+            return schedule
+        partners = schedule.partners
+        R, K, n = partners.shape
+        idx = np.arange(n)
+
+        def pair_anchor(p):
+            """Each pair keyed once, at its smaller endpoint: True at
+            (r, k, i) iff p[r, k, i] = j with j > i on an unmasked event.
+            Per-pair draws (drops, duty cycles) index a full (R, K, n)
+            uniform array through this mask — vectorized, and both
+            endpoints share one draw by construction."""
+            return (p > idx) & schedule.event_mask[:, :, None]
+
+        if self.drop_prob > 0.0:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([int(seed), _CHANNEL_TAG, 0]))
+            partners = partners.copy()
+            u = rng.uniform(size=(R, K, n))
+            rr, kk, ii = np.nonzero(pair_anchor(partners)
+                                    & (u < self.drop_prob))
+            jj = partners[rr, kk, ii]
+            partners[rr, kk, ii] = ii
+            partners[rr, kk, jj.astype(np.intp)] = jj
+
+        involved = (partners != idx) & schedule.event_mask[:, :, None]
+        extras = {}
+        if self.delay is not None and not self.delay.is_trivial:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([int(seed), _CHANNEL_TAG, 1]))
+            offs = self.delay.sample_offsets((R, K, n), rng)
+            # round r has only r past snapshots; the ring holds horizon
+            cap = np.minimum(np.arange(R), self.delay.horizon)
+            offs = np.minimum(offs, cap[:, None, None])
+            extras[STALE_KEY] = np.where(involved, offs, 0).astype(np.int32)
+        if self.adversary is not None:
+            byz = self.adversary.lookup(n)
+            hit = involved & byz[np.broadcast_to(idx, (R, K, n)), partners]
+            if self.adversary.prob < 1.0:
+                # intermittent fault: one duty-cycle draw per EXCHANGE (the
+                # fault sits on the link, so both directions share it)
+                rng = np.random.default_rng(
+                    np.random.SeedSequence([int(seed), _CHANNEL_TAG, 2]))
+                u = rng.uniform(size=(R, K, n))
+                rr, kk, ii = np.nonzero(hit & pair_anchor(partners)
+                                        & (u >= self.adversary.prob))
+                jj = partners[rr, kk, ii]
+                hit[rr, kk, ii] = False
+                hit[rr, kk, jj.astype(np.intp)] = False
+            extras[CORRUPT_KEY] = np.where(
+                hit, np.float32(self.adversary.corrupt_offset()),
+                np.float32(0.0))
+
+        out = schedule
+        if partners is not schedule.partners:
+            out = dataclasses.replace(out, partners=partners)
+        return out.with_extras(**extras) if extras else out
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"delay": None if self.delay is None else self.delay.to_dict(),
+                "adversary": None if self.adversary is None
+                else self.adversary.to_dict(),
+                "drop_prob": self.drop_prob}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ChannelModel":
+        delay = d.get("delay")
+        adversary = d.get("adversary")
+        return ChannelModel(
+            delay=None if delay is None else DelayProcess.from_dict(delay),
+            adversary=None if adversary is None
+            else ByzantineEdges.from_dict(adversary),
+            drop_prob=d.get("drop_prob", 0.0))
+
+
+def has_channel_extras(schedule) -> bool:
+    """True iff a schedule (or coalesced schedule / event stream) carries
+    channel extras the replay engines must honor."""
+    extras = schedule.extras or {}
+    return STALE_KEY in extras or CORRUPT_KEY in extras

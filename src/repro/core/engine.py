@@ -31,9 +31,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..kernels.a2cid2_mixing.ops import gossip_event_stacked, p2p_mix_event
+from ..kernels.a2cid2_mixing.ops import (channel_event_local,
+                                         channel_event_stacked,
+                                         gossip_event_stacked, p2p_mix_event)
 from .a2cid2 import A2CiD2Params, apply_mixing
-from .flatbuf import FlatLayout
+from .flatbuf import FlatLayout, ring_init, ring_push, ring_read
 
 PyTree = Any
 
@@ -52,18 +54,40 @@ class FlatGossipEngine:
 
     backend: 'auto' (Pallas on TPU, oracle elsewhere), 'ref',
     'pallas_interpret' (tests), or 'pallas'.
+
+    robust_clip + robust_rule engage robust aggregation on the channel
+    passes (DESIGN.md §10) — the defense knob against Byzantine partners.
+    None = plain m-term.  Rules (tau = robust_clip):
+
+      'trim'  — reject the whole delta when ||m||_2 > tau (m -> 0): the
+                garbage-rejection defense; corrupted events become no-ops
+                while honest deltas pass untouched.
+      'clip'  — rescale to m * min(1, tau / ||m||_2) (ClippedGossip-style
+                norm clipping).
+      'coord' — clip each coordinate to [-tau, +tau] inside the kernel.
+
+    The norm rules cost one extra fused reduce over (x, xp) to derive the
+    per-worker scale; the kernel itself stays 3 reads + 2 writes.
     """
 
     layout: FlatLayout
     params: A2CiD2Params
     backend: str = "auto"
+    robust_clip: float | None = None
+    robust_rule: str = "trim"
+
+    def __post_init__(self):
+        if self.robust_rule not in ("trim", "clip", "coord"):
+            raise ValueError("robust_rule must be 'trim', 'clip', or "
+                             f"'coord', got {self.robust_rule!r}")
 
     @classmethod
     def for_pytree(cls, tree: PyTree, params: A2CiD2Params, *,
-                   stacked: bool = True, backend: str = "auto"
-                   ) -> "FlatGossipEngine":
+                   stacked: bool = True, backend: str = "auto",
+                   robust_clip: float | None = None,
+                   robust_rule: str = "trim") -> "FlatGossipEngine":
         return cls(FlatLayout.from_pytree(tree, stacked=stacked),
-                   params, backend)
+                   params, backend, robust_clip, robust_rule)
 
     # ------------------------------------------------------------- plumbing
     def pack(self, tree: PyTree) -> jax.Array:
@@ -99,4 +123,74 @@ class FlatGossipEngine:
         p = self.params
         return p2p_mix_event(bx, bxt, xp, dt_next, eta=p.eta, alpha=p.alpha,
                              alpha_t=p.alpha_tilde, backend=self.backend)
+
+    # ------------------------------------------- unreliable-channel passes
+    def _coord_clip(self) -> float | None:
+        return self.robust_clip if self.robust_rule == "coord" else None
+
+    def _norm_scale(self, nrm: jax.Array) -> jax.Array:
+        """Robust scale from the delta norm (trim rejection or norm clip);
+        honest/accepted deltas get exactly 1.0 (a bitwise no-op)."""
+        tau = self.robust_clip
+        if self.robust_rule == "trim":
+            return (nrm <= tau).astype(jnp.float32)
+        return jnp.minimum(1.0, tau / jnp.maximum(nrm, 1e-30)
+                           ).astype(jnp.float32)
+
+    def _mscale(self, bx: jax.Array, xp: jax.Array, corrupt: jax.Array,
+                axes) -> jax.Array:
+        """Per-worker robust scale — one fused reduce over the raw delta
+        (the norm never materializes an extra state-sized buffer)."""
+        if self.robust_clip is None or self.robust_rule == "coord":
+            return jnp.ones(corrupt.shape, jnp.float32)
+        cadv = (1.0 + jnp.asarray(corrupt, jnp.float32)).astype(bx.dtype)
+        cadv = jnp.reshape(cadv, cadv.shape + (1,) * (bx.ndim - cadv.ndim))
+        m32 = (bx - cadv * xp).astype(jnp.float32)
+        return self._norm_scale(jnp.sqrt(jnp.sum(m32 * m32, axis=axes)))
+
+    def channel_batch(self, bx: jax.Array, bxt: jax.Array, xp: jax.Array,
+                      corrupt: jax.Array, dt_next: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+        """One fused channel group on (W, D) buffers: ``xp`` is the
+        PRE-GATHERED (W, D) partner-value buffer (fresh rows or ring-buffer
+        stale snapshots — see ``partner_values``), ``corrupt`` the (W,)
+        received-value multiplier offsets; the engine's
+        ``robust_clip``/``robust_rule`` select the plain or robust
+        m-term."""
+        p = self.params
+        mscale = self._mscale(bx, xp, corrupt, axes=1)
+        return channel_event_stacked(bx, bxt, xp, corrupt, mscale, dt_next,
+                                     eta=p.eta, alpha=p.alpha,
+                                     alpha_t=p.alpha_tilde,
+                                     clip=self._coord_clip(),
+                                     backend=self.backend)
+
+    def channel_batch_local(self, bx: jax.Array, bxt: jax.Array,
+                            xp: jax.Array, corrupt, dt_next
+                            ) -> tuple[jax.Array, jax.Array]:
+        """Channel group on per-worker (D,) vectors (SPMD path): scalar
+        ``corrupt`` offset for this worker's received value."""
+        p = self.params
+        mscale = self._mscale(bx, xp, jnp.asarray(corrupt, jnp.float32),
+                              axes=None)
+        return channel_event_local(bx, bxt, xp, corrupt, mscale, dt_next,
+                                   eta=p.eta, alpha=p.alpha,
+                                   alpha_t=p.alpha_tilde,
+                                   clip=self._coord_clip(),
+                                   backend=self.backend)
+
+    # --------------------------------------------------- snapshot ring API
+    def ring_init(self, bx: jax.Array, horizon: int) -> jax.Array:
+        """(H, W, D) snapshot ring seeded with the current buffer."""
+        return ring_init(bx, horizon)
+
+    def ring_push(self, ring: jax.Array, bx: jax.Array, pos) -> jax.Array:
+        """Rotate: store the post-gradient state at slot ``pos`` (r mod H)."""
+        return ring_push(ring, bx, pos)
+
+    def partner_values(self, ring: jax.Array, bx: jax.Array,
+                       partner: jax.Array, src_slot: jax.Array) -> jax.Array:
+        """Resolve per-worker partner reads: fresh rows of ``bx`` where
+        ``src_slot == H``, ring slots otherwise (host-resolved indices)."""
+        return ring_read(ring, bx, partner, src_slot)
 

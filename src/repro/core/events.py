@@ -67,14 +67,18 @@ class Schedule:
 
     Extension channel:
       extras      dict of named per-event attribute arrays, each (R, K, n) —
-                  the generic slot future scenario axes ride in (per-event
-                  corruption masks, staleness offsets, ...).  Extras are pure
+                  the generic slot scenario axes ride in.  Extras are pure
                   schedule data: ``concat_schedules`` pads and concatenates
                   them, ``coalesce_schedule`` merges them alongside the
                   partner involution, and ``coalesced_stream`` flattens them
                   to one (S, n) row per scan step — so a new axis never adds
                   a scan branch, only a named array.  Attach with
-                  ``with_extras``.
+                  ``with_extras``.  The unreliable-channel subsystem
+                  (``core/channel.py``, DESIGN.md §10) populates the two
+                  canonical keys the replay engines consume: ``"stale"``
+                  (int32 ring-buffer staleness offsets per read) and
+                  ``"corrupt"`` (float32 received-value multiplier offsets;
+                  the zero padding produced here means "honest").
     """
 
     partners: np.ndarray

@@ -149,3 +149,42 @@ class FlatLayout:
             for s in self.specs
         ]
         return self.treedef.unflatten(leaves)
+
+
+# ---------------------------------------------------------------------------
+# snapshot ring buffer (unreliable-channel stale reads; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+# The delay axis of the channel subsystem reads partner values from past
+# flat states.  The replay engines thread an (H, W, D) ring of the last H
+# snapshots through the scan carry, rotated at each gradient tick (one
+# snapshot per round — "the state at the end of round r").  Slot indices
+# are schedule data resolved host-side ((r - staleness) mod H); the jit'd
+# loop only gathers and scatters.
+
+def ring_init(buf: jax.Array, horizon: int) -> jax.Array:
+    """(H, W, D) ring seeded with the start state (pre-history snapshots
+    equal the initial buffer; staleness clamping guarantees no slot is
+    read before round r >= 1 has written it anyway)."""
+    if horizon <= 0:
+        raise ValueError(f"ring_init needs horizon >= 1, got {horizon}")
+    return jnp.broadcast_to(buf, (horizon,) + buf.shape)
+
+
+def ring_push(ring: jax.Array, buf: jax.Array, pos) -> jax.Array:
+    """Overwrite slot ``pos`` (= round mod H, host-resolved) with ``buf``."""
+    return ring.at[pos].set(buf)
+
+
+def ring_read(ring: jax.Array, buf: jax.Array, partner: jax.Array,
+              src_slot: jax.Array) -> jax.Array:
+    """(W, D) partner values under staleness.
+
+    ``src_slot[w]`` selects where worker w's read is served from: the
+    sentinel ``H`` (= ring depth) means a fresh read of the partner's
+    current row in ``buf``; ``0..H-1`` name a ring slot.  Two row gathers
+    plus a select — no (H, W, D)-sized temporaries.
+    """
+    h = ring.shape[0]
+    fresh = jnp.take(buf, partner, axis=0)
+    stale = ring[jnp.minimum(src_slot, h - 1), partner]
+    return jnp.where((src_slot < h)[:, None], stale, fresh)

@@ -26,10 +26,61 @@ import jax.numpy as jnp
 import numpy as np
 
 from .a2cid2 import A2CiD2Params, apply_mixing
+from .channel import ChannelModel
 from .engine import FlatGossipEngine
 from .graphs import Graph, TopologySchedule
 
 PyTree = Any
+
+
+def bank_corruption(bank: np.ndarray, adversary) -> np.ndarray:
+    """Per-matching received-value corruption offsets for a static bank.
+
+    Returns (M, n) float32: entry [k, i] is the multiplier offset worker i
+    applies to the value it receives under matching k (0 = honest) — the
+    Byzantine edge set is STATIC, so mesh trainers resolve the channel's
+    ``corrupt`` axis to one constant vector per bank entry, exactly like
+    the matchings themselves (no traced adversary state).
+    """
+    M, n = bank.shape
+    out = np.zeros((M, n), np.float32)
+    if adversary is None:
+        return out
+    byz = adversary.lookup(n)
+    off = np.float32(adversary.corrupt_offset())
+    for k in range(M):
+        for i in range(n):
+            j = int(bank[k, i])
+            if j != i and byz[i, j]:
+                out[k, i] = off
+    return out
+
+
+def check_mesh_channel(channel: ChannelModel | None) -> None:
+    """Mesh trainers model the statically-resolvable channel axes
+    (always-on adversary, drops); anything needing per-exchange shared
+    randomness or peer history is rejected loudly rather than silently
+    mis-modeled: stale reads need the event simulator's snapshot ring
+    buffer (a mesh worker holds no history of its peers), and a
+    duty-cycled adversary (prob < 1) needs pair-correlated corruption
+    draws the per-worker SPMD event loop cannot share."""
+    if channel is None:
+        return
+    if not isinstance(channel, ChannelModel):
+        raise ValueError("channel must be a ChannelModel, "
+                         f"got {type(channel).__name__}")
+    if channel.horizon > 0:
+        raise ValueError(
+            "mesh trainers do not emulate message delay (stale partner "
+            "reads need the simulator's ring buffer of past states) — "
+            "replay delayed worlds with Simulator.run_world, or drop the "
+            "DelayProcess from the trainer's channel")
+    if channel.adversary is not None and channel.adversary.prob < 1.0:
+        raise ValueError(
+            "mesh trainers model always-on Byzantine edges only (a "
+            "prob < 1 duty cycle needs per-exchange corruption draws "
+            "shared across the pair) — replay duty-cycled adversaries "
+            "with Simulator.run_world, or set ByzantineEdges.prob = 1")
 
 
 def matching_bank(graph: Graph) -> np.ndarray:
@@ -113,13 +164,27 @@ class GossipMixer:
     here we target shard_map)."""
 
     def __init__(self, graph: Graph, params: A2CiD2Params,
-                 axis_name: str = "worker", backend: str = "auto"):
+                 axis_name: str = "worker", backend: str = "auto",
+                 channel: ChannelModel | None = None,
+                 robust_clip: float | None = None,
+                 robust_rule: str = "trim"):
+        check_mesh_channel(channel)
         self.graph = graph
         self.params = params
         self.axis_name = axis_name
         self.backend = backend  # fused-kernel backend for the event loop
         self.bank = matching_bank(graph)
         self.bank_probs = bank_edge_rates(graph, self.bank)
+        # unreliable-channel axes a mesh can model (DESIGN.md §10): static
+        # Byzantine edges become per-matching corruption vectors, message
+        # drops thin the sampled event stream, robust_clip/robust_rule
+        # engage the trimmed/clipped m-term in the fused channel kernel
+        self.channel = channel
+        self.robust_clip = robust_clip
+        self.robust_rule = robust_rule
+        self.drop_prob = 0.0 if channel is None else channel.drop_prob
+        self.bank_corrupt = bank_corruption(
+            self.bank, None if channel is None else channel.adversary)
 
     # ------------------------------------------------------------ primitives
     def _perm(self, k: int) -> list[tuple[int, int]]:
@@ -152,7 +217,9 @@ class GossipMixer:
         if matching_idxs.shape[0] == 0:
             return x, x_tilde
         engine = FlatGossipEngine.for_pytree(x, self.params, stacked=False,
-                                             backend=self.backend)
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
         bx = engine.pack_local(x)
         bxt = engine.pack_local(x_tilde)
         bx, bxt = engine.mix(bx, bxt, dts[0])
@@ -163,14 +230,23 @@ class GossipMixer:
             return lambda v: jax.lax.ppermute(v, self.axis_name, perm)
 
         branches = [make_branch(k) for k in range(self.bank.shape[0])]
+        channel_on = (self.robust_clip is not None
+                      or bool(self.bank_corrupt.any()))
+        corrupt_tab = jnp.asarray(self.bank_corrupt)
 
         def body(carry, ev):
             bx, bxt = carry
             idx, dtn = ev
             xp = jax.lax.switch(jnp.maximum(idx, 0), branches, bx)
-            # skipped events keep the pure-mix segment: xp = x => m = 0
+            # skipped/dropped events keep the pure-mix segment: xp = x => m=0
             xp = jnp.where(idx < 0, bx, xp)
-            bx, bxt = engine.batch_local(bx, bxt, xp, dtn)
+            if channel_on:
+                wid = jax.lax.axis_index(self.axis_name)
+                c = jnp.where(idx < 0, 0.0,
+                              corrupt_tab[jnp.maximum(idx, 0), wid])
+                bx, bxt = engine.channel_batch_local(bx, bxt, xp, c, dtn)
+            else:
+                bx, bxt = engine.batch_local(bx, bxt, xp, dtn)
             return (bx, bxt), None
 
         (bx, bxt), _ = jax.lax.scan(body, (bx, bxt),
@@ -187,10 +263,21 @@ class GossipMixer:
         the expected rate (slot count chosen by the host from the Poisson law,
         like the paper's implementation).  dts are Exp(1/num_events) gaps.
         """
+        k3 = None
+        if self.drop_prob > 0.0:
+            # extra split only when drops can occur — a drop-free mixer
+            # keeps the pre-channel seeded event stream bit-for-bit
+            key, k3 = jax.random.split(key)
         k1, k2 = jax.random.split(key)
         logits = jnp.log(jnp.asarray(self.bank_probs, dtype=jnp.float32))
         idxs = jax.random.categorical(k1, logits, shape=(num_events,))
         gaps = jax.random.exponential(k2, (num_events,)) / max(num_events, 1)
+        if k3 is not None:
+            # channel drops: the matching never happens (idx < 0 = skip),
+            # but simulated time still elapses — the mix segment survives
+            dropped = jax.random.bernoulli(k3, self.drop_prob,
+                                           (num_events,))
+            idxs = jnp.where(dropped, -1, idxs)
         return idxs.astype(jnp.int32), gaps
 
 

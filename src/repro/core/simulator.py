@@ -24,6 +24,14 @@ Two replay paths exist:
     (events.coalesce_schedule) and each batch is ONE fused sweep of a
     packed (n, D) state buffer (engine.FlatGossipEngine; Pallas on TPU).
     Same dynamic, ~kmax/E_active fewer sweeps and 2x less traffic per sweep.
+
+Both paths have unreliable-channel twins (DESIGN.md §10) that
+``run_schedule`` dispatches to when the schedule carries ``stale``/
+``corrupt`` extras or robust aggregation is on: they thread a ring buffer
+of the last H flat states through the scan (stale partner reads), apply
+per-event corruption multipliers, and optionally trim/clip the p2p delta
+(``robust_clip``/``robust_rule``).  Channel-free schedules run the
+original paths bit-for-bit.
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ import numpy as np
 
 from .a2cid2 import (A2CiD2Params, apply_mixing, consensus_distance,
                      matched_p2p_update, worker_mean)
+from .channel import CORRUPT_KEY, STALE_KEY
 from .engine import FlatGossipEngine
 from .events import Schedule, coalesce_schedule
 from .flatbuf import FlatLayout
@@ -67,6 +76,18 @@ class Simulator:
     params: A2CiD2Params
     gamma: float
     backend: str = "auto"  # engine kernel backend: auto | ref | pallas[_interpret]
+    # robust aggregation (DESIGN.md §10): the replay-side defense knob
+    # against Byzantine channel worlds.  None = plain m-term; with a
+    # threshold tau = robust_clip, robust_rule selects 'trim' (reject the
+    # delta when ||m|| > tau — garbage rejection), 'clip' (rescale to
+    # norm tau, ClippedGossip-style), or 'coord' (per-coordinate clip).
+    robust_clip: float | None = None
+    robust_rule: str = "trim"
+
+    def __post_init__(self):
+        if self.robust_rule not in ("trim", "clip", "coord"):
+            raise ValueError("robust_rule must be 'trim', 'clip', or "
+                             f"'coord', got {self.robust_rule!r}")
 
     def init(self, x0: PyTree, n: int, key: jax.Array) -> SimState:
         """All workers start at consensus (paper: one all-reduce before training)."""
@@ -154,6 +175,256 @@ class Simulator:
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
+    # ----------------------------------------- unreliable-channel replays
+    # (DESIGN.md §10) Channel worlds attach per-event ``stale``/``corrupt``
+    # extras; both replay paths thread a ring buffer of the last H flat
+    # states (one snapshot per round, taken right after the gradient tick)
+    # and serve stale partner reads from it.  Slot indices are resolved
+    # host-side — the jit'd loops gather/scatter with schedule data only.
+
+    def _partner_leaf(self, a, ring_a, partner, src_slot, horizon: int):
+        """Per-leaf partner read: fresh rows of ``a`` where src_slot == H,
+        ring snapshots otherwise.  a: (n, *s); ring_a: (H, n, *s)."""
+        fresh = jnp.take(a, partner, axis=0)
+        if not horizon:
+            return fresh
+        stale = ring_a[jnp.minimum(src_slot, horizon - 1), partner]
+        sel = jnp.reshape(src_slot < horizon,
+                          (a.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(sel, stale, fresh)
+
+    def _channel_p2p(self, x, x_tilde, xp, corrupt):
+        """p2p update from (possibly corrupted/stale) received values, with
+        the optional robust rule on the m-term (norm trim/clip across the
+        whole replica, matching the engine's flat-row norm; or the
+        per-coordinate clip)."""
+        clip = self.robust_clip
+        rule = self.robust_rule
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_t = treedef.flatten_up_to(x_tilde)
+        flat_p = treedef.flatten_up_to(xp)
+
+        def cadv_for(a):
+            c = (1.0 + corrupt).astype(a.dtype)
+            return jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
+
+        mscale = None
+        if clip is not None and rule != "coord":
+            nrm2 = sum(
+                jnp.sum(((a - cadv_for(a) * b).astype(jnp.float32)) ** 2,
+                        axis=tuple(range(1, a.ndim)))
+                for a, b in zip(flat_x, flat_p))
+            nrm = jnp.sqrt(nrm2)
+            if rule == "trim":
+                mscale = (nrm <= clip).astype(jnp.float32)
+            else:
+                mscale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-30))
+
+        def upd(a, at, b):
+            m = a - cadv_for(a) * b
+            if mscale is not None:
+                s = mscale.astype(a.dtype)
+                m = m * jnp.reshape(s, s.shape + (1,) * (a.ndim - 1))
+            elif clip is not None:
+                m = jnp.clip(m, -clip, clip)
+            return a - self.params.alpha * m, at - self.params.alpha_tilde * m
+
+        out = [upd(a, at, b) for a, at, b in zip(flat_x, flat_t, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    def _comm_event_channel(self, horizon: int, ring, carry, event):
+        x, x_tilde, t_last = carry
+        partner, time, mask, src_slot, corrupt = event
+        involved = (partner != jnp.arange(partner.shape[0])) & mask
+        dt = jnp.where(involved, time - t_last, 0.0)
+        x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
+        t_last = jnp.where(involved, time, t_last)
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        ring_leaves = treedef.flatten_up_to(ring) if horizon \
+            else [None] * len(flat_x)
+        xp = treedef.unflatten([
+            self._partner_leaf(a, ra, partner, src_slot, horizon)
+            for a, ra in zip(flat_x, ring_leaves)])
+        # idle/masked rows read themselves fresh with corrupt 0 => m = 0
+        x, x_tilde = self._channel_p2p(x, x_tilde, xp, corrupt)
+        return (x, x_tilde, t_last), None
+
+    def _round_channel(self, horizon: int, carry, round_sched):
+        x, x_tilde, t_last, ring, key = carry
+        (partners, times, mask, src_slots, corrupts, grad_times, grad_scale,
+         alive, ring_pos) = round_sched
+        inner = partial(self._comm_event_channel, horizon, ring)
+        (x, x_tilde, t_last), _ = jax.lax.scan(
+            inner, (x, x_tilde, t_last),
+            (partners, times, mask, src_slots, corrupts))
+
+        dt = jnp.where(alive, grad_times - t_last, 0.0)
+        x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
+        n = grad_times.shape[0]
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(self.grad_fn)(x, keys, jnp.arange(n))
+
+        def upd(p, g):
+            s = jnp.reshape(grad_scale, grad_scale.shape
+                            + (1,) * (g.ndim - 1)).astype(g.dtype)
+            return p - self.gamma * (s * g)
+
+        x = jax.tree.map(upd, x, grads)
+        x_tilde = jax.tree.map(upd, x_tilde, grads)
+        if horizon:
+            # end-of-round snapshot: post-gradient, pre-trailing-mixing —
+            # exactly what the engine path's ring_push captures
+            ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
+                                ring, x)
+        t_last = jnp.where(alive, grad_times, t_last)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "consensus": consensus_distance(x),
+            "mean_param_norm": sum(jnp.sum(m ** 2) for m in
+                                   jax.tree.leaves(worker_mean(x))),
+        }
+        return (x, x_tilde, t_last, ring, key), metrics
+
+    @partial(jax.jit, static_argnums=(0, 3))
+    def _run_channel_reference_jit(self, state: SimState, schedule_arrays,
+                                   horizon: int
+                                   ) -> tuple[SimState, SimTrace]:
+        ring = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), state.x) \
+            if horizon else None
+        carry = (state.x, state.x_tilde, state.t_last, ring, state.key)
+        carry, metrics = jax.lax.scan(
+            partial(self._round_channel, horizon), carry, schedule_arrays)
+        x, x_tilde, t_last, _, key = carry
+        return SimState(x, x_tilde, t_last, key), \
+            SimTrace(metrics["loss"], metrics["consensus"],
+                     metrics["mean_param_norm"])
+
+    def _channel_step(self, engine: FlatGossipEngine, n: int, horizon: int,
+                      carry, xs):
+        """Channel twin of ``_engine_step``: fused channel batches with
+        ring-buffer stale reads, ring rotation at gradient ticks."""
+        partner, dt_nxt, is_grad, gscale, corrupt, src_slot, ring_pos = xs
+
+        def comm(args):
+            bx, bxt, ring, key = args
+            if horizon:
+                xp = engine.partner_values(ring, bx, partner, src_slot)
+            else:
+                xp = jnp.take(bx, partner, axis=0)
+            bx, bxt = engine.channel_batch(bx, bxt, xp, corrupt, dt_nxt)
+            z = jnp.zeros((), jnp.float32)
+            return (bx, bxt, ring, key), (z, z, z)
+
+        def grad(args):
+            bx, bxt, ring, key = args
+            key, sub = jax.random.split(key)
+            keys = jax.random.split(sub, n)
+            losses, grads = jax.vmap(self.grad_fn)(engine.unpack(bx), keys,
+                                                   jnp.arange(n))
+            g = engine.pack(grads)
+            g = gscale[:, None].astype(g.dtype) * g
+            bx = bx - self.gamma * g
+            bxt = bxt - self.gamma * g
+            mean = jnp.mean(bx, axis=0, keepdims=True)
+            loss = jnp.mean(losses).astype(jnp.float32)
+            consensus = (jnp.sum((bx - mean) ** 2) / n).astype(jnp.float32)
+            mean_norm = jnp.sum(mean ** 2).astype(jnp.float32)
+            if horizon:
+                ring = engine.ring_push(ring, bx, ring_pos)
+            bx, bxt = engine.mix(bx, bxt, dt_nxt)
+            return (bx, bxt, ring, key), (loss, consensus, mean_norm)
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    @partial(jax.jit, static_argnums=(0, 3))
+    def _run_channel_jit(self, state: SimState, stream_arrays, horizon: int
+                         ) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final, corrupt, src_slot, ring_pos) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True,
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
+        bx = engine.pack(state.x)
+        bxt = engine.pack(state.x_tilde)
+        bx, bxt = engine.mix(bx, bxt, prologue)
+        n = prologue.shape[0]
+        ring = engine.ring_init(bx, horizon) if horizon else None
+        (bx, bxt, ring, key), ys = jax.lax.scan(
+            partial(self._channel_step, engine, n, horizon),
+            (bx, bxt, ring, state.key),
+            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
+             ring_pos))
+        loss, consensus, mean_norm = ys
+        final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
+        return final, SimTrace(loss[grad_pos], consensus[grad_pos],
+                               mean_norm[grad_pos])
+
+    @staticmethod
+    def _channel_extras(extras: dict, shape, horizon_from: str = STALE_KEY):
+        """(stale, corrupt, horizon) materialized at ``shape`` (zeros where
+        a key is absent); the ring depth is the max staleness the schedule
+        actually demands, so replays are self-contained."""
+        stale = extras.get(STALE_KEY)
+        stale = np.zeros(shape, np.int32) if stale is None \
+            else np.asarray(stale, np.int32)
+        corrupt = extras.get(CORRUPT_KEY)
+        corrupt = np.zeros(shape, np.float32) if corrupt is None \
+            else np.asarray(corrupt, np.float32)
+        horizon = int(stale.max()) if stale.size else 0
+        return stale, corrupt, horizon
+
+    def channel_coalesced_arrays(self, state: SimState, sched: Schedule, *,
+                                 cs=None):
+        """Engine scan inputs for a channel schedule + the ring depth H.
+
+        Staleness offsets are resolved to absolute ring slots host-side:
+        an event in round r reading s rounds back is served from slot
+        ``(r - s) mod H``; the sentinel H means a fresh read.
+        """
+        from .events import coalesced_stream
+        stream = coalesced_stream(cs or coalesce_schedule(sched),
+                                  np.asarray(state.t_last))
+        S, n = stream.partners.shape
+        stale, corrupt, horizon = self._channel_extras(
+            stream.extras or {}, (S, n))
+        h = max(horizon, 1)
+        # round index per step: a round closes at its gradient tick
+        step_round = np.searchsorted(np.asarray(stream.grad_pos),
+                                     np.arange(S), side="left")
+        src_slot = np.where(stale > 0, (step_round[:, None] - stale) % h,
+                            horizon).astype(np.int32)
+        ring_pos = (step_round % h).astype(np.int32)
+        return (jnp.asarray(stream.prologue), jnp.asarray(stream.partners),
+                jnp.asarray(stream.dt_next), jnp.asarray(stream.is_grad),
+                jnp.asarray(stream.grad_scale),
+                jnp.asarray(stream.grad_pos),
+                jnp.asarray(stream.t_final),
+                jnp.asarray(corrupt), jnp.asarray(src_slot),
+                jnp.asarray(ring_pos)), horizon
+
+    def channel_reference_arrays(self, sched: Schedule):
+        """Per-event channel replay inputs + ring depth H (slot resolution
+        as in ``channel_coalesced_arrays``, at (R, K, n))."""
+        R, K, n = sched.partners.shape
+        stale, corrupt, horizon = self._channel_extras(
+            sched.extras_dict(), (R, K, n))
+        h = max(horizon, 1)
+        rr = np.arange(R)[:, None, None]
+        src_slot = np.where(stale > 0, (rr - stale) % h,
+                            horizon).astype(np.int32)
+        ring_pos = (np.arange(R) % h).astype(np.int32)
+        return (jnp.asarray(sched.partners), jnp.asarray(sched.event_times),
+                jnp.asarray(sched.event_mask), jnp.asarray(src_slot),
+                jnp.asarray(corrupt), jnp.asarray(sched.grad_times),
+                jnp.asarray(sched.grad_scale()),
+                jnp.asarray(sched.alive_arr()),
+                jnp.asarray(ring_pos)), horizon
+
     # ------------------------------------------------------------------ run
     @partial(jax.jit, static_argnums=0)
     def run(self, state: SimState, schedule_arrays) -> tuple[SimState, SimTrace]:
@@ -227,9 +498,21 @@ class Simulator:
                 FlatLayout.from_pytree(state.x, stacked=True)
             except TypeError:
                 engine = False  # e.g. int leaves: per-event path handles
+        # channel worlds (stale/corrupt extras) and robust aggregation run
+        # on the channel twins of both paths; everything else stays on the
+        # original replays bit-for-bit
+        extras = sched.extras_dict()
+        channel = (STALE_KEY in extras or CORRUPT_KEY in extras
+                   or self.robust_clip is not None)
         if engine:
+            if channel:
+                arrays, horizon = self.channel_coalesced_arrays(state, sched)
+                return self._run_channel_jit(state, arrays, horizon)
             return self.run_coalesced(state, self.coalesced_arrays(state,
                                                                    sched))
+        if channel:
+            arrays, horizon = self.channel_reference_arrays(sched)
+            return self._run_channel_reference_jit(state, arrays, horizon)
         return self.run(state, self.reference_arrays(sched))
 
 

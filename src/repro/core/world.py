@@ -8,7 +8,10 @@ one such scenario:
           workers=WorkerModel(grad_rates=[1, .25, ...]),
           links=LinkModel(bandwidth_bytes_per_s=50e9, msg_bytes=4 * D),
           faults=(ChurnProcess(fail_rate=0.02, repair_rate=0.2),
-                  PhaseSwitch(at_round=100, topology=hypercube_graph(4))))
+                  PhaseSwitch(at_round=100, topology=hypercube_graph(4))),
+          channel=ChannelModel(delay=DelayProcess(horizon=4),
+                               adversary=ByzantineEdges(edges, "scale"),
+                               drop_prob=0.02))
 
 ``world.compile(rounds, seed)`` lowers the description to the existing
 ``events.Schedule`` — plain numpy event data that both jit'd replay paths
@@ -44,6 +47,7 @@ import json
 
 import numpy as np
 
+from .channel import ChannelModel
 from .graphs import Graph, TopologyPhase, TopologySchedule
 
 # rng-stream tag for churn draws — independent of the schedule's main stream
@@ -413,6 +417,7 @@ class World:
     workers: WorkerModel = WorkerModel()
     links: LinkModel = LinkModel()
     faults: tuple = ()
+    channel: ChannelModel | None = None
     comms_per_grad: float = 1.0
     jitter_grad_times: bool = True
     t_offset: float = 0.0
@@ -483,6 +488,19 @@ class World:
         # eagerly validate per-edge alignment against the static topology
         if isinstance(self.topology, Graph):
             self.links.edge_rates(self.topology)
+        if self.channel is not None:
+            if not isinstance(self.channel, ChannelModel):
+                raise ValueError("channel must be a ChannelModel, "
+                                 f"got {type(self.channel).__name__}")
+            # adversary edges must exist somewhere in the world's topology
+            graphs = list(p.graph for p in self.topology.phases) \
+                if isinstance(self.topology, TopologySchedule) \
+                else [self.topology]
+            graphs += [s.topology for s in switches
+                       if s.topology is not None]
+            self.channel.validate_for(
+                n, [frozenset((min(i, j), max(i, j)) for i, j in g.edges)
+                    for g in graphs])
 
     # ------------------------------------------------------------ structure
     @property
@@ -633,7 +651,13 @@ class World:
                 per_edge=self.links.per_edge,
                 t_offset=self.t_offset + float(s.start),
                 active=s.active))
-        return concat_schedules(scheds)
+        sched = concat_schedules(scheds)
+        if self.channel is not None:
+            # the channel rides on the FINAL concatenated schedule (its
+            # staleness caps need absolute round indices), drawing from its
+            # own rng stream — a trivial channel is an exact no-op
+            sched = self.channel.apply(sched, seed=seed)
+        return sched
 
     def round_seconds(self, schedule) -> np.ndarray:
         """(R,) wall seconds per round of a schedule this world compiled,
@@ -657,6 +681,8 @@ class World:
                 "workers": self.workers.to_dict(),
                 "links": self.links.to_dict(),
                 "faults": [f.to_dict() for f in self.faults],
+                "channel": None if self.channel is None
+                else self.channel.to_dict(),
                 "comms_per_grad": self.comms_per_grad,
                 "jitter_grad_times": self.jitter_grad_times,
                 "t_offset": self.t_offset}
@@ -668,6 +694,8 @@ class World:
                      links=LinkModel.from_dict(d.get("links", {})),
                      faults=tuple(_fault_from_dict(f)
                                   for f in d.get("faults", ())),
+                     channel=None if d.get("channel") is None
+                     else ChannelModel.from_dict(d["channel"]),
                      comms_per_grad=d.get("comms_per_grad", 1.0),
                      jitter_grad_times=d.get("jitter_grad_times", True),
                      t_offset=d.get("t_offset", 0.0))

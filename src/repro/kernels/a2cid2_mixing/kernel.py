@@ -35,6 +35,17 @@ Layout: ``mixing_p2p``/``p2p_mixing`` take flat (N,) vectors tiled to
 takes worker-stacked (W, D) buffers on a 2-D grid (workers x D-blocks); the
 partner index and per-worker dt vectors are scalar-prefetched so the partner
 row gather is resolved to a static block index before each grid step runs.
+
+``channel_gossip_stacked`` is the unreliable-channel variant (DESIGN.md
+§10): partner values arrive pre-gathered (fresh row or ring-buffer stale
+snapshot — an XLA gather outside the kernel), a prefetched per-worker
+``corrupt`` multiplier offset models Byzantine messages, and the robust
+aggregation rides in two forms — a prefetched per-worker ``mscale``
+(norm-trim rejection / norm-clip rescale, derived by the caller from
+||m|| in one fused reduce) and a static coordinate ``clip``:
+
+    m   = clip((x - (1 + corrupt) * xp) * mscale, +-tau)
+    ...same p2p-then-mix tail as above...
 """
 from __future__ import annotations
 
@@ -254,6 +265,103 @@ def mixing_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
         input_output_aliases={} if interpret else {4: 1},
         interpret=interpret,
     )(partner, dt_next, x, x, x_tilde)
+    if pad:
+        out_x = out_x[:, :d_dim]
+        out_xt = out_xt[:, :d_dim]
+    return out_x, out_xt
+
+
+# ---------------------------------------------------------------------------
+# unreliable-channel fused batch (robust m-term; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _channel_kernel(corrupt_ref, mscale_ref, dt_ref, x_ref, xp_ref, xt_ref,
+                    out_x_ref, out_xt_ref, *, eta: float, alpha: float,
+                    alpha_t: float, clip):
+    w = pl.program_id(0)
+    x = x_ref[...]
+    xp = xp_ref[...]
+    xt = xt_ref[...]
+    # received value: (1 + corrupt) * xp — honest rows have corrupt == 0,
+    # so the multiply is an exact identity (1.0 * xp == xp bitwise); the
+    # robust trim/clip scale (from the delta's norm, computed by the caller
+    # in one fused reduce) rides in the same way, 1.0 for accepted deltas
+    cadv = (1.0 + corrupt_ref[w]).astype(x.dtype)
+    m = (x - cadv * xp) * mscale_ref[w].astype(x.dtype)
+    if clip is not None:
+        m = jnp.clip(m, -clip, clip)  # in-kernel coordinate-clip rule
+    x1 = x - alpha * m
+    xt1 = xt - alpha_t * m
+    dt = dt_ref[w]
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta * dt))).astype(x.dtype)
+    d = xt1 - x1
+    out_x_ref[...] = x1 + c * d
+    out_xt_ref[...] = xt1 - c * d
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eta", "alpha", "alpha_t", "clip",
+                                    "interpret"))
+def channel_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
+                           x_partner: jax.Array, corrupt: jax.Array,
+                           mscale: jax.Array, dt_next: jax.Array, *,
+                           eta: float, alpha: float, alpha_t: float,
+                           clip: float | None = None,
+                           interpret: bool = False
+                           ) -> tuple[jax.Array, jax.Array]:
+    """One unreliable-channel gossip batch over worker-stacked buffers.
+
+    x, x_tilde, x_partner: (W, D) same dtype; corrupt, mscale, dt_next:
+    (W,) f32.  ``x_partner`` arrives PRE-GATHERED: staleness resolution
+    (current row vs ring-buffer snapshot) is a data question the engine
+    answers with one XLA gather before the sweep, so the kernel needs no
+    in-grid partner indirection — all five tensor operands stream with
+    static block indices.  ``corrupt``/``mscale``/``dt_next`` ride in as
+    prefetched per-worker scalars (``mscale`` is the norm-trim/clip robust
+    scale, 1.0 = accept); ``clip`` (static) is the in-kernel
+    coordinate-clip rule.  Traffic is the same 3 reads + 2 writes of state
+    as the clean kernel (the caller's norm reduce for mscale adds 2 reads
+    when a norm rule is on).  x~ only ever reads its own row and is
+    aliased in place; x and x_partner are distinct buffers here, so x
+    cannot alias.
+    """
+    w_dim, d_dim = x.shape
+    block = min(BLOCK_D, d_dim)
+    pad = (-d_dim) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        x_tilde = jnp.pad(x_tilde, ((0, 0), (0, pad)))
+        x_partner = jnp.pad(x_partner, ((0, 0), (0, pad)))
+    grid = (w_dim, x.shape[1] // block)
+    corrupt = corrupt.astype(jnp.float32)
+    mscale = mscale.astype(jnp.float32)
+    dt_next = dt_next.astype(jnp.float32)
+    kernel = functools.partial(_channel_kernel, eta=eta, alpha=alpha,
+                               alpha_t=alpha_t, clip=clip)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # corrupt, mscale, dt_next
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+        ],
+    )
+    out_x, out_xt = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        # inputs are (corrupt, mscale, dt, x, xp, xt): alias xt -> out_xt
+        input_output_aliases={} if interpret else {5: 1},
+        interpret=interpret,
+    )(corrupt, mscale, dt_next, x, x_partner, x_tilde)
     if pad:
         out_x = out_x[:, :d_dim]
         out_xt = out_xt[:, :d_dim]

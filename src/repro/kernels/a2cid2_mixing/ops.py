@@ -14,8 +14,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .kernel import mixing_gossip_stacked, mixing_p2p, p2p_mixing
-from .ref import (mixing_gossip_stacked_ref, mixing_p2p_ref, p2p_mixing_ref)
+from .kernel import (channel_gossip_stacked, mixing_gossip_stacked,
+                     mixing_p2p, p2p_mixing)
+from .ref import (channel_gossip_stacked_ref, channel_p2p_mixing_ref,
+                  mixing_gossip_stacked_ref, mixing_p2p_ref, p2p_mixing_ref)
 
 PyTree = Any
 
@@ -87,3 +89,50 @@ def gossip_event_stacked(x: jax.Array, x_tilde: jax.Array,
     return mixing_gossip_stacked(x, x_tilde, partner, dt_next, eta=eta,
                                  alpha=alpha, alpha_t=alpha_t,
                                  interpret=(backend == "pallas_interpret"))
+
+
+# --------------------------------------------- unreliable-channel passes
+
+def channel_event_stacked(x: jax.Array, x_tilde: jax.Array,
+                          x_partner: jax.Array, corrupt: jax.Array,
+                          mscale: jax.Array, dt_next: jax.Array, *,
+                          eta: float, alpha: float, alpha_t: float,
+                          clip: float | None = None, backend: str = "auto"
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused channel gossip batch on (W, D) buffers: pre-gathered partner
+    values (fresh or ring-buffer stale), per-worker ``corrupt`` multiplier
+    offsets, per-worker robust ``mscale`` (norm trim/clip), optional
+    in-kernel coordinate ``clip`` (DESIGN.md §10)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return channel_gossip_stacked_ref(x, x_tilde, x_partner, corrupt,
+                                          mscale, dt_next, eta=eta,
+                                          alpha=alpha, alpha_t=alpha_t,
+                                          clip=clip)
+    return channel_gossip_stacked(x, x_tilde, x_partner, corrupt, mscale,
+                                  dt_next, eta=eta, alpha=alpha,
+                                  alpha_t=alpha_t, clip=clip,
+                                  interpret=(backend == "pallas_interpret"))
+
+
+def channel_event_local(x: jax.Array, x_tilde: jax.Array,
+                        x_partner: jax.Array, corrupt, mscale, dt_next, *,
+                        eta: float, alpha: float, alpha_t: float,
+                        clip: float | None = None, backend: str = "auto"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Channel variant of ``p2p_mix_event`` on per-worker (D,) vectors
+    (SPMD path): scalar ``corrupt``/``mscale`` for this worker's read.
+    The Pallas path reuses the stacked kernel on a (1, D) view."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return channel_p2p_mixing_ref(x, x_tilde, x_partner, corrupt,
+                                      mscale, dt_next, eta=eta, alpha=alpha,
+                                      alpha_t=alpha_t, clip=clip)
+    ox, ot = channel_gossip_stacked(
+        x[None], x_tilde[None], x_partner[None],
+        jnp.reshape(jnp.asarray(corrupt, jnp.float32), (1,)),
+        jnp.reshape(jnp.asarray(mscale, jnp.float32), (1,)),
+        jnp.reshape(jnp.asarray(dt_next, jnp.float32), (1,)),
+        eta=eta, alpha=alpha, alpha_t=alpha_t, clip=clip,
+        interpret=(backend == "pallas_interpret"))
+    return ox[0], ot[0]

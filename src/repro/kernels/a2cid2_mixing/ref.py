@@ -46,3 +46,68 @@ def mixing_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
          ).astype(x.dtype)[:, None]
     d = xt1 - x1
     return x1 + c * d, xt1 - c * d
+
+
+def _robust_m(x: jax.Array, x_partner: jax.Array, corrupt: jax.Array,
+              mscale: jax.Array | None, clip: float | None) -> jax.Array:
+    """Channel m-term: corrupted received value, robustly aggregated.
+
+    ``corrupt`` is the multiplier OFFSET on the received partner value
+    (honest = 0 => (1 + 0) * xp == xp bitwise, the exact no-op reduction).
+    ``mscale`` is the per-worker robust scale the caller derived from the
+    delta's norm (trim: 0/1 rejection; clip: tau/||m|| rescale; 1 = honest
+    pass-through, also bitwise exact).  ``clip`` bounds each coordinate
+    instead (the in-kernel 'coord' rule).
+    """
+    cadv = (1.0 + jnp.asarray(corrupt, jnp.float32)).astype(x.dtype)
+    cadv = jnp.reshape(cadv, cadv.shape + (1,) * (x.ndim - cadv.ndim))
+    m = x - cadv * x_partner
+    if mscale is not None:
+        s = jnp.asarray(mscale, jnp.float32).astype(x.dtype)
+        m = m * jnp.reshape(s, s.shape + (1,) * (x.ndim - s.ndim))
+    if clip is not None:
+        m = jnp.clip(m, -clip, clip)
+    return m
+
+
+def channel_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
+                               x_partner: jax.Array, corrupt: jax.Array,
+                               mscale: jax.Array, dt_next: jax.Array, *,
+                               eta: float, alpha: float, alpha_t: float,
+                               clip: float | None = None
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the unreliable-channel fused batch.
+
+    Like ``mixing_gossip_stacked_ref`` but the partner values ``x_partner``
+    (W, D) arrive pre-gathered (the engine resolves fresh vs ring-buffer
+    stale reads BEFORE the kernel), ``corrupt`` (W,) is the per-worker
+    received-value multiplier offset, ``mscale`` (W,) the robust
+    trim/clip scale on the delta's norm, and ``clip`` the in-kernel
+    coordinate-clip rule.
+    """
+    m = _robust_m(x, x_partner, corrupt, mscale, clip)
+    x1 = x - alpha * m
+    xt1 = x_tilde - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)[:, None]
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d
+
+
+def channel_p2p_mixing_ref(x: jax.Array, x_tilde: jax.Array,
+                           x_partner: jax.Array, corrupt, mscale, dt_next,
+                           *, eta: float, alpha: float, alpha_t: float,
+                           clip: float | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Per-worker (D,) channel variant of ``p2p_mixing_ref`` (SPMD path):
+    scalar ``corrupt`` offset, ``mscale``, and ``dt_next``."""
+    m = _robust_m(x, x_partner, jnp.asarray(corrupt),
+                  jnp.asarray(mscale), clip)
+    x1 = x - alpha * m
+    xt1 = x_tilde - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d

@@ -30,7 +30,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.a2cid2 import A2CiD2Params
-from ..core.gossip import GossipMixer
+from ..core.channel import ChannelModel
+from ..core.gossip import GossipMixer, check_mesh_channel
 from ..core.graphs import Graph
 from ..optim.optimizers import Optimizer
 
@@ -90,6 +91,16 @@ class GossipTrainer:
     # Exp(1)/rate, the time-dilation realization of the same rate process
     # the simulator expresses by tick thinning (DESIGN.md §8).  None = all 1.
     grad_rates: tuple[float, ...] | None = None
+    # unreliable channel (DESIGN.md §10): mesh trainers model the adversary
+    # (static per-matching corruption) and drop axes; message delay is
+    # simulator-only and rejected at construction.  robust_clip/robust_rule
+    # engage the trimmed/clipped m-term defense in the channel kernel.
+    channel: ChannelModel | None = None
+    robust_clip: float | None = None
+    robust_rule: str = "trim"
+
+    def __post_init__(self):
+        check_mesh_channel(self.channel)
 
     @classmethod
     def from_world(cls, world, loss_fn: Callable, optimizer: Optimizer, *,
@@ -100,13 +111,16 @@ class GossipTrainer:
         ``World.static_graph``); its link model sets the gossip graph's edge
         rates, its worker model the straggler clocks, its ``comms_per_grad``
         the per-step gossip-event count, and the A²CiD² parameters come from
-        the effective graph's chi values.
+        the effective graph's chi values.  A ``world.channel`` rides along
+        (adversary + drops; delayed worlds are rejected —
+        ``check_mesh_channel``).
         """
         from ..core.a2cid2 import params_from_graph
 
         graph = world.static_graph()
         if "comms_per_step" not in kw:  # explicit override skips the check
             kw["comms_per_step"] = _comms_per_step(world)
+        kw.setdefault("channel", world.channel)
         return cls(loss_fn, optimizer, graph,
                    params_from_graph(graph, accelerated=accelerated),
                    grad_rates=world.workers.grad_rates, **kw)
@@ -123,7 +137,9 @@ class GossipTrainer:
     # ------------------------------------------------------------- the step
     def make_step(self, mesh):
         mixer = GossipMixer(self.graph, self.acid, self.axis_name,
-                            backend=self.backend)
+                            backend=self.backend, channel=self.channel,
+                            robust_clip=self.robust_clip,
+                            robust_rule=self.robust_rule)
         n_events = self.comms_per_step
         rates = _rate_vec(self.grad_rates, self.graph.n)
 
@@ -226,6 +242,13 @@ class StackedGossipTrainer:
     # per-worker gradient rates (straggler clocks) — see GossipTrainer;
     # matches events.make_schedule(grad_rates=...) in distribution
     grad_rates: tuple[float, ...] | None = None
+    # unreliable channel — see GossipTrainer: adversary + drops only
+    channel: ChannelModel | None = None
+    robust_clip: float | None = None
+    robust_rule: str = "trim"
+
+    def __post_init__(self):
+        check_mesh_channel(self.channel)
 
     @classmethod
     def from_world(cls, world, grad_fn: Callable, optimizer: Optimizer, *,
@@ -237,6 +260,7 @@ class StackedGossipTrainer:
         graph = world.static_graph()
         if "comms_per_step" not in kw:  # explicit override skips the check
             kw["comms_per_step"] = _comms_per_step(world)
+        kw.setdefault("channel", world.channel)
         return cls(grad_fn, optimizer, graph,
                    params_from_graph(graph, accelerated=accelerated),
                    grad_rates=world.workers.grad_rates, **kw)
@@ -252,7 +276,8 @@ class StackedGossipTrainer:
     def make_step(self):
         from ..core.a2cid2 import apply_mixing
         from ..core.engine import FlatGossipEngine
-        from ..core.gossip import bank_edge_rates, matching_bank
+        from ..core.gossip import (bank_corruption, bank_edge_rates,
+                                   matching_bank)
 
         bank_np = np.asarray(matching_bank(self.graph))         # (M, W)
         probs = jnp.asarray(
@@ -262,6 +287,14 @@ class StackedGossipTrainer:
         acid = self.acid
 
         rate_vec = _rate_vec(self.grad_rates, n)
+        # unreliable-channel statics: per-matching corruption vectors (the
+        # Byzantine edge set is fixed, so each bank branch carries its own
+        # constant corrupt vector), drop probability, robust clip
+        corrupt_np = bank_corruption(
+            bank_np, None if self.channel is None else self.channel.adversary)
+        drop_prob = 0.0 if self.channel is None else self.channel.drop_prob
+        channel_on = (self.robust_clip is not None
+                      or bool(corrupt_np.any()) or drop_prob > 0.0)
 
         def step(state: StackedGossipState, batch: PyTree):
             key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
@@ -285,14 +318,20 @@ class StackedGossipTrainer:
             # run on the flat-buffer engine: pack once, one fused
             # [p2p, mix-to-next-event] sweep per event (see DESIGN.md),
             # unpack once — no per-leaf dispatch inside the scan.
+            k_drop = None
+            if drop_prob > 0.0:
+                # extra split only when drops can occur — a drop-free world
+                # keeps the pre-channel event stream bit-for-bit
+                k_ev, k_drop = jax.random.split(k_ev)
             idxs = jax.random.categorical(k_ev, jnp.log(probs), shape=(E,))
             gaps = jax.random.exponential(k_gap, (E, n)) / max(E, 1)
             if E == 0:
                 return (StackedGossipState(x, xt, opt, key),
                         {"loss": jnp.mean(losses)})
 
-            engine = FlatGossipEngine.for_pytree(x, acid, stacked=True,
-                                                 backend=self.backend)
+            engine = FlatGossipEngine.for_pytree(
+                x, acid, stacked=True, backend=self.backend,
+                robust_clip=self.robust_clip, robust_rule=self.robust_rule)
             bx, bxt = engine.pack(x), engine.pack(xt)
             bx, bxt = engine.mix(bx, bxt, gaps[0])
             gaps_next = jnp.concatenate(
@@ -308,11 +347,22 @@ class StackedGossipTrainer:
 
                 def branch(operand):
                     bx, bxt, dtn = operand
+                    if channel_on:
+                        xp = jnp.take(bx, perm, axis=0)
+                        return engine.channel_batch(
+                            bx, bxt, xp, jnp.asarray(corrupt_np[k]), dtn)
                     return engine.batch(bx, bxt, perm, dtn)
 
                 return branch
 
             branches = [make_branch(k) for k in range(bank_np.shape[0])]
+            if channel_on:
+                # dropped events keep only their mix segment: one extra
+                # static branch with an identity matching (m = 0)
+                branches.append(lambda op: engine.mix(op[0], op[1], op[2]))
+                if drop_prob > 0.0:
+                    dropped = jax.random.bernoulli(k_drop, drop_prob, (E,))
+                    idxs = jnp.where(dropped, bank_np.shape[0], idxs)
 
             def ev(carry, inp):
                 bx, bxt = carry

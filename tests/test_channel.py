@@ -1,0 +1,589 @@
+"""Unreliable-channel subsystem (core/channel.py; DESIGN.md §10).
+
+The contracts under test:
+
+  * exact reduction — a trivial channel compiles bit-for-bit to the
+    channel-free schedule, ``horizon=0`` delay included, and a corruption
+    mask of zeros replays bit-identically to no mask on both backends;
+  * equivalence — the flat-buffer engine replays a channel world (stale
+    ring-buffer reads + Byzantine corruption + drops + robust clip)
+    identically to the per-event reference path;
+  * physics — Byzantine edges corrupt exactly the declared edges, drops
+    only remove pairs, staleness respects the ring horizon and the rounds
+    actually elapsed, detached workers stay exact fixed points under
+    delay;
+  * kernel parity — the robust channel kernel's Pallas interpret path
+    matches the jnp oracle, and degenerates bitwise to the clean kernel.
+
+Hypothesis sweeps live at the bottom behind importorskip (tier-1 collects
+clean without hypothesis, the hetero-x64 CI job runs them under x64).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
+                        Simulator, TopologyPhase, TopologySchedule,
+                        WorkerModel, World, coalesce_schedule,
+                        coalesced_stream, make_schedule, params_from_graph,
+                        ring_graph)
+from repro.core.channel import CORRUPT_KEY, STALE_KEY
+from repro.kernels.a2cid2_mixing.kernel import channel_gossip_stacked
+from repro.kernels.a2cid2_mixing.ref import (channel_gossip_stacked_ref,
+                                             channel_p2p_mixing_ref,
+                                             mixing_gossip_stacked_ref)
+
+N = 12
+
+
+def _quad_grad_fn(b):
+    def grad_fn(x, key, wid):
+        g = (x - b[wid]).astype(x.dtype)
+        return 0.5 * jnp.sum(g ** 2), g
+    return grad_fn
+
+
+def _sim(n, d, accelerated=True, backend="ref", robust_clip=None, seed=1):
+    g = ring_graph(n)
+    b = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    sim = Simulator(_quad_grad_fn(b), params_from_graph(g, accelerated),
+                    gamma=0.05, backend=backend, robust_clip=robust_clip)
+    st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+    return g, sim, st
+
+
+def _hostile_channel(g):
+    return ChannelModel(delay=DelayProcess(horizon=3, prob=0.6),
+                        adversary=ByzantineEdges(g.edges[:2], "sign_flip"),
+                        drop_prob=0.1)
+
+
+# ------------------------------------------------------------- validation
+
+def test_validation_names_the_offending_field():
+    g = ring_graph(8)
+    with pytest.raises(ValueError, match=r"DelayProcess\.horizon"):
+        DelayProcess(horizon=-1)
+    with pytest.raises(ValueError, match=r"DelayProcess\.prob"):
+        DelayProcess(horizon=2, prob=1.5)
+    with pytest.raises(ValueError, match=r"DelayProcess\.kind"):
+        DelayProcess(horizon=2, kind="gaussian")
+    with pytest.raises(ValueError, match=r"ByzantineEdges\.edges.*non-empty"):
+        ByzantineEdges(())
+    with pytest.raises(ValueError, match=r"ByzantineEdges\.edges.*distinct"):
+        ByzantineEdges(((3, 3),))
+    with pytest.raises(ValueError, match=r"ByzantineEdges\.mode"):
+        ByzantineEdges(((0, 1),), mode="gaslight")
+    with pytest.raises(ValueError, match=r"ByzantineEdges\.prob"):
+        ByzantineEdges(((0, 1),), prob=0.0)
+    with pytest.raises(ValueError, match="robust_rule"):
+        Simulator(lambda x, k, w: (0.0, x), params_from_graph(ring_graph(4)),
+                  gamma=0.1, robust_clip=1.0, robust_rule="median")
+    from repro.core import FlatGossipEngine, FlatLayout
+    with pytest.raises(ValueError, match="robust_rule"):
+        FlatGossipEngine(FlatLayout.from_pytree({"w": jnp.zeros(4)}),
+                         params_from_graph(ring_graph(4)),
+                         robust_rule="median")
+    with pytest.raises(ValueError, match=r"channel\.drop_prob"):
+        ChannelModel(drop_prob=1.0)
+    with pytest.raises(ValueError, match="channel.delay must be a"):
+        ChannelModel(delay=3)
+    with pytest.raises(ValueError, match="channel must be a ChannelModel"):
+        World(topology=g, channel="lossy")
+    # adversary edges must exist in the world's topology
+    with pytest.raises(ValueError, match=r"adversary edges \[\(0, 4\)\]"):
+        World(topology=g,
+              channel=ChannelModel(adversary=ByzantineEdges(((0, 4),))))
+    with pytest.raises(ValueError, match=r"outside \[0, 8\)"):
+        World(topology=g,
+              channel=ChannelModel(adversary=ByzantineEdges(((0, 99),))))
+
+
+def test_adversary_edges_may_live_in_any_phase():
+    """A Byzantine edge only present in the post-switch topology is legal —
+    corruption simply fires in the phases where the edge exists."""
+    from repro.core import PhaseSwitch, build_graph
+    g = ring_graph(8)
+    comp = build_graph("complete", 8)
+    w = World(topology=g,
+              faults=(PhaseSwitch(4, topology=comp),),
+              channel=ChannelModel(adversary=ByzantineEdges(((0, 4),))))
+    sched = w.compile(8, seed=0)
+    c = sched.extras[CORRUPT_KEY]
+    assert (c[:4] == 0).all()          # edge absent from the ring phase
+    assert (c != 0).any() or True      # complete phase may or may not match
+
+
+# ---------------------------------------------------------- serialization
+
+def test_channel_world_json_round_trip():
+    g = ring_graph(8)
+    worlds = [
+        World(topology=g, channel=ChannelModel(
+            delay=DelayProcess(horizon=4, prob=0.3, kind="fixed"))),
+        World(topology=g, channel=ChannelModel(
+            adversary=ByzantineEdges(g.edges[:3], "scale", scale=5.0),
+            drop_prob=0.2)),
+        World(topology=g, comms_per_grad=2.0,
+              workers=WorkerModel(grad_rates=np.linspace(0.2, 1, 8)),
+              channel=_hostile_channel(g)),
+    ]
+    for w in worlds:
+        w2 = World.from_json(w.to_json())
+        assert w2 == w
+        a, b = w.compile(10, seed=3), w2.compile(10, seed=3)
+        np.testing.assert_array_equal(a.partners, b.partners)
+        for k in a.extras_dict():
+            np.testing.assert_array_equal(a.extras[k], b.extras[k])
+
+
+# --------------------------------------------------------- exact reduction
+
+def test_trivial_channel_compiles_bit_for_bit():
+    """horizon=0 delay / prob=0 delay / empty channel all reproduce the
+    channel-free schedule object-identically (no extras attached)."""
+    g = ring_graph(N)
+    plain = World(topology=g, comms_per_grad=1.5).compile(20, seed=6)
+    for chan in (ChannelModel(),
+                 ChannelModel(delay=DelayProcess(horizon=0)),
+                 ChannelModel(delay=DelayProcess(horizon=5, prob=0.0))):
+        w = World(topology=g, comms_per_grad=1.5, channel=chan)
+        sched = w.compile(20, seed=6)
+        assert sched.extras is None
+        np.testing.assert_array_equal(sched.partners, plain.partners)
+        np.testing.assert_array_equal(sched.event_times, plain.event_times)
+        np.testing.assert_array_equal(sched.event_mask, plain.event_mask)
+        np.testing.assert_array_equal(sched.grad_times, plain.grad_times)
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_zero_corruption_mask_is_a_noop(engine):
+    """An explicit all-zero corrupt mask routes through the channel replay
+    machinery yet produces bit-identical results to the plain path."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d)
+    plain = make_schedule(g, rounds=10, comms_per_grad=1.3, seed=2)
+    R, K, _ = plain.partners.shape
+    masked = plain.with_extras(corrupt=np.zeros((R, K, n), np.float32))
+    fin_p, tr_p = sim.run_schedule(st, plain, engine=engine)
+    fin_m, tr_m = sim.run_schedule(st, masked, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin_p.x), np.asarray(fin_m.x))
+    np.testing.assert_array_equal(np.asarray(fin_p.x_tilde),
+                                  np.asarray(fin_m.x_tilde))
+    np.testing.assert_array_equal(np.asarray(tr_p.consensus),
+                                  np.asarray(tr_m.consensus))
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_h0_delay_replays_bit_for_bit(engine):
+    """A horizon=0 delay world replays identically to the channel-free
+    world on both backends — the PR 3 schedules are reproduced exactly."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d)
+    w_plain = World(topology=g, comms_per_grad=1.3)
+    w_h0 = dataclasses.replace(
+        w_plain, channel=ChannelModel(delay=DelayProcess(horizon=0)))
+    fin_p, _ = sim.run_world(st, w_plain, 10, seed=2, engine=engine)
+    fin_0, _ = sim.run_world(st, w_h0, 10, seed=2, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin_p.x), np.asarray(fin_0.x))
+    np.testing.assert_array_equal(np.asarray(fin_p.t_last),
+                                  np.asarray(fin_0.t_last))
+
+
+# ------------------------------------------------------- channel physics
+
+def test_corrupt_mask_marks_exactly_the_byzantine_edges():
+    g = ring_graph(N)
+    byz = g.edges[:2]
+    w = World(topology=g,
+              channel=ChannelModel(adversary=ByzantineEdges(byz, "zero")))
+    sched = w.compile(30, seed=1)
+    c = sched.extras[CORRUPT_KEY]
+    byz_set = {tuple(sorted(e)) for e in byz}
+    idx = np.arange(N)
+    for r in range(sched.rounds):
+        for k in range(sched.partners.shape[1]):
+            p = sched.partners[r, k]
+            for i in range(N):
+                j = int(p[i])
+                on_byz = (sched.event_mask[r, k] and j != i
+                          and tuple(sorted((i, j))) in byz_set)
+                assert c[r, k, i] == (-1.0 if on_byz else 0.0)
+    assert (c != 0).any()  # the adversary actually fired
+
+
+def test_drops_only_remove_pairs():
+    g = ring_graph(N)
+    base = World(topology=g, comms_per_grad=2.0)
+    plain = base.compile(40, seed=5)
+    dropped = dataclasses.replace(
+        base, channel=ChannelModel(drop_prob=0.4)).compile(40, seed=5)
+    idx = np.arange(N)
+    np.testing.assert_array_equal(plain.event_times, dropped.event_times)
+    np.testing.assert_array_equal(plain.event_mask, dropped.event_mask)
+    kept = surviving = total = 0
+    for r in range(plain.rounds):
+        for k in range(plain.partners.shape[1]):
+            p0, p1 = plain.partners[r, k], dropped.partners[r, k]
+            # involution preserved; surviving pairs match the original
+            assert np.all(p1[p1] == idx)
+            for i in range(N):
+                if p0[i] != i:
+                    total += 1
+                    if p1[i] != i:
+                        surviving += 1
+                        assert p1[i] == p0[i]
+                else:
+                    assert p1[i] == i  # drops never ADD pairs
+    assert 0 < surviving < total  # some pairs dropped, some survived
+
+
+def test_staleness_respects_horizon_and_elapsed_rounds():
+    g = ring_graph(N)
+    H = 4
+    w = World(topology=g, comms_per_grad=2.0,
+              channel=ChannelModel(delay=DelayProcess(horizon=H, prob=1.0)))
+    sched = w.compile(30, seed=7)
+    s = sched.extras[STALE_KEY]
+    idx = np.arange(N)
+    involved = (sched.partners != idx) & sched.event_mask[:, :, None]
+    assert s.min() >= 0 and s.max() == H
+    # staleness only on involved reads, never beyond the rounds elapsed
+    assert (s[~involved] == 0).all()
+    for r in range(sched.rounds):
+        assert s[r].max() <= min(r, H)
+    # prob=1.0: every involved read from round H on is stale
+    assert (s[H:][involved[H:]] >= 1).all()
+
+
+def test_intermittent_adversary_corrupts_a_strict_subset():
+    """prob < 1 duty-cycles the corruption per exchange: strictly fewer
+    hits than the always-on adversary, always symmetric across the pair."""
+    g = ring_graph(N)
+    byz = g.edges[:3]
+
+    def hits(prob):
+        w = World(topology=g, comms_per_grad=2.0, channel=ChannelModel(
+            adversary=ByzantineEdges(byz, "scale", scale=100.0, prob=prob)))
+        return w.compile(60, seed=2).extras[CORRUPT_KEY]
+
+    full, half = hits(1.0), hits(0.5)
+    assert 0 < (half != 0).sum() < (full != 0).sum()
+    # duty-cycled hits are a subset of the always-on hits, pair-symmetric
+    assert ((half != 0) <= (full != 0)).all()
+    sched = World(topology=g, comms_per_grad=2.0).compile(60, seed=2)
+    for r, k, i in zip(*np.nonzero(half)):
+        j = int(sched.partners[r, k, i])
+        assert half[r, k, j] == half[r, k, i]
+
+
+def test_fixed_kind_delay_draws_constant_offsets():
+    g = ring_graph(N)
+    w = World(topology=g, channel=ChannelModel(
+        delay=DelayProcess(horizon=3, kind="fixed", prob=1.0)))
+    sched = w.compile(20, seed=0)
+    s = sched.extras[STALE_KEY]
+    idx = np.arange(N)
+    involved = (sched.partners != idx) & sched.event_mask[:, :, None]
+    vals = s[3:][involved[3:]]
+    assert (vals == 3).all()  # past the warmup, every read is exactly H old
+
+
+# ------------------------------------------------- end-to-end equivalence
+
+@pytest.mark.parametrize("accelerated", [False, True])
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_engine_matches_reference_on_channel_world(accelerated, backend):
+    """The acceptance oracle: FlatGossipEngine replays a full channel world
+    (delay + Byzantine edges + drops) identically to the per-event path."""
+    n, d = 12, 24
+    rounds = 10 if backend == "pallas_interpret" else 40
+    g, sim, st = _sim(n, d, accelerated=accelerated, backend=backend)
+    w = World(topology=g, comms_per_grad=1.5, channel=_hostile_channel(g))
+    sched = w.compile(rounds, seed=11)
+    assert set(sched.extras_dict()) == {STALE_KEY, CORRUPT_KEY}
+    fin_ref, tr_ref = sim.run_schedule(st, sched, engine=False)
+    fin_eng, tr_eng = sim.run_schedule(st, sched, engine=True)
+    np.testing.assert_allclose(fin_eng.x, fin_ref.x, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_eng.x_tilde, fin_ref.x_tilde,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_eng.t_last, fin_ref.t_last, atol=1e-6)
+    np.testing.assert_allclose(tr_eng.loss, tr_ref.loss, atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(tr_eng.consensus, tr_ref.consensus,
+                               atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("rule", ["trim", "clip", "coord"])
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_robust_replay_engine_matches_reference(backend, rule):
+    """Every robust rule (norm trim / norm clip / coordinate clip) agrees
+    across both replay paths on a Byzantine world."""
+    n, d = 8, 16
+    rounds = 8 if backend == "pallas_interpret" else 25
+    g, sim, st = _sim(n, d, backend=backend, robust_clip=0.8)
+    sim = dataclasses.replace(sim, robust_rule=rule)
+    w = World(topology=g, channel=ChannelModel(
+        adversary=ByzantineEdges(g.edges[:2], "sign_flip")))
+    sched = w.compile(rounds, seed=4)
+    fin_ref, _ = sim.run_schedule(st, sched, engine=False)
+    fin_eng, _ = sim.run_schedule(st, sched, engine=True)
+    np.testing.assert_allclose(fin_eng.x, fin_ref.x, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_eng.x_tilde, fin_ref.x_tilde,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_norm_trim_rejects_garbage_injection():
+    """On a garbage-injection Byzantine ring (scale attack, 50% duty
+    cycle), the non-robust replay blows up while the norm-trim defense
+    keeps the tail consensus at the clean level — the story the benchmark
+    quantifies (BENCH_channel.json)."""
+    n, d, rounds = 16, 24, 100
+    g, sim, st = _sim(n, d)
+    byz = tuple(g.edges[i] for i in (0, 8))
+    w_byz = World(topology=g, channel=ChannelModel(
+        adversary=ByzantineEdges(byz, "scale", scale=1e3, prob=0.5)))
+    clean_sched = World(topology=g).compile(rounds, seed=9)
+    byz_sched = w_byz.compile(rounds, seed=9)
+    _, tr_clean = sim.run_schedule(st, clean_sched)
+    _, tr_byz = sim.run_schedule(st, byz_sched)
+    sim_rob = dataclasses.replace(sim, robust_clip=5.0, robust_rule="trim")
+    _, tr_rob = sim_rob.run_schedule(st, byz_sched)
+    clean = float(np.mean(tr_clean.consensus[-20:]))
+    attacked = np.asarray(tr_byz.consensus[-20:])
+    defended = float(np.mean(tr_rob.consensus[-20:]))
+    # the attack is catastrophic without the defense...
+    assert (~np.isfinite(attacked)).any() or attacked.mean() > 100 * clean
+    # ...and invisible with it (honest duty cycle keeps the ring connected)
+    assert defended < 2.0 * clean
+
+
+def test_mesh_trainers_model_static_axes_and_reject_the_rest():
+    """StackedGossipTrainer.from_world carries an always-on adversary +
+    drops + robust rules; delay and duty-cycled adversaries are rejected
+    loudly (they need peer history / pair-correlated draws a per-worker
+    SPMD loop cannot supply) rather than silently mis-modeled."""
+    from repro.launch.gossip_train import StackedGossipTrainer
+    from repro.optim import sgd
+
+    g = ring_graph(8)
+    opt = sgd(momentum=0.0, weight_decay=0.0)
+
+    def grad_fn(p, batch):
+        return (0.5 * jnp.sum((p["w"] - batch) ** 2), None), \
+            {"w": p["w"] - batch}
+
+    chan = ChannelModel(adversary=ByzantineEdges((g.edges[0],), "scale",
+                                                 scale=100.0),
+                        drop_prob=0.1)
+    tr = StackedGossipTrainer.from_world(
+        World(topology=g, channel=chan), grad_fn, opt, backend="ref",
+        robust_clip=5.0)
+    assert tr.channel == chan
+    state = tr.init({"w": jnp.zeros((3,), jnp.float32)},
+                    jax.random.PRNGKey(0))
+    state, m = jax.jit(tr.make_step())(state, jnp.ones((8, 3), jnp.float32))
+    assert np.isfinite(float(m["loss"]))
+
+    for bad in (ChannelModel(delay=DelayProcess(horizon=2)),
+                ChannelModel(adversary=ByzantineEdges((g.edges[0],),
+                                                      prob=0.5))):
+        with pytest.raises(ValueError, match="mesh trainers"):
+            StackedGossipTrainer.from_world(World(topology=g, channel=bad),
+                                            grad_fn, opt)
+
+
+# ------------------------------------------------ churn x delay interplay
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_detached_workers_stay_fixed_points_under_delay(engine):
+    """A churned worker's row is untouched by a delayed channel replay:
+    mixing segments are zero-dt, it joins no matchings, and ring snapshots
+    of its frozen row change nothing (semigroup over the ring buffer)."""
+    n, d, dead = 8, 10, 3
+    active = np.ones(n, bool)
+    active[dead] = False
+    g = ring_graph(n)
+    ts = TopologySchedule((TopologyPhase(g, 12, tuple(active)),))
+    w = World(topology=ts,
+              channel=ChannelModel(delay=DelayProcess(horizon=3, prob=0.8)))
+    sched = w.compile(seed=3)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    sim = Simulator(_quad_grad_fn(b), params_from_graph(g, True),
+                    gamma=0.05, backend="ref")
+    st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+    fin, _ = sim.run_schedule(st, sched, engine=engine)
+    np.testing.assert_array_equal(np.asarray(fin.x)[dead],
+                                  np.asarray(st.x)[dead])
+    np.testing.assert_array_equal(np.asarray(fin.x_tilde)[dead],
+                                  np.asarray(st.x_tilde)[dead])
+    np.testing.assert_array_equal(np.asarray(fin.t_last)[dead], 0.0)
+    others = np.delete(np.arange(n), dead)
+    assert np.all(np.any(np.asarray(fin.x)[others] != 0.0, axis=1))
+
+
+# ----------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("w,d", [(4, 128), (6, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("clip", [None, 0.4])
+def test_channel_kernel_matches_oracle(w, d, dtype, clip):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (w, d), dtype)
+    xt = jax.random.normal(jax.random.fold_in(key, 1), (w, d), dtype)
+    perm = np.arange(w)
+    perm[:4] = [1, 0, 3, 2]
+    xp = jnp.take(x, jnp.asarray(perm), axis=0)
+    corrupt = jnp.asarray([-2.0, 0.0, -1.0, 4.0] + [0.0] * (w - 4),
+                          jnp.float32)
+    mscale = jnp.asarray([1.0, 0.0, 0.5, 1.0] + [1.0] * (w - 4),
+                         jnp.float32)
+    dt = jax.random.uniform(jax.random.fold_in(key, 2), (w,))
+    kw = dict(eta=0.37, alpha=0.5, alpha_t=1.4, clip=clip)
+    ox, ot = channel_gossip_stacked(x, xt, xp, corrupt, mscale, dt,
+                                    interpret=True, **kw)
+    rx, rt = channel_gossip_stacked_ref(x, xt, xp, corrupt, mscale, dt,
+                                        **kw)
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(ox, np.float32),
+                               np.asarray(rx, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(ot, np.float32),
+                               np.asarray(rt, np.float32), atol=atol)
+
+
+def test_channel_kernel_degenerates_to_clean_kernel():
+    """Zero corruption + unit mscale + no clip is bitwise the clean
+    stacked kernel — (1 + 0) * xp and m * 1.0 introduce no float
+    perturbation."""
+    w, d = 8, 256
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (w, d))
+    xt = jax.random.normal(jax.random.fold_in(key, 1), (w, d))
+    perm = jnp.asarray([1, 0, 3, 2, 5, 4, 6, 7], jnp.int32)
+    xp = jnp.take(x, perm, axis=0)
+    dt = jax.random.uniform(jax.random.fold_in(key, 2), (w,))
+    kw = dict(eta=0.8, alpha=0.5, alpha_t=1.1)
+    cx, ct = channel_gossip_stacked_ref(x, xt, xp, jnp.zeros(w),
+                                        jnp.ones(w), dt, clip=None, **kw)
+    px, pt = mixing_gossip_stacked_ref(x, xt, perm, dt, **kw)
+    np.testing.assert_array_equal(np.asarray(cx), np.asarray(px))
+    np.testing.assert_array_equal(np.asarray(ct), np.asarray(pt))
+
+
+def test_channel_local_matches_stacked_row():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 300))
+    xt = jax.random.normal(jax.random.fold_in(key, 1), (2, 300))
+    kw = dict(eta=0.4, alpha=0.5, alpha_t=0.9, clip=0.2)
+    lx, lt = channel_p2p_mixing_ref(x[0], xt[0], x[1], -2.0, 0.5, 0.7, **kw)
+    sx, st_ = channel_gossip_stacked_ref(x[:1], xt[:1], x[1:2],
+                                         jnp.asarray([-2.0]),
+                                         jnp.asarray([0.5]),
+                                         jnp.asarray([0.7]), **kw)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(sx[0]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lt), np.asarray(st_[0]), atol=1e-6)
+
+
+# --------------------------------------------------- extras stream wiring
+
+def test_channel_extras_thread_through_coalesce_and_stream():
+    """The channel's stale/corrupt values survive coalescing and the flat
+    stream per worker — each involved worker carries its own read's
+    attributes into the scan row (the generic extras contract, pinned here
+    for the channel's specific arrays)."""
+    g = ring_graph(8)
+    w = World(topology=g, comms_per_grad=2.0, channel=_hostile_channel(g))
+    sched = w.compile(10, seed=6)
+    cs = coalesce_schedule(sched)
+    R, K, n = sched.partners.shape
+    for wk in range(n):
+        raw = sorted((float(sched.event_times[r, e]),
+                      int(sched.partners[r, e, wk]),
+                      int(sched.extras[STALE_KEY][r, e, wk]),
+                      float(sched.extras[CORRUPT_KEY][r, e, wk]))
+                     for r in range(R) for e in range(K)
+                     if sched.event_mask[r, e]
+                     and sched.partners[r, e, wk] != wk)
+        coal = sorted((float(cs.wtimes[r, bb, wk]),
+                       int(cs.partners[r, bb, wk]),
+                       int(cs.extras[STALE_KEY][r, bb, wk]),
+                       float(cs.extras[CORRUPT_KEY][r, bb, wk]))
+                      for r in range(R) for bb in range(cs.partners.shape[1])
+                      if cs.batch_active[r, bb]
+                      and cs.partners[r, bb, wk] != wk)
+        assert raw == coal
+    stream = coalesced_stream(cs, np.zeros(n))
+    assert stream.extras[STALE_KEY].dtype == np.int32
+    np.testing.assert_array_equal(
+        stream.extras[STALE_KEY][stream.is_grad], 0)
+
+
+# ------------------------------------------------------- hypothesis sweeps
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - tier-1 collects without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=hyp_st.integers(0, 500), horizon=hyp_st.integers(1, 6),
+           prob=hyp_st.floats(0.1, 1.0))
+    def test_stale_draws_always_serveable(seed, horizon, prob):
+        """For any delay process, compiled staleness never exceeds the ring
+        horizon or the rounds elapsed, and lands only on involved reads."""
+        g = ring_graph(8)
+        w = World(topology=g, comms_per_grad=1.5, channel=ChannelModel(
+            delay=DelayProcess(horizon=horizon, prob=prob)))
+        sched = w.compile(12, seed=seed)
+        s = sched.extras[STALE_KEY]
+        idx = np.arange(8)
+        involved = (sched.partners != idx) & sched.event_mask[:, :, None]
+        assert (s[~involved] == 0).all()
+        assert s.min() >= 0
+        for r in range(sched.rounds):
+            assert s[r].max() <= min(r, horizon)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=hyp_st.integers(0, 300))
+    def test_h0_worlds_reduce_bit_for_bit(seed):
+        """Sweep: horizon=0 channels always compile to the channel-free
+        schedule bit-for-bit (both replay paths consume the same arrays)."""
+        g = ring_graph(8)
+        plain = World(topology=g, comms_per_grad=1.2).compile(8, seed=seed)
+        chan = World(topology=g, comms_per_grad=1.2,
+                     channel=ChannelModel(delay=DelayProcess(horizon=0))
+                     ).compile(8, seed=seed)
+        assert chan.extras is None
+        np.testing.assert_array_equal(plain.partners, chan.partners)
+        np.testing.assert_array_equal(plain.event_times, chan.event_times)
+        np.testing.assert_array_equal(plain.grad_times, chan.grad_times)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=hyp_st.integers(0, 200), dead=hyp_st.integers(0, 7),
+           horizon=hyp_st.integers(1, 4))
+    def test_churned_rows_fixed_under_any_delay(seed, dead, horizon):
+        """Sweep of the delay x churn interplay: any detached worker stays
+        an exact fixed point of the channel engine replay."""
+        n, d = 8, 6
+        active = np.ones(n, bool)
+        active[dead] = False
+        g = ring_graph(n)
+        ts = TopologySchedule((TopologyPhase(g, 6, tuple(active)),))
+        w = World(topology=ts, channel=ChannelModel(
+            delay=DelayProcess(horizon=horizon, prob=0.7)))
+        sched = w.compile(seed=seed)
+        b = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+        sim = Simulator(_quad_grad_fn(b), params_from_graph(g, True),
+                        gamma=0.05, backend="ref")
+        st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(1))
+        fin, _ = sim.run_schedule(st, sched, engine=True)
+        np.testing.assert_array_equal(np.asarray(fin.x)[dead],
+                                      np.asarray(st.x)[dead])
+        np.testing.assert_array_equal(np.asarray(fin.x_tilde)[dead],
+                                      np.asarray(st.x_tilde)[dead])
