@@ -10,10 +10,16 @@ derived from the event model.
     PYTHONPATH=src python -m benchmarks.run --only table2
     PYTHONPATH=src python -m benchmarks.run --only topology --seed 7
     PYTHONPATH=src python -m benchmarks.run --only topology --small  # CI
+    PYTHONPATH=src python -m benchmarks.run --only sweep       # batched vs serial
 
 ``--seed`` threads into every world compilation; ``--only topology`` emits
 ``BENCH_topology.json`` with a serialized ``World`` spec and a wall-clock
-axis (bandwidth-aware LinkModel) per curve.
+axis (bandwidth-aware LinkModel) per curve.  The sweep families
+(``topology``, ``channel``) replay as batched many-worlds scans
+(``Simulator.run_worlds``, DESIGN.md §11) — one jit trace + one dispatch
+per family — and ``--only sweep`` emits ``BENCH_sweep.json``, the
+batched-vs-serial wall-clock artifact the CI perf gate reads.  Timing
+helpers block on results and report cold (compile-inclusive) and warm.
 """
 from __future__ import annotations
 
@@ -26,11 +32,17 @@ import numpy as np
 
 
 def _timeit(fn, repeats=3):
-    fn()  # compile
+    """(cold_us, warm_us) of ``fn`` with results BLOCKED before the clock
+    is read — jax dispatch is async, so timing an unblocked call measures
+    enqueue latency, not work.  Cold includes compilation; warm is the
+    steady-state mean over ``repeats``."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    cold = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats * 1e6
+        jax.block_until_ready(fn())
+    return cold, (time.perf_counter() - t0) / repeats * 1e6
 
 
 def _parse_only(arg):
@@ -98,6 +110,22 @@ def _dump_json(path_base: str, name: str, report: dict) -> None:
         f.write("\n")
 
 
+def _schedule_compiler(rounds):
+    """World-schedule compiler memoized per unique (world object, seed) —
+    a sweep grid replays the identical schedule across its baseline/
+    accelerated (and robust/non-robust) arms, so each point compiles
+    once."""
+    cache = {}
+
+    def compiled(w, s):
+        key = (id(w), s)
+        if key not in cache:
+            cache[key] = w.compile(rounds, seed=s)
+        return cache[key]
+
+    return compiled
+
+
 def _quad_grad_fn(b, noise=0.05):
     def grad_fn(x, key, wid):
         g = (x - b[wid]) + noise * jax.random.normal(key, x.shape)
@@ -106,6 +134,12 @@ def _quad_grad_fn(b, noise=0.05):
 
 
 def _sim_consensus(graph_name, n, accel, rate, rounds=250, d=64, seed=0):
+    """(cold_us, warm_us, tail_consensus) of one serial world replay.
+
+    The replay result is blocked on before the clock is read (the old
+    timing measured async DISPATCH, not the replay); cold includes the
+    jit trace, warm is a second identical call.
+    """
     from repro.core import Simulator, World, build_graph, params_from_graph
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     g = build_graph(graph_name, n)
@@ -115,10 +149,14 @@ def _sim_consensus(graph_name, n, accel, rate, rounds=250, d=64, seed=0):
     # compile host-side BEFORE the timer: the us column measures the replay
     # only, comparable with pre-World artifacts
     sched = World(topology=g, comms_per_grad=rate).compile(rounds, seed=seed)
-    t0 = time.perf_counter()
-    _, trace = sim.run_schedule(st, sched)
-    us = (time.perf_counter() - t0) * 1e6
-    return us, float(jnp.mean(trace.consensus[-50:]))
+    out = {}
+
+    def run():
+        _, out["trace"] = sim.run_schedule(st, sched)
+        return out["trace"]
+
+    cold, warm = _timeit(run, repeats=1)
+    return cold, warm, float(jnp.mean(out["trace"].consensus[-50:]))
 
 
 # ----------------------------------------------------------- paper artifacts
@@ -162,22 +200,24 @@ def bench_table4_cifar_topologies(seed: int = 0) -> list[str]:
     rows = []
     for name in ("complete", "ring"):
         for accel in (False, True):
-            us, cons = _sim_consensus(name, 16, accel, 1.0, seed=seed)
+            cold, warm, cons = _sim_consensus(name, 16, accel, 1.0,
+                                              seed=seed)
             tag = "acid" if accel else "base"
-            rows.append(f"table4_consensus_{name}_{tag},{us:.0f},{cons:.4f}")
+            rows.append(f"table4_consensus_{name}_{tag},{warm:.0f},"
+                        f"{cons:.4f};cold_us={cold:.0f}")
     return rows
 
 
 def bench_fig1_virtual_doubling(seed: int = 0) -> list[str]:
     """Fig 1 / Fig 5b: A2CiD2 @ rate 1 vs baseline @ rate 2 on the ring."""
-    us1, base1 = _sim_consensus("ring", 16, False, 1.0, seed=seed)
-    us2, base2 = _sim_consensus("ring", 16, False, 2.0, seed=seed)
-    us3, acid1 = _sim_consensus("ring", 16, True, 1.0, seed=seed)
+    c1, us1, base1 = _sim_consensus("ring", 16, False, 1.0, seed=seed)
+    c2, us2, base2 = _sim_consensus("ring", 16, False, 2.0, seed=seed)
+    c3, us3, acid1 = _sim_consensus("ring", 16, True, 1.0, seed=seed)
     ratio = acid1 / base2
     return [
-        f"fig1_base_rate1,{us1:.0f},{base1:.4f}",
-        f"fig1_base_rate2,{us2:.0f},{base2:.4f}",
-        f"fig1_acid_rate1,{us3:.0f},{acid1:.4f}",
+        f"fig1_base_rate1,{us1:.0f},{base1:.4f};cold_us={c1:.0f}",
+        f"fig1_base_rate2,{us2:.0f},{base2:.4f};cold_us={c2:.0f}",
+        f"fig1_acid_rate1,{us3:.0f},{acid1:.4f};cold_us={c3:.0f}",
         f"fig1_acid_vs_doubled_ratio,0.0,{ratio:.3f}",
     ]
 
@@ -187,8 +227,8 @@ def bench_table5_worker_scaling(seed: int = 0) -> list[str]:
     recovery (n = 16, 32)."""
     rows = []
     for n in (16, 32):
-        _, base = _sim_consensus("ring", n, False, 1.0, seed=seed)
-        _, acid = _sim_consensus("ring", n, True, 1.0, seed=seed)
+        _, _, base = _sim_consensus("ring", n, False, 1.0, seed=seed)
+        _, _, acid = _sim_consensus("ring", n, True, 1.0, seed=seed)
         rows.append(f"table5_ring_n{n}_gain,0.0,{base / max(acid, 1e-9):.3f}")
     return rows
 
@@ -217,29 +257,33 @@ def bench_kernels(seed: int = 0) -> list[str]:
     gb = n * 4 / 1e9
     kw = dict(eta=0.2, alpha=0.5, alpha_t=1.3)
     jf = jax.jit(lambda: mixing_p2p_ref(x, xt, xp, 0.5, **kw)[0])
-    f = lambda: jf().block_until_ready()
+    cold_f, warm_f = _timeit(jf)
     rows = [
         f"kernel_a2cid2_mixing_1M_unfused_traffic,0.0,"
         f"{6 * gb:.3f}GB_read+{4 * gb:.3f}GB_write",
-        f"kernel_a2cid2_mixing_1M,{_timeit(f):.0f},"
-        f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused",
+        f"kernel_a2cid2_mixing_1M,{warm_f:.0f},"
+        f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused"
+        f";cold_us={cold_f:.0f}",
     ]
     jp = jax.jit(lambda: mixing_p2p(x, xt, xp, jnp.float32(0.5),
                                     interpret=True, **kw)[0])
-    p = lambda: jp().block_until_ready()
-    rows.append(f"kernel_a2cid2_mixing_1M_pallas_interpret,{_timeit(p, 1):.0f},"
-                f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused")
+    cold_p, warm_p = _timeit(jp, 1)
+    rows.append(f"kernel_a2cid2_mixing_1M_pallas_interpret,{warm_p:.0f},"
+                f"{3 * gb:.3f}GB_read+{2 * gb:.3f}GB_write_fused"
+                f";cold_us={cold_p:.0f}")
 
     q = jax.random.normal(key, (4, 512, 64))
     jg = jax.jit(lambda: attention_ref(q, q, q))
-    g = lambda: jg().block_until_ready()
-    rows.append(f"kernel_flash_attention_ref_4x512,{_timeit(g):.0f},causal")
+    cold_g, warm_g = _timeit(jg)
+    rows.append(f"kernel_flash_attention_ref_4x512,{warm_g:.0f},"
+                f"causal;cold_us={cold_g:.0f}")
 
     xx = jax.random.normal(key, (4096, 1024))
     sc = jnp.zeros(1024)
     jh = jax.jit(lambda: rmsnorm_ref(xx, sc))
-    h = lambda: jh().block_until_ready()
-    rows.append(f"kernel_rmsnorm_ref_4096x1024,{_timeit(h):.0f},fused")
+    cold_h, warm_h = _timeit(jh)
+    rows.append(f"kernel_rmsnorm_ref_4096x1024,{warm_h:.0f},"
+                f"fused;cold_us={cold_h:.0f}")
     return rows
 
 
@@ -267,12 +311,11 @@ def bench_simulator_throughput(seed: int = 0) -> list[str]:
     """Event-simulator throughput (rounds/s) — the repro's own hot loop,
     on the flat-buffer coalesced/fused engine path (the default)."""
     sim, st, _, _, _, eng_arrays = _sim_setup(seed)
-    run = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
-    run()  # compile
-    t0 = time.perf_counter()
-    run()
-    dt = time.perf_counter() - t0
-    return [f"simulator_100rounds_n16,{dt*1e6:.0f},{100/dt:.0f}_rounds_per_s"]
+    run = lambda: sim.run_coalesced(st, eng_arrays)[1].loss
+    cold, warm = _timeit(run, repeats=1)
+    dt = warm / 1e6
+    return [f"simulator_100rounds_n16,{warm:.0f},{100/dt:.0f}_rounds_per_s"
+            f";cold_us={cold:.0f}"]
 
 
 def bench_gossip_engine(seed: int = 0) -> list[str]:
@@ -287,11 +330,10 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
     (x self + x partner rows + x~ self; the trailing mix rides along free).
     """
     sim, st, sched, cs, ref_arrays, eng_arrays = _sim_setup(seed)
-    ref = lambda: sim.run(st, ref_arrays)[1].loss.block_until_ready()
-    eng = lambda: sim.run_coalesced(st, eng_arrays)[1].loss.block_until_ready()
-    ref(); eng()  # compile both
-    us_ref = _timeit(ref, repeats=7)
-    us_eng = _timeit(eng, repeats=7)
+    ref = lambda: sim.run(st, ref_arrays)[1].loss
+    eng = lambda: sim.run_coalesced(st, eng_arrays)[1].loss
+    cold_ref, us_ref = _timeit(ref, repeats=7)
+    cold_eng, us_eng = _timeit(eng, repeats=7)
     speedup = us_ref / us_eng
 
     raw_slots = int(sched.partners.shape[0] * sched.partners.shape[1])
@@ -306,6 +348,8 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
             "seed_us": round(us_ref, 1),       # per-event path = seed code
             "engine_us": round(us_eng, 1),
             "speedup": round(speedup, 3),
+            "seed_cold_us": round(cold_ref, 1),
+            "engine_cold_us": round(cold_eng, 1),
         },
         "event_sweeps": {
             "raw_slots": raw_slots,
@@ -332,7 +376,7 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
 
 
 _TOPO_BENCH = {"n": 64, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
-               "gamma": 0.05, "noise": 0.05,
+               "gamma": 0.05, "noise": 0.05, "seeds": 3,
                "families": ["ring", "torus", "hypercube", "complete"]}
 
 
@@ -343,6 +387,12 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
     wash), plus heterogeneous-world scenarios (straggler clocks, a
     ring->hypercube phase switch with churn, Poisson failure/repair churn,
     and a bandwidth-degraded ring).  Emits BENCH_topology.json.
+
+    The WHOLE artifact — every family x {baseline, accelerated} x seed,
+    plus every scenario — is ONE batched replay (``Simulator.run_worlds``,
+    DESIGN.md §11): per-world A2CiD2 params ride the batch axis, so the
+    sweep costs one jit trace and one device dispatch instead of one per
+    point.  Family curves carry mean +- std bands over ``seeds`` seeds.
 
     Every curve is described by a declarative ``World`` (core/world.py);
     its serialized spec is embedded next to the curve so the artifact names
@@ -359,6 +409,7 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
 
     n, d = _TOPO_BENCH["n"], _TOPO_BENCH["d"]
     rounds, rate = _TOPO_BENCH["rounds"], _TOPO_BENCH["comms_per_grad"]
+    seeds = [seed + i for i in range(_TOPO_BENCH["seeds"])]
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     grad_fn = _quad_grad_fn(b, noise=_TOPO_BENCH["noise"])
     # one p2p message = the d-float replica; a gradient tick reads + writes
@@ -370,105 +421,144 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
         return LinkModel(bandwidth_bytes_per_s=bandwidth,
                          msg_bytes=msg_bytes, grad_seconds=grad_seconds)
 
-    def consensus_curve(graph, sched, accel):
-        sim = Simulator(grad_fn, params_from_graph(graph, accelerated=accel),
-                        gamma=_TOPO_BENCH["gamma"])
-        st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
-        t0 = time.perf_counter()
-        _, trace = sim.run_schedule(st, sched)
-        cons = np.asarray(trace.consensus)
-        return (time.perf_counter() - t0) * 1e6, cons
-
-    def curve_entry(world, chi_graph):
-        """Run baseline + accelerated on one world; return
-        (entry, sched, us)."""
-        sched = world.compile(rounds, seed=seed)
-        us_b, base = consensus_curve(chi_graph, sched, False)
-        us_a, acid = consensus_curve(chi_graph, sched, True)
-        tail_b = float(base[-30:].mean())
-        tail_a = float(acid[-30:].mean())
-        wall = world.round_seconds(sched)
-        entry = {
-            "world": world.to_dict(),
-            "cumulative_comm_events":
-                np.cumsum(sched.comm_events_per_round()).tolist(),
-            "wall_clock_seconds": np.cumsum(wall).tolist(),
-            "consensus_baseline": np.asarray(base, np.float64).tolist(),
-            "consensus_acid": np.asarray(acid, np.float64).tolist(),
-            "tail_consensus_baseline": tail_b,
-            "tail_consensus_acid": tail_a,
-            "acid_gain": tail_b / max(tail_a, 1e-12),
-        }
-        entry = _downsample_entry(entry, ("cumulative_comm_events",
-                                          "wall_clock_seconds",
-                                          "consensus_baseline",
-                                          "consensus_acid"))
-        return entry, sched, us_b + us_a
-
-    rows, report = [], {"config": dict(_TOPO_BENCH), "seed": seed,
-                        "families": {}, "scenarios": {}}
-    for name in _TOPO_BENCH["families"]:
-        g = build_graph(name, n)
-        entry, _, us = curve_entry(World(topology=g, links=link_model(),
-                                         comms_per_grad=rate), g)
-        entry.update(chi1=g.chi1(), chi2=g.chi2())
-        report["families"][name] = entry
-        rows.append(f"topology_{name}_n{n},{us:.0f},"
-                    f"gain={entry['acid_gain']:.3f};chi1={g.chi1():.1f}")
-
     ring = build_graph("ring", n)
 
-    # scenario 1: straggler clocks on the ring (half the workers at 1/4 rate)
-    grad_rates = np.where(np.arange(n) % 2 == 0, 1.0, 0.25)
-    entry, _, _ = curve_entry(
-        World(topology=ring, workers=WorkerModel(grad_rates=grad_rates),
-              links=link_model(), comms_per_grad=rate), ring)
-    report["scenarios"]["ring_stragglers"] = entry
+    # -------- declare the grid: (key, world, chi_graph, accel, seed) per
+    # point; families sweep seeds, scenarios replay at the base seed.
+    # Worlds are constructed ONCE per curve and shared across the
+    # baseline/accelerated arms, so each (world, seed) schedule compiles
+    # once (the arms replay the identical schedule).
+    points = []
+    family_graphs = {}
+    family_worlds = {}
+    for name in _TOPO_BENCH["families"]:
+        g = build_graph(name, n)
+        family_graphs[name] = g
+        family_worlds[name] = World(topology=g, links=link_model(),
+                                    comms_per_grad=rate)
+        for accel in (False, True):
+            for s in seeds:
+                points.append((("families", name), family_worlds[name],
+                               g, accel, s))
 
-    # scenario 2: phase switch ring -> hypercube with a churn window,
-    # expressed as PhaseSwitch faults on a static ring world
+    grad_rates = np.where(np.arange(n) % 2 == 0, 1.0, 0.25)
+    scen_worlds = {"ring_stragglers": World(
+        topology=ring, workers=WorkerModel(grad_rates=grad_rates),
+        links=link_model(), comms_per_grad=rate)}
     active = np.ones(n, bool)
     active[: n // 8] = False
-    pworld = World(
-        topology=ring,
-        links=link_model(),
+    scen_worlds["ring_churn_hypercube"] = World(
+        topology=ring, links=link_model(),
         faults=(PhaseSwitch(rounds // 3, active=tuple(active)),
                 PhaseSwitch(2 * (rounds // 3),
                             topology=build_graph("hypercube", n))),
         comms_per_grad=rate)
-    entry, _, _ = curve_entry(pworld, ring)
-    entry["phases"] = [
-        {"graph": ph.graph.name, "rounds": ph.rounds,
-         "active_workers": int(ph.active_mask().sum()),
-         "chi1": ph.chis()[0], "chi2": ph.chis()[1]}
-        for ph in pworld.phase_plan(rounds, seed).phases]
-    report["scenarios"]["ring_churn_hypercube"] = entry
-
-    # scenario 3: Poisson failure/repair churn on the ring (expected ~9% of
-    # workers down in steady state: fail/(fail+repair))
-    cworld = World(topology=ring, links=link_model(),
-                   faults=(ChurnProcess(fail_rate=0.02, repair_rate=0.2),),
-                   comms_per_grad=rate)
-    entry, csched, _ = curve_entry(cworld, ring)
-    entry["mean_alive_fraction"] = float(csched.alive_arr().mean())
-    entry["num_segments"] = len(cworld.segments(rounds, seed))
-    report["scenarios"]["ring_poisson_churn"] = entry
-
-    # scenario 4: bandwidth-degraded ring — every 8th link at 1/8 capacity.
-    # Rates follow bandwidth (slow links fire less, Def 3.1 per-edge path)
-    # and the wall-clock axis stretches where the slow links serialize.
+    scen_worlds["ring_poisson_churn"] = World(
+        topology=ring, links=link_model(),
+        faults=(ChurnProcess(fail_rate=0.02, repair_rate=0.2),),
+        comms_per_grad=rate)
     bw = np.full(ring.num_edges, ICI_BW)
     bw[::8] /= 8.0
-    bworld = World(topology=ring,
-                   links=LinkModel(bandwidth_bytes_per_s=tuple(bw),
-                                   msg_bytes=msg_bytes,
-                                   grad_seconds=grad_seconds),
-                   comms_per_grad=rate)
-    entry, _, _ = curve_entry(bworld, ring)
-    entry["slow_links"] = int((bw < ICI_BW).sum())
-    report["scenarios"]["ring_degraded_links"] = entry
+    scen_worlds["ring_degraded_links"] = World(
+        topology=ring,
+        links=LinkModel(bandwidth_bytes_per_s=tuple(bw),
+                        msg_bytes=msg_bytes, grad_seconds=grad_seconds),
+        comms_per_grad=rate)
+    for sname, w in scen_worlds.items():
+        for accel in (False, True):
+            points.append((("scenarios", sname), w, ring, accel, seed))
+
+    # -------- compile the grid host-side (one compile per unique
+    # (world, seed) — both accel arms share it), replay in ONE dispatch
+    compiled = _schedule_compiler(rounds)
+    scheds = [compiled(w, s) for _, w, _, _, s in points]
+    plist = [params_from_graph(g, accelerated=a)
+             for _, _, g, a, _ in points]
+    sim = Simulator(grad_fn, plist[0], gamma=_TOPO_BENCH["gamma"])
+    states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+              for _ in points]
+    traces = Simulator._run_worlds_jit._cache_size()
+    out = {}
+
+    def replay():
+        out["trace"] = sim.run_worlds(states, scheds, params=plist)[1]
+        return out["trace"]
+
+    cold_us, warm_us = _timeit(replay, repeats=1)
+    trace = out["trace"]
+    traces = Simulator._run_worlds_jit._cache_size() - traces
+    cons = np.asarray(trace.consensus, np.float64)  # (B, rounds)
+
+    def curves_for(key, accel):
+        idx = [i for i, (k, _, _, a, _) in enumerate(points)
+               if k == key and a == accel]
+        return cons[idx], [scheds[i] for i in idx]
+
+    def curve_entry(key, world):
+        """Mean +- std bands over the key's seeds (scenarios: one seed,
+        std 0), x-axes from the first seed's schedule."""
+        base, schs = curves_for(key, False)
+        acid, _ = curves_for(key, True)
+        sched = schs[0]
+        tail_b = float(base.mean(axis=0)[-30:].mean())
+        tail_a = float(acid.mean(axis=0)[-30:].mean())
+        wall = world.round_seconds(sched)
+        entry = {
+            "world": world.to_dict(),
+            "seeds": seeds if base.shape[0] > 1 else [seed],
+            "cumulative_comm_events":
+                np.cumsum(sched.comm_events_per_round()).tolist(),
+            "wall_clock_seconds": np.cumsum(wall).tolist(),
+            "consensus_baseline": base.mean(axis=0).tolist(),
+            "consensus_baseline_std": base.std(axis=0).tolist(),
+            "consensus_acid": acid.mean(axis=0).tolist(),
+            "consensus_acid_std": acid.std(axis=0).tolist(),
+            "tail_consensus_baseline": tail_b,
+            "tail_consensus_acid": tail_a,
+            "acid_gain": tail_b / max(tail_a, 1e-12),
+        }
+        return _downsample_entry(entry, ("cumulative_comm_events",
+                                         "wall_clock_seconds",
+                                         "consensus_baseline",
+                                         "consensus_baseline_std",
+                                         "consensus_acid",
+                                         "consensus_acid_std")), sched
+
+    rows, report = [], {"config": dict(_TOPO_BENCH), "seed": seed,
+                        "families": {}, "scenarios": {},
+                        "batched_replay": {
+                            "num_worlds": len(points),
+                            "cold_us": round(cold_us, 1),
+                            "warm_us": round(warm_us, 1),
+                            "jit_traces": traces,
+                        }}
+    for name in _TOPO_BENCH["families"]:
+        g = family_graphs[name]
+        entry, _ = curve_entry(("families", name), family_worlds[name])
+        entry.update(chi1=g.chi1(), chi2=g.chi2())
+        report["families"][name] = entry
+        rows.append(f"topology_{name}_n{n},0.0,"
+                    f"gain={entry['acid_gain']:.3f};chi1={g.chi1():.1f}")
+
+    for sname, w in scen_worlds.items():
+        entry, sched = curve_entry(("scenarios", sname), w)
+        if sname == "ring_churn_hypercube":
+            entry["phases"] = [
+                {"graph": ph.graph.name, "rounds": ph.rounds,
+                 "active_workers": int(ph.active_mask().sum()),
+                 "chi1": ph.chis()[0], "chi2": ph.chis()[1]}
+                for ph in w.phase_plan(rounds, seed).phases]
+        elif sname == "ring_poisson_churn":
+            entry["mean_alive_fraction"] = float(sched.alive_arr().mean())
+            entry["num_segments"] = len(w.segments(rounds, seed))
+        elif sname == "ring_degraded_links":
+            entry["slow_links"] = int((bw < ICI_BW).sum())
+        report["scenarios"][sname] = entry
 
     _dump_json(__file__, "BENCH_topology.json", report)
+    rows.append(f"topology_batched_dispatch,{warm_us:.0f},"
+                f"worlds={len(points)};traces={traces};"
+                f"cold_us={cold_us:.0f}")
     rows.append("topology_scenarios,0.0,"
                 f"stragglers_gain="
                 f"{report['scenarios']['ring_stragglers']['acid_gain']:.3f};"
@@ -484,6 +574,7 @@ _CHAN_BENCH = {
     "stale_prob": 1.0,
     "byz_fracs": [0.0, 0.05, 0.1, 0.2],  # fraction of ring edges Byzantine
     "byz_mode": "scale", "byz_scale": 1e3, "byz_prob": 0.5,
+    "byz_seeds": 3,                    # variance bands over >= 3 seeds
     "robust_clip": 5.0, "robust_rule": "trim",
 }
 
@@ -493,6 +584,13 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
     curves vs staleness horizon and vs the fraction of Byzantine edges on
     the ring, accelerated vs baseline, with the robust-aggregation (norm
     trim) replay next to the non-robust one.  Emits BENCH_channel.json.
+
+    Each family runs as ONE batched replay (DESIGN.md §11): every
+    (point, baseline/accelerated, seed) world shares a single jit trace
+    and device dispatch per replay config — the staleness family is one
+    dispatch, the Byzantine family two (non-robust + robust, the robust
+    knob being static).  Batching makes multi-seed cheap: the Byzantine
+    family carries mean +- std bands over ``byz_seeds`` >= 3 seeds.
 
     The Byzantine family is a garbage-injection adversary (``scale`` mode
     at 1e3, 50% duty cycle — an intermittent compromised link): without
@@ -504,8 +602,8 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
     acceptance bar is >= 0.8) and the divergent non-robust tails.
 
     Every curve embeds its serialized ``World`` spec — channel included —
-    and NaN/Inf tails of diverged non-robust replays are emitted as null
-    plus a ``diverged`` flag.
+    and NaN/Inf values of diverged non-robust replays are emitted as null
+    plus a ``diverged`` flag (the compact/NaN-safe writer contract).
     """
     from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
                             Simulator, World, build_graph,
@@ -517,15 +615,24 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
     b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
     grad_fn = _quad_grad_fn(b, noise=cfg["noise"])
     ring = build_graph("ring", n)
+    p_acid = params_from_graph(ring, accelerated=True)
+    p_base = params_from_graph(ring, accelerated=False)
 
-    def run_curve(world, accel, robust):
-        sim = Simulator(grad_fn, params_from_graph(ring, accelerated=accel),
-                        gamma=cfg["gamma"],
+    compiled = _schedule_compiler(rounds)
+
+    def run_family(worlds_accels_seeds, robust):
+        """Replay a family grid in ONE batched dispatch; returns the (B,
+        rounds) consensus curves + the dispatch wall time."""
+        sim = Simulator(grad_fn, p_acid, gamma=cfg["gamma"],
                         robust_clip=cfg["robust_clip"] if robust else None,
                         robust_rule=cfg["robust_rule"])
-        st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+        scheds = [compiled(w, s) for w, _, s in worlds_accels_seeds]
+        plist = [p_acid if a else p_base for _, a, _ in worlds_accels_seeds]
+        states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+                  for _ in scheds]
         t0 = time.perf_counter()
-        _, trace = sim.run_schedule(st, world.compile(rounds, seed=seed))
+        _, trace = sim.run_worlds(states, scheds, params=plist)
+        jax.block_until_ready(trace)
         us = (time.perf_counter() - t0) * 1e6
         return np.asarray(trace.consensus, np.float64), us
 
@@ -535,27 +642,41 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
             return float("nan")
         return float(np.nanmean(tail))
 
-    def curve_entry(world, robust):
-        base, us_b = run_curve(world, False, robust)
-        acid, us_a = run_curve(world, True, robust)
+    def band(curves):
+        """(mean, std) curves over seeds, NaN-tolerant (a seed that
+        diverged at round r contributes nothing there onward)."""
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            return np.nanmean(curves, axis=0), np.nanstd(curves, axis=0)
+
+    def curve_entry(world, robust, base_curves, acid_curves, seeds_used):
+        base, base_std = band(base_curves)
+        acid, acid_std = band(acid_curves)
         tail_b = nantail(base)
         tail_a = nantail(acid)
-        diverged = not (np.isfinite(base).all() and np.isfinite(acid).all())
+        diverged = not (np.isfinite(base_curves).all()
+                        and np.isfinite(acid_curves).all())
         gain = tail_b / max(tail_a, 1e-12) if np.isfinite(tail_b) \
             and np.isfinite(tail_a) else float("nan")
         entry = {
             "world": world.to_dict(),
             "robust": bool(robust),
+            "seeds": list(seeds_used),
             "consensus_baseline": [_finite_or_none(v) for v in base],
             "consensus_acid": [_finite_or_none(v) for v in acid],
+            "consensus_baseline_std": [_finite_or_none(v)
+                                       for v in base_std],
+            "consensus_acid_std": [_finite_or_none(v) for v in acid_std],
             "tail_consensus_baseline": _finite_or_none(tail_b),
             "tail_consensus_acid": _finite_or_none(tail_a),
             "acid_gain": _finite_or_none(gain),
             "diverged": diverged,
         }
-        entry = _downsample_entry(entry, ("consensus_baseline",
-                                          "consensus_acid"))
-        return entry, us_b + us_a
+        return _downsample_entry(entry, ("consensus_baseline",
+                                         "consensus_acid",
+                                         "consensus_baseline_std",
+                                         "consensus_acid_std"))
 
     def fmt(g):  # sanitized gains are None when a replay diverged
         return "None" if g is None else f"{g:.3f}"
@@ -565,42 +686,77 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
               "staleness": {}, "byzantine": {}, "summary": {}}
 
     # family 1: staleness horizon sweep (all reads stale, uniform in
-    # [1, H]; H=0 is the clean exact-reduction anchor)
+    # [1, H]; H=0 is the clean exact-reduction anchor) — one dispatch
+    stale_worlds = {}
     for h in cfg["horizons"]:
         delay = DelayProcess(horizon=int(h), prob=cfg["stale_prob"])
-        world = World(topology=ring, comms_per_grad=rate,
-                      channel=None if h == 0
-                      else ChannelModel(delay=delay))
-        entry, us = curve_entry(world, robust=False)
+        stale_worlds[h] = World(topology=ring, comms_per_grad=rate,
+                                channel=None if h == 0
+                                else ChannelModel(delay=delay))
+    grid = [(w, a, seed) for w in stale_worlds.values()
+            for a in (False, True)]
+    cons, us_stale = run_family(grid, robust=False)
+    for i, h in enumerate(cfg["horizons"]):
+        entry = curve_entry(stale_worlds[h], False,
+                            cons[2 * i:2 * i + 1], cons[2 * i + 1:2 * i + 2],
+                            [seed])
         report["staleness"][f"h{h}"] = entry
-        rows.append(f"channel_stale_h{h}_n{n},{us:.0f},"
+        rows.append(f"channel_stale_h{h}_n{n},0.0,"
                     f"gain={fmt(entry['acid_gain'])}")
+    rows.append(f"channel_stale_dispatch,{us_stale:.0f},"
+                f"worlds={len(grid)};dispatches=1")
 
     # family 2: Byzantine-edge fraction sweep, non-robust vs robust replay
+    # (two dispatches — robust_clip is a static replay knob), mean +- std
+    # bands over byz_seeds seeds per point
     E = ring.num_edges
+    byz_seeds = [seed + i for i in range(cfg["byz_seeds"])]
+    byz_worlds = {}
     for frac in cfg["byz_fracs"]:
         k = int(round(frac * E))
-        tag = f"f{frac:g}"
         if k == 0:
-            world = World(topology=ring, comms_per_grad=rate)
+            byz_worlds[frac] = World(topology=ring, comms_per_grad=rate)
         else:
             picks = np.linspace(0, E, k, endpoint=False).astype(int)
             adversary = ByzantineEdges(
                 tuple(ring.edges[i] for i in picks), cfg["byz_mode"],
                 scale=cfg["byz_scale"], prob=cfg["byz_prob"])
-            world = World(topology=ring, comms_per_grad=rate,
-                          channel=ChannelModel(adversary=adversary))
-        nonrobust, us1 = curve_entry(world, robust=False)
-        robust, us2 = curve_entry(world, robust=True)
+            byz_worlds[frac] = World(topology=ring, comms_per_grad=rate,
+                                     channel=ChannelModel(
+                                         adversary=adversary))
+    grid = [(w, a, s) for w in byz_worlds.values()
+            for a in (False, True) for s in byz_seeds]
+
+    def rows_for(cons, frac_i, accel):
+        off = frac_i * 2 * len(byz_seeds) + (len(byz_seeds) if accel else 0)
+        return cons[off:off + len(byz_seeds)]
+
+    us_byz = 0.0
+    entries = {}
+    for robust in (False, True):
+        cons, us = run_family(grid, robust=robust)
+        us_byz += us
+        for i, frac in enumerate(cfg["byz_fracs"]):
+            entries[(frac, robust)] = curve_entry(
+                byz_worlds[frac], robust, rows_for(cons, i, False),
+                rows_for(cons, i, True), byz_seeds)
+    for frac in cfg["byz_fracs"]:
+        k = int(round(frac * E))
+        tag = f"f{frac:g}"
+        nonrobust = entries[(frac, False)]
+        robust = entries[(frac, True)]
         report["byzantine"][tag] = {"edge_fraction": k / E,
                                     "num_byzantine_edges": k,
                                     "nonrobust": nonrobust,
                                     "robust": robust}
         gains = (nonrobust["acid_gain"], robust["acid_gain"])
         rows.append(
-            f"channel_byz_{tag}_n{n},{us1 + us2:.0f},"
+            f"channel_byz_{tag}_n{n},0.0,"
             f"gain_nonrobust={gains[0]};gain_robust={gains[1]};"
             f"diverged={nonrobust['diverged']}")
+    rows.append(f"channel_byz_dispatch,{us_byz:.0f},"
+                f"worlds={2 * len(grid)};dispatches=2;"
+                f"seeds={len(byz_seeds)}")
 
     clean_gain = report["byzantine"]["f0"]["nonrobust"]["acid_gain"]
     summary = {"clean_gain": clean_gain}
@@ -624,6 +780,143 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
                 f"retention_at_{headline:g}="
                 f"{retention if retention is None else round(retention, 3)}")
     return rows
+
+
+_SWEEP_BENCH = {
+    "n": 32, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
+    "gamma": 0.05, "noise": 0.05,
+    # B = 16 grid: the two channel axes of BENCH_channel.json crossed
+    "horizons": [0, 2, 4, 8], "stale_prob": 1.0,
+    "byz_fracs": [0.0, 0.05, 0.1, 0.2],
+    "byz_mode": "scale", "byz_scale": 1e3, "byz_prob": 0.5,
+    "robust_clip": 5.0, "robust_rule": "trim",
+}
+
+
+def bench_batched_sweep(seed: int = 0) -> list[str]:
+    """Batched-vs-serial replay of one sweep family — the perf artifact of
+    the many-worlds subsystem (DESIGN.md §11).  Emits BENCH_sweep.json.
+
+    The family is the channel grid: ``horizons`` x ``byz_fracs`` ring
+    worlds (staleness crossed with Byzantine fraction, B = 16 at full
+    size) under the robust accelerated replay (robust keeps every curve
+    finite, so timings measure arithmetic, not NaN propagation).  Serial
+    replays the B points one ``run_schedule`` at a time — every distinct
+    stream shape AND every distinct ring horizon (a static arg of the
+    channel scan) pays its own jit trace; batched replays them as ONE
+    ``run_worlds`` scan at the shared ring depth H = max horizon.  Both
+    are reported cold (first call, compiles included — the number a sweep
+    actually costs) and warm (steady state), with jit trace counts from
+    the cache deltas: the batched family compiles EXACTLY ONCE per family
+    shape.
+    """
+    from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
+                            Simulator, World, build_graph,
+                            params_from_graph)
+
+    cfg = _SWEEP_BENCH
+    n, d, rounds = cfg["n"], cfg["d"], cfg["rounds"]
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    grad_fn = _quad_grad_fn(b, noise=cfg["noise"])
+    ring = build_graph("ring", n)
+    p = params_from_graph(ring, accelerated=True)
+    E = ring.num_edges
+
+    worlds = []
+    for h in cfg["horizons"]:
+        delay = None if h == 0 else DelayProcess(horizon=int(h),
+                                                 prob=cfg["stale_prob"])
+        for frac in cfg["byz_fracs"]:
+            k = int(round(frac * E))
+            adversary = None
+            if k:
+                picks = np.linspace(0, E, k, endpoint=False).astype(int)
+                adversary = ByzantineEdges(
+                    tuple(ring.edges[i] for i in picks), cfg["byz_mode"],
+                    scale=cfg["byz_scale"], prob=cfg["byz_prob"])
+            channel = None if delay is None and adversary is None \
+                else ChannelModel(delay=delay, adversary=adversary)
+            worlds.append(World(topology=ring,
+                                comms_per_grad=cfg["comms_per_grad"],
+                                channel=channel))
+    # every grid point replays under its own rng stream — the multi-seed
+    # variance-band regime the batcher exists for (and what keeps the
+    # serial arm honest: stream shapes are ragged across points, so serial
+    # pays a jit trace per distinct (shape, horizon), not one total)
+    point_seeds = [seed + i for i in range(len(worlds))]
+    scheds = [w.compile(rounds, seed=s)
+              for w, s in zip(worlds, point_seeds)]
+    B = len(scheds)
+
+    sim = Simulator(grad_fn, p, gamma=cfg["gamma"],
+                    robust_clip=cfg["robust_clip"],
+                    robust_rule=cfg["robust_rule"])
+    states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+              for _ in scheds]
+
+    # serial: one replay per point (the pre-batching bench structure);
+    # trace count = distinct compiled shapes across the grid
+    serial_traces = Simulator._run_channel_jit._cache_size()
+
+    def serial():
+        out = None
+        for st, sch in zip(states, scheds):
+            _, tr = sim.run_schedule(st, sch)
+            out = tr
+        jax.block_until_ready(out)
+
+    t0 = time.perf_counter()
+    serial()
+    serial_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    serial()
+    serial_warm = time.perf_counter() - t0
+    serial_traces = Simulator._run_channel_jit._cache_size() - serial_traces
+
+    # batched: the whole grid in one scan
+    batched_traces = Simulator._run_worlds_channel_jit._cache_size()
+
+    def batched():
+        _, tr = sim.run_worlds(states, scheds)
+        jax.block_until_ready(tr)
+
+    t0 = time.perf_counter()
+    batched()
+    batched_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batched()
+    batched_warm = time.perf_counter() - t0
+    batched_traces = (Simulator._run_worlds_channel_jit._cache_size()
+                      - batched_traces)
+
+    report = {
+        "config": dict(cfg), "seed": seed,
+        "family": "channel_grid_horizons_x_byz_fracs",
+        "sweep": {"worlds": [w.to_dict() for w in worlds],
+                  "point_seeds": point_seeds},
+        "num_worlds": B,
+        "serial": {
+            "wall_s_cold": round(serial_cold, 4),
+            "wall_s_warm": round(serial_warm, 4),
+            "jit_traces": serial_traces,
+        },
+        "batched": {
+            "wall_s_cold": round(batched_cold, 4),
+            "wall_s_warm": round(batched_warm, 4),
+            "jit_traces": batched_traces,
+        },
+        "speedup_cold": round(serial_cold / batched_cold, 3),
+        "speedup_warm": round(serial_warm / batched_warm, 3),
+    }
+    _dump_json(__file__, "BENCH_sweep.json", report)
+    return [
+        f"sweep_serial_B{B},{serial_warm * 1e6:.0f},"
+        f"cold_us={serial_cold * 1e6:.0f};traces={serial_traces}",
+        f"sweep_batched_B{B},{batched_warm * 1e6:.0f},"
+        f"cold_us={batched_cold * 1e6:.0f};traces={batched_traces}",
+        f"sweep_speedup,0.0,cold={report['speedup_cold']:.2f}x;"
+        f"warm={report['speedup_warm']:.2f}x",
+    ]
 
 
 def bench_roofline_summary(seed: int = 0) -> list[str]:
@@ -659,6 +952,7 @@ BENCHES = {
     "gossip": bench_gossip_engine,
     "topology": bench_topology_sweep,
     "channel": bench_channel_sweep,
+    "sweep": bench_batched_sweep,
     "roofline": bench_roofline_summary,
 }
 
@@ -675,12 +969,16 @@ def main() -> None:
                          "channel points) — for the scenario-smoke jobs")
     args = ap.parse_args()
     if args.small:
-        _TOPO_BENCH.update(n=16, rounds=60,
+        _TOPO_BENCH.update(n=16, rounds=60, seeds=2,
                            families=["ring", "complete"])
         # cap the channel family too: 2 horizons + 2 Byzantine fractions at
         # n=16/60 rounds keeps the CI smoke step inside its current budget
+        # (byz_seeds stays 3 — the variance-band contract)
         _CHAN_BENCH.update(n=16, rounds=60, horizons=[0, 2],
                            byz_fracs=[0.0, 0.125])
+        # B = 8 batched-vs-serial grid for the CI perf gate
+        _SWEEP_BENCH.update(n=16, rounds=60, horizons=[0, 2, 4, 8],
+                            byz_fracs=[0.0, 0.125])
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

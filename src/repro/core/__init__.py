@@ -4,27 +4,31 @@ from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
                      mixing_coeff, p2p_event, params_from_graph, worker_mean)
 from .channel import ByzantineEdges, ChannelModel, DelayProcess
 from .engine import FlatGossipEngine, mix_flat
-from .events import (CoalescedSchedule, EventStream, Schedule,
-                     coalesce_schedule, coalesced_stream, concat_schedules,
+from .events import (BatchedSchedule, BatchedStream, CoalescedSchedule,
+                     EventStream, Schedule, coalesce_schedule,
+                     coalesced_stream, concat_schedules,
                      empirical_laplacian, make_schedule,
-                     make_topology_schedule)
+                     make_topology_schedule, stack_schedules, stack_streams)
 from .flatbuf import FlatLayout, LeafSpec
 from .gossip import GossipMixer, matching_bank, phase_banks, world_banks
 from .graphs import (Graph, TopologyPhase, TopologySchedule, build_graph,
                      complete_graph, exponential_graph, hypercube_graph,
                      ring_graph, star_graph, torus_graph)
 from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
-from .world import ChurnProcess, LinkModel, PhaseSwitch, WorkerModel, World
+from .world import (ChurnProcess, LinkModel, PhaseSwitch, WorkerModel,
+                    World, WorldSweep)
 
 __all__ = [
     "ByzantineEdges", "ChannelModel", "DelayProcess",
     "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
+    "WorldSweep",
     "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",
     "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
-    "CoalescedSchedule", "EventStream", "Schedule", "coalesce_schedule",
-    "coalesced_stream", "concat_schedules", "empirical_laplacian",
-    "make_schedule", "make_topology_schedule",
+    "BatchedSchedule", "BatchedStream", "CoalescedSchedule", "EventStream",
+    "Schedule", "coalesce_schedule", "coalesced_stream", "concat_schedules",
+    "empirical_laplacian", "make_schedule", "make_topology_schedule",
+    "stack_schedules", "stack_streams",
     "FlatGossipEngine", "mix_flat", "FlatLayout", "LeafSpec",
     "GossipMixer", "matching_bank", "phase_banks", "world_banks",
     "Graph", "TopologyPhase", "TopologySchedule", "build_graph",

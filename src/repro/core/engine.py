@@ -33,9 +33,12 @@ import jax.numpy as jnp
 
 from ..kernels.a2cid2_mixing.ops import (channel_event_local,
                                          channel_event_stacked,
-                                         gossip_event_stacked, p2p_mix_event)
+                                         channel_event_worlds,
+                                         gossip_event_stacked,
+                                         gossip_event_worlds, p2p_mix_event)
 from .a2cid2 import A2CiD2Params, apply_mixing
-from .flatbuf import FlatLayout, ring_init, ring_push, ring_read
+from .flatbuf import (FlatLayout, ring_init, ring_init_worlds, ring_push,
+                      ring_push_worlds, ring_read, ring_read_worlds)
 
 PyTree = Any
 
@@ -46,6 +49,21 @@ def mix_flat(bx: jax.Array, bxt: jax.Array, eta: float, dt: jax.Array
     after the trailing-axis insert, or scalar against (D,)).  A flat buffer
     is a single-leaf pytree, so this is exactly ``a2cid2.apply_mixing``."""
     return apply_mixing(bx, bxt, eta, dt)
+
+
+def mix_worlds(bx: jax.Array, bxt: jax.Array, eta: jax.Array,
+               dt: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """World-batched mixing pass: (B, W, D) buffers, (B,) per-world eta,
+    (B, W) dt.  The dynamic-eta twin of ``mix_flat`` — it cannot take the
+    eta == 0 shortcut (eta is traced), so baseline worlds compute
+    ``a + 0 * d`` explicitly; with d finite this is exact up to the sign
+    of zero, the same contract as the fused kernels' mixing tail."""
+    eta32 = jnp.asarray(eta, jnp.float32)[:, None]
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta32
+                              * jnp.asarray(dt, jnp.float32)))
+         ).astype(bx.dtype)[:, :, None]
+    d = bxt - bx
+    return bx + c * d, bxt - c * d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,10 +101,12 @@ class FlatGossipEngine:
 
     @classmethod
     def for_pytree(cls, tree: PyTree, params: A2CiD2Params, *,
-                   stacked: bool = True, backend: str = "auto",
+                   stacked: bool = True, worlds: bool = False,
+                   backend: str = "auto",
                    robust_clip: float | None = None,
                    robust_rule: str = "trim") -> "FlatGossipEngine":
-        return cls(FlatLayout.from_pytree(tree, stacked=stacked),
+        return cls(FlatLayout.from_pytree(tree, stacked=stacked,
+                                          worlds=worlds),
                    params, backend, robust_clip, robust_rule)
 
     # ------------------------------------------------------------- plumbing
@@ -101,6 +121,12 @@ class FlatGossipEngine:
 
     def unpack_local(self, vec: jax.Array) -> PyTree:
         return self.layout.unpack_local(vec)
+
+    def pack_worlds(self, tree: PyTree) -> jax.Array:
+        return self.layout.pack_worlds(tree)
+
+    def unpack_worlds(self, buf: jax.Array) -> PyTree:
+        return self.layout.unpack_worlds(buf)
 
     # -------------------------------------------------------------- passes
     def mix(self, bx: jax.Array, bxt: jax.Array, dt) -> tuple[jax.Array,
@@ -123,6 +149,56 @@ class FlatGossipEngine:
         p = self.params
         return p2p_mix_event(bx, bxt, xp, dt_next, eta=p.eta, alpha=p.alpha,
                              alpha_t=p.alpha_tilde, backend=self.backend)
+
+    # ---------------------------------------------- world-batched passes
+    # The many-worlds replay (DESIGN.md §11) runs B worlds on (B, W, D)
+    # buffers; the A2CiD2 dynamics are PER-WORLD (B,) f32 arrays ``pw =
+    # (eta, alpha, alpha_t)`` passed dynamically, so one trace serves a
+    # whole sweep family (baseline + accelerated + every grid point).
+
+    def mix_batch(self, bx: jax.Array, bxt: jax.Array, dt, eta: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+        """World-batched standalone mixing sweep (batched prologue)."""
+        return mix_worlds(bx, bxt, eta, dt)
+
+    def batch_worlds(self, bx: jax.Array, bxt: jax.Array,
+                     partner: jax.Array, dt_next: jax.Array, pw
+                     ) -> tuple[jax.Array, jax.Array]:
+        """One fused group [p2p, mix] on (B, W, D) buffers; ``pw`` the
+        per-world (eta, alpha, alpha_t) arrays."""
+        eta, alpha, alpha_t = pw
+        return gossip_event_worlds(bx, bxt, partner, dt_next, eta, alpha,
+                                   alpha_t, backend=self.backend)
+
+    def channel_batch_worlds(self, bx: jax.Array, bxt: jax.Array,
+                             xp: jax.Array, corrupt: jax.Array,
+                             dt_next: jax.Array, pw
+                             ) -> tuple[jax.Array, jax.Array]:
+        """World-batched channel group: pre-gathered (B, W, D) partner
+        values, (B, W) corrupt offsets, per-world dynamics; the engine's
+        robust rule derives the (B, W) mscale in one fused reduce."""
+        eta, alpha, alpha_t = pw
+        mscale = self._mscale(bx, xp, corrupt, axes=2)
+        return channel_event_worlds(bx, bxt, xp, corrupt, mscale, dt_next,
+                                    eta, alpha, alpha_t,
+                                    clip=self._coord_clip(),
+                                    backend=self.backend)
+
+    def ring_init_worlds(self, bx: jax.Array, horizon: int) -> jax.Array:
+        """(B, H, W, D) per-world snapshot rings seeded with ``bx``."""
+        return ring_init_worlds(bx, horizon)
+
+    def ring_push_worlds(self, ring: jax.Array, bx: jax.Array, pos
+                         ) -> jax.Array:
+        """Rotate every world's ring at the (shared) slot ``pos``."""
+        return ring_push_worlds(ring, bx, pos)
+
+    def partner_values_worlds(self, ring: jax.Array, bx: jax.Array,
+                              partner: jax.Array, src_slot: jax.Array
+                              ) -> jax.Array:
+        """Per-world partner reads: fresh rows where src_slot == H, ring
+        snapshots otherwise ((B, W) host-resolved indices)."""
+        return ring_read_worlds(ring, bx, partner, src_slot)
 
     # ------------------------------------------- unreliable-channel passes
     def _coord_clip(self) -> float | None:

@@ -579,13 +579,20 @@ class EventStream:
         return self.partners.shape[0]
 
 
-def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
+def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray,
+                     round_batches: np.ndarray | None = None) -> EventStream:
     """Flatten a coalesced schedule into an EventStream given start clocks.
 
     Heterogeneous worlds ride along as schedule data: a detached worker's
     clock never advances (zero dt segments — its row is a fixed point of the
     replay), a straggler's masked gradient tick still advances its clock and
     mixing horizon but contributes grad_scale 0.
+
+    ``round_batches`` (R,) pads round r to that many comm steps with
+    *identity groups* — self-partner p2p, zero-dt mixing, zero extras — an
+    exact no-op of the replay.  ``stack_streams`` uses it to align the
+    per-round step structure of B ragged worlds so their gradient ticks land
+    on the SAME scan step (the batched replay's one shared ``lax.cond``).
     """
     R, B, n = cs.partners.shape
     idx = np.arange(n)
@@ -612,7 +619,9 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
             ext_rows[k].append(ext[k])
 
     ones = np.ones(n, np.float32)
+    idt = idx.astype(np.int32)
     for r in range(R):
+        emitted = 0
         for b in range(B):
             if not cs.batch_active[r, b]:
                 continue
@@ -622,6 +631,15 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
             tl[inv] = cs.wtimes[r, b, inv]
             emit(cs.partners[r, b].astype(np.int32), delta, False, ones,
                  {k: a[r, b] for k, a in cs_ext.items()})
+            emitted += 1
+        if round_batches is not None:
+            target = int(round_batches[r])
+            if target < emitted:
+                raise ValueError(
+                    f"round_batches[{r}] = {target} is below this "
+                    f"schedule's {emitted} active batches")
+            for _ in range(target - emitted):
+                emit(idt, np.zeros(n, np.float32), False, ones, ext_zero)
         adv = alive[r]
         delta = np.where(adv, cs.grad_times[r] - tl, 0.0).astype(np.float32)
         tl = np.where(adv, cs.grad_times[r], tl).astype(np.float32)
@@ -639,6 +657,225 @@ def coalesced_stream(cs: CoalescedSchedule, t0: np.ndarray) -> EventStream:
         extras={k: np.stack(v) for k, v in ext_rows.items()}
         if ext_rows else None,
     )
+
+
+# ---------------------------------------------------------------------------
+# Many-worlds batching (batched replay subsystem, see DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSchedule:
+    """B per-event schedules padded to one (R, B, K, n) block.
+
+    The batch axis sits directly after the scan (round) axis so a
+    ``lax.scan`` over rounds hands each step a (B, ...) slice that a
+    ``jax.vmap`` over worlds consumes.  Ragged per-round event counts cost
+    masked identity padding (exactly the K-padding ``concat_schedules``
+    uses), never a branch; ``grad_scale``/``alive``/``extras`` are
+    materialized so the batched reference replay is branch-free.
+    """
+
+    partners: np.ndarray     # (R, B, K, n) int32
+    event_times: np.ndarray  # (R, B, K) f32
+    event_mask: np.ndarray   # (R, B, K) bool
+    grad_times: np.ndarray   # (R, B, n) f32
+    grad_scale: np.ndarray   # (R, B, n) f32
+    alive: np.ndarray        # (R, B, n) bool
+    extras: dict[str, np.ndarray] | None = None  # each (R, B, K, n)
+
+    @property
+    def rounds(self) -> int:
+        return self.partners.shape[0]
+
+    @property
+    def batch(self) -> int:
+        return self.partners.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.partners.shape[3]
+
+    def extras_dict(self) -> dict[str, np.ndarray]:
+        return dict(self.extras) if self.extras else {}
+
+
+def _pad_events_k(partners, event_times, event_mask, kmax: int):
+    """Pad the K axis with masked identity slots (times repeat the row's
+    last value so dt segments stay mask-resolved) — concat_schedules'
+    padding, shared by the batch stacker.  A K = 0 schedule (unreachable
+    via the samplers, which floor kmax at 1, but legal as hand-built
+    data) pads with zero times: every slot is masked, so the values are
+    never read."""
+    R, K, n = partners.shape
+    if K == kmax:
+        return partners, event_times, event_mask
+    pad_p = np.tile(np.arange(n, dtype=np.int32), (R, kmax - K, 1))
+    pad_t = np.repeat(event_times[:, -1:], kmax - K, axis=1) if K else \
+        np.zeros((R, kmax), event_times.dtype)
+    return (np.concatenate([partners, pad_p], axis=1),
+            np.concatenate([event_times, pad_t], axis=1),
+            np.concatenate([event_mask, np.zeros((R, kmax - K), bool)],
+                           axis=1))
+
+
+def _union_keys(extra_dicts: list[dict]) -> list[str]:
+    keys: list[str] = []
+    for d in extra_dicts:
+        keys += [k for k in d if k not in keys]
+    return keys
+
+
+def stack_schedules(schedules: list[Schedule]) -> BatchedSchedule:
+    """Stack B independent worlds' schedules into one BatchedSchedule.
+
+    All schedules must share (rounds, n) — the sweep grid's common frame;
+    ragged event counts (K) are padded to the widest world with masked
+    identity slots.  Extras are unioned across worlds: a world without a
+    key contributes zeros, which every consumer reads as "no channel
+    effect" (fresh, honest).
+    """
+    if not schedules:
+        raise ValueError("need at least one schedule")
+    R, n = schedules[0].rounds, schedules[0].n
+    for i, s in enumerate(schedules):
+        if s.rounds != R or s.n != n:
+            raise ValueError(
+                f"schedules[{i}] has (rounds, n) = ({s.rounds}, {s.n}); a "
+                f"batch must share one frame, expected ({R}, {n})")
+    kmax = max(s.partners.shape[1] for s in schedules)
+    parts, times, masks = [], [], []
+    for s in schedules:
+        p, t, m = _pad_events_k(s.partners, s.event_times, s.event_mask,
+                                kmax)
+        parts.append(p)
+        times.append(t)
+        masks.append(m)
+    ex_dicts = [s.extras_dict() for s in schedules]
+    keys = _union_keys(ex_dicts)
+    extras = None
+    if keys:
+        extras = {}
+        for k in keys:
+            dtype = next(d[k].dtype for d in ex_dicts if k in d)
+            chunks = []
+            for d in ex_dicts:
+                a = d.get(k)
+                if a is None:
+                    a = np.zeros((R, kmax, n), dtype)
+                elif a.shape[1] < kmax:
+                    a = np.concatenate(
+                        [a, np.zeros((R, kmax - a.shape[1], n), a.dtype)],
+                        axis=1)
+                chunks.append(a)
+            extras[k] = np.stack(chunks, axis=1)
+    return BatchedSchedule(
+        partners=np.stack(parts, axis=1),
+        event_times=np.stack(times, axis=1).astype(np.float32),
+        event_mask=np.stack(masks, axis=1),
+        grad_times=np.stack([s.grad_times for s in schedules],
+                            axis=1).astype(np.float32),
+        grad_scale=np.stack([s.grad_scale() for s in schedules], axis=1),
+        alive=np.stack([s.alive_arr() for s in schedules], axis=1),
+        extras=extras)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedStream:
+    """B event streams aligned to ONE shared scan skeleton.
+
+    ``stack_streams`` pads every round of every world to the per-round max
+    batch count across the batch (identity groups), so each world's round-r
+    gradient tick lands on the SAME step index: ``is_grad`` and
+    ``grad_pos`` are shared (S,)/(R,) vectors and the batched engine scan
+    keeps the single ``lax.cond`` step structure of the serial replay —
+    the batch axis never enters control flow.
+
+    Shapes (S = shared steps, B = worlds, n = workers, R = rounds):
+      prologue   (B, n) f32
+      partners   (S, B, n) int32
+      dt_next    (S, B, n) f32
+      is_grad    (S,) bool   — shared across the batch by construction
+      grad_scale (S, B, n) f32
+      grad_pos   (R,) int32  — shared
+      t_final    (B, n) f32
+      extras     dict of named (S, B, n) arrays (union over worlds;
+                 missing keys are zero = fresh/honest)
+    """
+
+    prologue: np.ndarray
+    partners: np.ndarray
+    dt_next: np.ndarray
+    is_grad: np.ndarray
+    grad_scale: np.ndarray
+    grad_pos: np.ndarray
+    t_final: np.ndarray
+    extras: dict[str, np.ndarray] | None = None
+
+    @property
+    def steps(self) -> int:
+        return self.partners.shape[0]
+
+    @property
+    def batch(self) -> int:
+        return self.partners.shape[1]
+
+    def extras_dict(self) -> dict[str, np.ndarray]:
+        return dict(self.extras) if self.extras else {}
+
+
+def stack_streams(cs_list: list[CoalescedSchedule],
+                  t0: np.ndarray) -> BatchedStream:
+    """Compile B coalesced schedules + start clocks into one BatchedStream.
+
+    Alignment: round r contributes ``max_b active_batches_b(r)`` comm steps
+    for EVERY world — worlds with fewer real batches that round replay
+    identity groups (self-partner p2p, zero-dt mix, zero extras), which
+    both kernel backends reduce to exact no-ops.  Padding therefore costs
+    per-round raggedness, not the global max, and the gradient ticks of all
+    worlds coincide step-for-step.
+    """
+    if not cs_list:
+        raise ValueError("need at least one coalesced schedule")
+    R, n = cs_list[0].rounds, cs_list[0].n
+    for i, cs in enumerate(cs_list):
+        if cs.rounds != R or cs.n != n:
+            raise ValueError(
+                f"coalesced schedules[{i}] has (rounds, n) = "
+                f"({cs.rounds}, {cs.n}); a batch must share one frame, "
+                f"expected ({R}, {n})")
+    t0 = np.asarray(t0, np.float32)
+    if t0.shape != (len(cs_list), n):
+        raise ValueError(f"t0 must be (B, n) = ({len(cs_list)}, {n}) start "
+                         f"clocks, got {t0.shape}")
+    round_batches = np.stack(
+        [cs.batch_active.sum(axis=1) for cs in cs_list]).max(axis=0)
+    streams = [coalesced_stream(cs, t0[i], round_batches=round_batches)
+               for i, cs in enumerate(cs_list)]
+    s0 = streams[0]
+    for st in streams[1:]:
+        # same rounds + same per-round batch counts => identical skeleton
+        assert st.steps == s0.steps
+        assert np.array_equal(st.is_grad, s0.is_grad)
+        assert np.array_equal(st.grad_pos, s0.grad_pos)
+    ex_dicts = [st.extras or {} for st in streams]
+    keys = _union_keys(ex_dicts)
+    extras = None
+    if keys:
+        extras = {}
+        for k in keys:
+            dtype = next(d[k].dtype for d in ex_dicts if k in d)
+            extras[k] = np.stack(
+                [d.get(k, np.zeros((s0.steps, n), dtype))
+                 for d in ex_dicts], axis=1)
+    return BatchedStream(
+        prologue=np.stack([st.prologue for st in streams]),
+        partners=np.stack([st.partners for st in streams], axis=1),
+        dt_next=np.stack([st.dt_next for st in streams], axis=1),
+        is_grad=s0.is_grad,
+        grad_scale=np.stack([st.grad_scale for st in streams], axis=1),
+        grad_pos=s0.grad_pos,
+        t_final=np.stack([st.t_final for st in streams]),
+        extras=extras)
 
 
 def empirical_laplacian(schedule: Schedule, rounds: int | None = None) -> np.ndarray:

@@ -8,7 +8,11 @@ single fused sweep:
 
   * stacked form  — leaves (W, *shape) -> one (W, D) buffer, worker-major;
   * local form    — leaves (*shape)    -> one (D,) vector (the shard_map /
-    per-worker SPMD path).
+    per-worker SPMD path);
+  * worlds form   — leaves (B, W, *shape) -> one (B, W, D) buffer: B
+    independent worlds' replicas stacked on a leading batch axis (the
+    many-worlds batched replay, DESIGN.md §11).  The layout spec is
+    identical to the stacked form — the batch axis rides above it.
 
 D is the sum of leaf sizes rounded up to a multiple of ``lane`` (128, the TPU
 lane width) so the buffer tiles cleanly into Pallas blocks; padding columns
@@ -84,11 +88,14 @@ class FlatLayout:
     # ------------------------------------------------------------ builders
     @classmethod
     def from_pytree(cls, tree: PyTree, *, stacked: bool = False,
-                    buf_dtype=None, lane: int = LANE) -> "FlatLayout":
+                    worlds: bool = False, buf_dtype=None,
+                    lane: int = LANE) -> "FlatLayout":
         """Build a layout from a template pytree (shapes/dtypes only — works
         on concrete arrays, ShapeDtypeStructs, and tracers alike).
 
-        stacked=True strips a leading worker axis from every leaf.
+        stacked=True strips a leading worker axis from every leaf;
+        worlds=True strips a leading (batch, worker) axis pair (implies
+        stacked — the per-replica layout is the same either way).
         buf_dtype=None infers the narrowest exact buffer dtype (see module
         docstring); passing one explicitly still validates exactness.
         """
@@ -96,10 +103,11 @@ class FlatLayout:
         if buf_dtype is None:
             buf_dtype = _infer_buf_dtype({jnp.dtype(a.dtype) for a in leaves})
         buf_dtype = jnp.dtype(buf_dtype)
+        lead = 2 if worlds else (1 if stacked else 0)
         specs = []
         off = 0
         for leaf in leaves:
-            shape = tuple(leaf.shape[1:] if stacked else leaf.shape)
+            shape = tuple(leaf.shape[lead:])
             dtype = jnp.dtype(leaf.dtype)
             if dtype not in _EXACT_EMBED.get(buf_dtype, ()):
                 raise TypeError(
@@ -150,6 +158,27 @@ class FlatLayout:
         ]
         return self.treedef.unflatten(leaves)
 
+    def pack_worlds(self, tree: PyTree) -> jax.Array:
+        """World-batched pytree (leaves (B, W, *shape)) -> (B, W, D)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        b, w = leaves[0].shape[:2]
+        cols = [leaf.reshape(b, w, spec.size).astype(self.buf_dtype)
+                for leaf, spec in zip(leaves, self.specs)]
+        if self.d > self.d_real:
+            cols.append(jnp.zeros((b, w, self.d - self.d_real),
+                                  self.buf_dtype))
+        return jnp.concatenate(cols, axis=2)
+
+    def unpack_worlds(self, buf: jax.Array) -> PyTree:
+        """(B, W, D) buffer -> world-batched pytree."""
+        b, w = buf.shape[:2]
+        leaves = [
+            buf[:, :, s.offset:s.offset + s.size]
+            .astype(s.dtype).reshape((b, w) + s.shape)
+            for s in self.specs
+        ]
+        return self.treedef.unflatten(leaves)
+
 
 # ---------------------------------------------------------------------------
 # snapshot ring buffer (unreliable-channel stale reads; DESIGN.md §10)
@@ -188,3 +217,30 @@ def ring_read(ring: jax.Array, buf: jax.Array, partner: jax.Array,
     fresh = jnp.take(buf, partner, axis=0)
     stale = ring[jnp.minimum(src_slot, h - 1), partner]
     return jnp.where((src_slot < h)[:, None], stale, fresh)
+
+
+# -- world-batched ring (B, H, W, D): one snapshot ring per world in the
+# batched replay.  Slot/round alignment is shared across the batch (the
+# batched stream aligns gradient ticks), so push positions are one scalar.
+
+def ring_init_worlds(buf: jax.Array, horizon: int) -> jax.Array:
+    """(B, H, W, D) ring seeded with each world's start buffer."""
+    if horizon <= 0:
+        raise ValueError(f"ring_init_worlds needs horizon >= 1, "
+                         f"got {horizon}")
+    return jnp.broadcast_to(buf[:, None],
+                            (buf.shape[0], horizon) + buf.shape[1:])
+
+
+def ring_push_worlds(ring: jax.Array, buf: jax.Array, pos) -> jax.Array:
+    """Overwrite slot ``pos`` (shared scalar, = round mod H) in every
+    world's ring with that world's (W, D) buffer."""
+    return ring.at[:, pos].set(buf)
+
+
+def ring_read_worlds(ring: jax.Array, buf: jax.Array, partner: jax.Array,
+                     src_slot: jax.Array) -> jax.Array:
+    """(B, W, D) partner values under staleness, per world — the batched
+    twin of ``ring_read`` (vmapped over the leading world axis; ``partner``
+    and ``src_slot`` are (B, W))."""
+    return jax.vmap(ring_read)(ring, buf, partner, src_slot)

@@ -32,6 +32,21 @@ of the last H flat states through the scan (stale partner reads), apply
 per-event corruption multipliers, and optionally trim/clip the p2p delta
 (``robust_clip``/``robust_rule``).  Channel-free schedules run the
 original paths bit-for-bit.
+
+All three flavors (plain reference, coalesced engine, channel) also exist
+WORLD-BATCHED (DESIGN.md §11): ``run_worlds`` replays B independent
+worlds in ONE compiled ``lax.scan`` over (B, W, D) buffers / (B, H, W, D)
+snapshot rings, with per-world A2CiD2 dynamics as (B,) arrays so an
+entire sweep family — baseline and accelerated, every grid point, every
+seed — is one trace and one device dispatch.  Batched replay is pinned
+equal to the serial per-world replay (tests/test_batched_replay.py).
+
+``Simulator(donate=True)`` opts the scan jits into buffer donation
+(``donate_argnums`` on the state), letting XLA reuse the input state's
+memory for the scan carries instead of round-tripping through fresh
+allocations.  Donation consumes the passed state — callers must thread
+the returned one — so it is opt-in; the default keeps states reusable
+(the equivalence suites replay one state down several paths).
 """
 from __future__ import annotations
 
@@ -49,6 +64,15 @@ from .channel import CORRUPT_KEY, STALE_KEY
 from .engine import FlatGossipEngine
 from .events import Schedule, coalesce_schedule
 from .flatbuf import FlatLayout
+
+
+def _jit_pair(impl, *, static=(0,), donate=(1,)):
+    """(plain, donating) jit twins of one scan impl: the donating variant
+    hands the state argument's buffers to XLA (``donate_argnums``) so the
+    scan carries alias them in place; the plain one leaves inputs alive."""
+    return (partial(jax.jit, static_argnums=static)(impl),
+            partial(jax.jit, static_argnums=static,
+                    donate_argnums=donate)(impl))
 
 PyTree = Any
 # grad_fn(params_i, key, worker_id) -> (loss_i, grads_i) for ONE worker;
@@ -83,6 +107,10 @@ class Simulator:
     # norm tau, ClippedGossip-style), or 'coord' (per-coordinate clip).
     robust_clip: float | None = None
     robust_rule: str = "trim"
+    # opt-in buffer donation for every scan jit (see module docstring):
+    # the replay consumes the passed state, so callers must thread the
+    # returned one instead of reusing the input
+    donate: bool = False
 
     def __post_init__(self):
         if self.robust_rule not in ("trim", "clip", "coord"):
@@ -92,7 +120,12 @@ class Simulator:
     def init(self, x0: PyTree, n: int, key: jax.Array) -> SimState:
         """All workers start at consensus (paper: one all-reduce before training)."""
         stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), x0)
-        return SimState(x=stack, x_tilde=stack, t_last=jnp.zeros((n,)), key=key)
+        # donation hands each argument buffer to XLA exactly once, so the
+        # two state buffers must not alias (f(donate(a), donate(a)) is an
+        # error); without donation they can share until first divergence
+        x_tilde = jax.tree.map(jnp.copy, stack) if self.donate else stack
+        return SimState(x=stack, x_tilde=x_tilde, t_last=jnp.zeros((n,)),
+                        key=key)
 
     # ------------------------------------------------------------- one round
     def _comm_event(self, carry, event):
@@ -197,41 +230,13 @@ class Simulator:
         """p2p update from (possibly corrupted/stale) received values, with
         the optional robust rule on the m-term (norm trim/clip across the
         whole replica, matching the engine's flat-row norm; or the
-        per-coordinate clip)."""
-        clip = self.robust_clip
-        rule = self.robust_rule
-        flat_x, treedef = jax.tree_util.tree_flatten(x)
-        flat_t = treedef.flatten_up_to(x_tilde)
-        flat_p = treedef.flatten_up_to(xp)
-
-        def cadv_for(a):
-            c = (1.0 + corrupt).astype(a.dtype)
-            return jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
-
-        mscale = None
-        if clip is not None and rule != "coord":
-            nrm2 = sum(
-                jnp.sum(((a - cadv_for(a) * b).astype(jnp.float32)) ** 2,
-                        axis=tuple(range(1, a.ndim)))
-                for a, b in zip(flat_x, flat_p))
-            nrm = jnp.sqrt(nrm2)
-            if rule == "trim":
-                mscale = (nrm <= clip).astype(jnp.float32)
-            else:
-                mscale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-30))
-
-        def upd(a, at, b):
-            m = a - cadv_for(a) * b
-            if mscale is not None:
-                s = mscale.astype(a.dtype)
-                m = m * jnp.reshape(s, s.shape + (1,) * (a.ndim - 1))
-            elif clip is not None:
-                m = jnp.clip(m, -clip, clip)
-            return a - self.params.alpha * m, at - self.params.alpha_tilde * m
-
-        out = [upd(a, at, b) for a, at, b in zip(flat_x, flat_t, flat_p)]
-        return (treedef.unflatten([o[0] for o in out]),
-                treedef.unflatten([o[1] for o in out]))
+        per-coordinate clip).  Delegates to the dynamic-params twin with
+        the static alphas lifted to traced constants — ``jnp.asarray`` of
+        a Python float lands on the same bits a weak scalar would (full
+        precision under x64, f32 otherwise)."""
+        return self._channel_p2p_dyn(x, x_tilde, xp, corrupt,
+                                     jnp.asarray(self.params.alpha),
+                                     jnp.asarray(self.params.alpha_tilde))
 
     def _comm_event_channel(self, horizon: int, ring, carry, event):
         x, x_tilde, t_last = carry
@@ -287,10 +292,9 @@ class Simulator:
         }
         return (x, x_tilde, t_last, ring, key), metrics
 
-    @partial(jax.jit, static_argnums=(0, 3))
-    def _run_channel_reference_jit(self, state: SimState, schedule_arrays,
-                                   horizon: int
-                                   ) -> tuple[SimState, SimTrace]:
+    def _run_channel_reference_impl(self, state: SimState, schedule_arrays,
+                                    horizon: int
+                                    ) -> tuple[SimState, SimTrace]:
         ring = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), state.x) \
             if horizon else None
@@ -301,6 +305,9 @@ class Simulator:
         return SimState(x, x_tilde, t_last, key), \
             SimTrace(metrics["loss"], metrics["consensus"],
                      metrics["mean_param_norm"])
+
+    _run_channel_reference_jit, _run_channel_reference_dnt = _jit_pair(
+        _run_channel_reference_impl, static=(0, 3))
 
     def _channel_step(self, engine: FlatGossipEngine, n: int, horizon: int,
                       carry, xs):
@@ -339,9 +346,8 @@ class Simulator:
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
-    @partial(jax.jit, static_argnums=(0, 3))
-    def _run_channel_jit(self, state: SimState, stream_arrays, horizon: int
-                         ) -> tuple[SimState, SimTrace]:
+    def _run_channel_impl(self, state: SimState, stream_arrays, horizon: int
+                          ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final, corrupt, src_slot, ring_pos) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
@@ -363,6 +369,9 @@ class Simulator:
         final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
         return final, SimTrace(loss[grad_pos], consensus[grad_pos],
                                mean_norm[grad_pos])
+
+    _run_channel_jit, _run_channel_dnt = _jit_pair(
+        _run_channel_impl, static=(0, 3))
 
     @staticmethod
     def _channel_extras(extras: dict, shape, horizon_from: str = STALE_KEY):
@@ -426,16 +435,22 @@ class Simulator:
                 jnp.asarray(ring_pos)), horizon
 
     # ------------------------------------------------------------------ run
-    @partial(jax.jit, static_argnums=0)
-    def run(self, state: SimState, schedule_arrays) -> tuple[SimState, SimTrace]:
-        """Per-event reference replay (unfused, sweeps masked slots too)."""
+    def _run_reference_impl(self, state: SimState, schedule_arrays
+                            ) -> tuple[SimState, SimTrace]:
         final, metrics = jax.lax.scan(self._round, state, schedule_arrays)
         return final, SimTrace(metrics["loss"], metrics["consensus"],
                                metrics["mean_param_norm"])
 
-    @partial(jax.jit, static_argnums=0)
-    def _run_coalesced_jit(self, state: SimState, stream_arrays
-                           ) -> tuple[SimState, SimTrace]:
+    _run_reference_jit, _run_reference_dnt = _jit_pair(_run_reference_impl)
+
+    def run(self, state: SimState, schedule_arrays) -> tuple[SimState, SimTrace]:
+        """Per-event reference replay (unfused, sweeps masked slots too)."""
+        fn = self._run_reference_dnt if self.donate \
+            else self._run_reference_jit
+        return fn(state, schedule_arrays)
+
+    def _run_coalesced_impl(self, state: SimState, stream_arrays
+                            ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
@@ -453,6 +468,8 @@ class Simulator:
         # compact per-step metrics back to per-round (gradient-tick rows)
         return final, SimTrace(loss[grad_pos], consensus[grad_pos],
                                mean_norm[grad_pos])
+
+    _run_coalesced_jit, _run_coalesced_dnt = _jit_pair(_run_coalesced_impl)
 
     def coalesced_arrays(self, state: SimState, sched: Schedule, *, cs=None):
         """Compile a schedule + start clocks into the engine's scan inputs.
@@ -478,7 +495,9 @@ class Simulator:
     def run_coalesced(self, state: SimState, stream_arrays
                       ) -> tuple[SimState, SimTrace]:
         """Flat-buffer engine replay of a coalesced event stream (hot path)."""
-        return self._run_coalesced_jit(state, stream_arrays)
+        fn = self._run_coalesced_dnt if self.donate \
+            else self._run_coalesced_jit
+        return fn(state, stream_arrays)
 
     def run_world(self, state: SimState, world, rounds: int | None = None, *,
                   seed: int = 0, engine: bool = True):
@@ -507,13 +526,530 @@ class Simulator:
         if engine:
             if channel:
                 arrays, horizon = self.channel_coalesced_arrays(state, sched)
-                return self._run_channel_jit(state, arrays, horizon)
+                fn = self._run_channel_dnt if self.donate \
+                    else self._run_channel_jit
+                return fn(state, arrays, horizon)
             return self.run_coalesced(state, self.coalesced_arrays(state,
                                                                    sched))
         if channel:
             arrays, horizon = self.channel_reference_arrays(sched)
-            return self._run_channel_reference_jit(state, arrays, horizon)
+            fn = self._run_channel_reference_dnt if self.donate \
+                else self._run_channel_reference_jit
+            return fn(state, arrays, horizon)
         return self.run(state, self.reference_arrays(sched))
+
+    # ---------------------------------------- batched many-worlds replay
+    # (DESIGN.md §11) B independent worlds in ONE compiled scan: (B, W, D)
+    # buffers, (B, H, W, D) snapshot rings, per-world A2CiD2 dynamics as
+    # (B,) arrays.  The batched stream aligns every world's gradient ticks
+    # on shared step indices (events.stack_streams), so the scan keeps the
+    # serial replay's single lax.cond — the batch axis never enters
+    # control flow, and per world the replay is the serial one bit-for-bit
+    # (signed zeros aside; pinned in tests/test_batched_replay.py).
+
+    @staticmethod
+    def world_params(params_list) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Per-world (eta, alpha, alpha_tilde) as (B,) arrays — the
+        dynamic twins of the static Python-float scalars the serial
+        replays bind.  Built at the DEFAULT float precision (f64 under
+        JAX_ENABLE_X64, f32 otherwise) so every consumer can reproduce
+        the serial arithmetic bitwise: the p2p multiplies cast to the
+        buffer dtype (full precision under x64, exactly like a weak
+        Python scalar), while the kernels' mixing-coefficient pipeline
+        downcasts eta to f32 — the precision the serial fused kernels
+        compute c in regardless of x64 (their dt operand is f32 and weak
+        scalars don't promote).  Rounding to f32 once commutes with the
+        power-of-two multiplies (rn(2x) = 2 rn(x)), so both routes land
+        on the serial bits."""
+        return (jnp.asarray([p.eta for p in params_list]),
+                jnp.asarray([p.alpha for p in params_list]),
+                jnp.asarray([p.alpha_tilde for p in params_list]))
+
+    @staticmethod
+    def batch_states(states) -> SimState:
+        """Stack per-world SimStates onto a leading world axis (leaves
+        (n, ...) -> (B, n, ...); keys (B, 2) — each world keeps its own
+        stream)."""
+        states = list(states)
+        if not states:
+            raise ValueError("need at least one state")
+        return SimState(
+            x=jax.tree.map(lambda *a: jnp.stack(a),
+                           *[s.x for s in states]),
+            x_tilde=jax.tree.map(lambda *a: jnp.stack(a),
+                                 *[s.x_tilde for s in states]),
+            t_last=jnp.stack([s.t_last for s in states]),
+            key=jnp.stack([s.key for s in states]))
+
+    def _grad_worlds(self, engine: FlatGossipEngine, n: int, bx, bxt, key,
+                     gscale):
+        """Shared gradient tick of the batched engine flavors: per-world
+        key streams (identical to each serial replay's), doubly-vmapped
+        grad_fn, per-world metrics."""
+        ks = jax.vmap(jax.random.split)(key)
+        key, sub = ks[:, 0], ks[:, 1]
+        wkeys = jax.vmap(lambda k: jax.random.split(k, n))(sub)
+        losses, grads = jax.vmap(jax.vmap(self.grad_fn),
+                                 in_axes=(0, 0, None))(
+            engine.unpack_worlds(bx), wkeys, jnp.arange(n))
+        g = engine.pack_worlds(grads)
+        g = gscale[:, :, None].astype(g.dtype) * g
+        bx = bx - self.gamma * g
+        bxt = bxt - self.gamma * g
+        mean = jnp.mean(bx, axis=1, keepdims=True)
+        loss = jnp.mean(losses, axis=1).astype(jnp.float32)
+        consensus = (jnp.sum((bx - mean) ** 2, axis=(1, 2)) / n
+                     ).astype(jnp.float32)
+        mean_norm = jnp.sum(mean ** 2, axis=(1, 2)).astype(jnp.float32)
+        return bx, bxt, key, (loss, consensus, mean_norm)
+
+    def _worlds_step(self, engine: FlatGossipEngine, n: int, pw, carry, xs):
+        """Batched twin of ``_engine_step``; ``is_grad`` is shared across
+        the batch (stream alignment), so the step keeps one lax.cond."""
+        partner, dt_nxt, is_grad, gscale = xs
+
+        def comm(args):
+            bx, bxt, key = args
+            bx, bxt = engine.batch_worlds(bx, bxt, partner, dt_nxt, pw)
+            z = jnp.zeros((partner.shape[0],), jnp.float32)
+            return (bx, bxt, key), (z, z, z)
+
+        def grad(args):
+            bx, bxt, key = args
+            bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
+                                                      key, gscale)
+            bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
+            return (bx, bxt, key), metrics
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    def _run_worlds_impl(self, state: SimState, pw, stream_arrays
+                         ) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True, worlds=True,
+                                             backend=self.backend)
+        bx = engine.pack_worlds(state.x)
+        bxt = engine.pack_worlds(state.x_tilde)
+        bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
+        n = prologue.shape[1]
+        (bx, bxt, key), ys = jax.lax.scan(
+            partial(self._worlds_step, engine, n, pw),
+            (bx, bxt, state.key),
+            (partners, dt_next, is_grad, grad_scale))
+        loss, consensus, mean_norm = ys
+        final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
+                         t_final, key)
+        # per-step (S, B) metrics -> per-world (B, R) traces
+        return final, SimTrace(loss[grad_pos].T, consensus[grad_pos].T,
+                               mean_norm[grad_pos].T)
+
+    _run_worlds_jit, _run_worlds_dnt = _jit_pair(_run_worlds_impl)
+
+    def _worlds_channel_step(self, engine: FlatGossipEngine, n: int,
+                             horizon: int, pw, carry, xs):
+        """Batched twin of ``_channel_step``: per-world ring reads, one
+        shared ring rotation slot per gradient tick."""
+        (partner, dt_nxt, is_grad, gscale, corrupt, src_slot,
+         ring_pos) = xs
+
+        def comm(args):
+            bx, bxt, ring, key = args
+            if horizon:
+                xp = engine.partner_values_worlds(ring, bx, partner,
+                                                  src_slot)
+            else:
+                xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
+            bx, bxt = engine.channel_batch_worlds(bx, bxt, xp, corrupt,
+                                                  dt_nxt, pw)
+            z = jnp.zeros((partner.shape[0],), jnp.float32)
+            return (bx, bxt, ring, key), (z, z, z)
+
+        def grad(args):
+            bx, bxt, ring, key = args
+            bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
+                                                      key, gscale)
+            if horizon:
+                ring = engine.ring_push_worlds(ring, bx, ring_pos)
+            bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
+            return (bx, bxt, ring, key), metrics
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    def _run_worlds_channel_impl(self, state: SimState, pw, stream_arrays,
+                                 horizon: int) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final, corrupt, src_slot, ring_pos) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True, worlds=True,
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
+        bx = engine.pack_worlds(state.x)
+        bxt = engine.pack_worlds(state.x_tilde)
+        bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
+        n = prologue.shape[1]
+        ring = engine.ring_init_worlds(bx, horizon) if horizon else None
+        (bx, bxt, ring, key), ys = jax.lax.scan(
+            partial(self._worlds_channel_step, engine, n, horizon, pw),
+            (bx, bxt, ring, state.key),
+            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
+             ring_pos))
+        loss, consensus, mean_norm = ys
+        final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
+                         t_final, key)
+        return final, SimTrace(loss[grad_pos].T, consensus[grad_pos].T,
+                               mean_norm[grad_pos].T)
+
+    _run_worlds_channel_jit, _run_worlds_channel_dnt = _jit_pair(
+        _run_worlds_channel_impl, static=(0, 4))
+
+    # --- batched per-event reference flavor: the serial round body with
+    # dynamic per-world params, vmapped over the world axis inside the
+    # round scan (the equivalence oracle at batch scale)
+
+    @staticmethod
+    def _mix_dyn(x, x_tilde, eta, dt):
+        """``apply_mixing`` with a traced per-world eta (no eta == 0
+        shortcut: baseline worlds compute the exact-zero coefficient).
+        ``dt`` keeps its incoming dtype exactly like the serial path —
+        under x64 the reference round promotes it to f64, and the
+        coefficient must be computed there at full precision to match."""
+        dt = jnp.asarray(dt)
+
+        def mix(a, b):
+            c = (0.5 * (1.0 - jnp.exp(-2.0 * eta * dt))).astype(a.dtype)
+            c = jnp.reshape(c, c.shape + (1,) * (a.ndim - c.ndim))
+            d = b - a
+            return a + c * d, b - c * d
+
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_t = treedef.flatten_up_to(x_tilde)
+        mixed = [mix(a, b) for a, b in zip(flat_x, flat_t)]
+        return (treedef.unflatten([m[0] for m in mixed]),
+                treedef.unflatten([m[1] for m in mixed]))
+
+    @staticmethod
+    def _p2p_dyn(x, x_tilde, partner, alpha, alpha_t):
+        """``matched_p2p_update`` with traced per-world alphas."""
+        def upd(a, at):
+            b = jnp.take(a, partner, axis=0)
+            m = a - b
+            return (a - alpha.astype(a.dtype) * m,
+                    at - alpha_t.astype(a.dtype) * m)
+
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_t = treedef.flatten_up_to(x_tilde)
+        out = [upd(a, at) for a, at in zip(flat_x, flat_t)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    def _channel_p2p_dyn(self, x, x_tilde, xp, corrupt, alpha, alpha_t):
+        """``_channel_p2p`` with traced per-world alphas (robust rule and
+        clip stay static — they are replay knobs, not world data)."""
+        clip = self.robust_clip
+        rule = self.robust_rule
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_t = treedef.flatten_up_to(x_tilde)
+        flat_p = treedef.flatten_up_to(xp)
+
+        def cadv_for(a):
+            c = (1.0 + corrupt).astype(a.dtype)
+            return jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
+
+        mscale = None
+        if clip is not None and rule != "coord":
+            nrm2 = sum(
+                jnp.sum(((a - cadv_for(a) * b).astype(jnp.float32)) ** 2,
+                        axis=tuple(range(1, a.ndim)))
+                for a, b in zip(flat_x, flat_p))
+            nrm = jnp.sqrt(nrm2)
+            if rule == "trim":
+                mscale = (nrm <= clip).astype(jnp.float32)
+            else:
+                mscale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-30))
+
+        def upd(a, at, b):
+            m = a - cadv_for(a) * b
+            if mscale is not None:
+                s = mscale.astype(a.dtype)
+                m = m * jnp.reshape(s, s.shape + (1,) * (a.ndim - 1))
+            elif clip is not None:
+                m = jnp.clip(m, -clip, clip)
+            return (a - alpha.astype(a.dtype) * m,
+                    at - alpha_t.astype(a.dtype) * m)
+
+        out = [upd(a, at, b) for a, at, b in zip(flat_x, flat_t, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    def _grad_world_ref(self, x, x_tilde, t_last, key, eta, grad_times,
+                        grad_scale, alive):
+        """Shared gradient tail of the per-world reference round."""
+        dt = jnp.where(alive, grad_times - t_last, 0.0)
+        x, x_tilde = self._mix_dyn(x, x_tilde, eta, dt)
+        n = grad_times.shape[0]
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(self.grad_fn)(x, keys, jnp.arange(n))
+
+        def upd(p, g):
+            s = jnp.reshape(grad_scale, grad_scale.shape
+                            + (1,) * (g.ndim - 1)).astype(g.dtype)
+            return p - self.gamma * (s * g)
+
+        x = jax.tree.map(upd, x, grads)
+        x_tilde = jax.tree.map(upd, x_tilde, grads)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "consensus": consensus_distance(x),
+            "mean_param_norm": sum(jnp.sum(m ** 2) for m in
+                                   jax.tree.leaves(worker_mean(x))),
+        }
+        return x, x_tilde, key, metrics
+
+    def _run_worlds_reference_impl(self, state: SimState, pw, sched_arrays
+                                   ) -> tuple[SimState, SimTrace]:
+        def per_world(x, xt, tl, key, eta, alpha, alphat, partners, times,
+                      mask, grad_times, grad_scale, alive):
+            idx = jnp.arange(tl.shape[0])
+
+            def comm_event(carry, event):
+                x, xt, tl = carry
+                partner, time, msk = event
+                involved = (partner != idx) & msk
+                dt = jnp.where(involved, time - tl, 0.0)
+                x, xt = self._mix_dyn(x, xt, eta, dt)
+                tl = jnp.where(involved, time, tl)
+                x, xt = self._p2p_dyn(x, xt, partner, alpha, alphat)
+                return (x, xt, tl), None
+
+            (x, xt, tl), _ = jax.lax.scan(comm_event, (x, xt, tl),
+                                          (partners, times, mask))
+            x, xt, key, metrics = self._grad_world_ref(
+                x, xt, tl, key, eta, grad_times, grad_scale, alive)
+            tl = jnp.where(alive, grad_times, tl)
+            return (x, xt, tl, key), metrics
+
+        def round_fn(carry, xs):
+            x, xt, tl, key = carry
+            partners, times, mask, grad_times, grad_scale, alive = xs
+            (x, xt, tl, key), metrics = jax.vmap(per_world)(
+                x, xt, tl, key, *pw, partners, times, mask, grad_times,
+                grad_scale, alive)
+            return (x, xt, tl, key), metrics
+
+        carry = (state.x, state.x_tilde, state.t_last, state.key)
+        (x, xt, tl, key), metrics = jax.lax.scan(round_fn, carry,
+                                                 sched_arrays)
+        return SimState(x, xt, tl, key), \
+            SimTrace(metrics["loss"].T, metrics["consensus"].T,
+                     metrics["mean_param_norm"].T)
+
+    _run_worlds_reference_jit, _run_worlds_reference_dnt = _jit_pair(
+        _run_worlds_reference_impl)
+
+    def _run_worlds_channel_reference_impl(self, state: SimState, pw,
+                                           sched_arrays, horizon: int
+                                           ) -> tuple[SimState, SimTrace]:
+        def per_world(x, xt, tl, ring, key, eta, alpha, alphat, partners,
+                      times, mask, src_slots, corrupts, grad_times,
+                      grad_scale, alive, ring_pos):
+            idx = jnp.arange(tl.shape[0])
+
+            def comm_event(carry, event):
+                x, xt, tl = carry
+                partner, time, msk, src_slot, corrupt = event
+                involved = (partner != idx) & msk
+                dt = jnp.where(involved, time - tl, 0.0)
+                x, xt = self._mix_dyn(x, xt, eta, dt)
+                tl = jnp.where(involved, time, tl)
+                flat_x, treedef = jax.tree_util.tree_flatten(x)
+                ring_leaves = treedef.flatten_up_to(ring) if horizon \
+                    else [None] * len(flat_x)
+                xp = treedef.unflatten([
+                    self._partner_leaf(a, ra, partner, src_slot, horizon)
+                    for a, ra in zip(flat_x, ring_leaves)])
+                x, xt = self._channel_p2p_dyn(x, xt, xp, corrupt, alpha,
+                                              alphat)
+                return (x, xt, tl), None
+
+            (x, xt, tl), _ = jax.lax.scan(
+                comm_event, (x, xt, tl),
+                (partners, times, mask, src_slots, corrupts))
+            x, xt, key, metrics = self._grad_world_ref(
+                x, xt, tl, key, eta, grad_times, grad_scale, alive)
+            if horizon:
+                ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
+                                    ring, x)
+            tl = jnp.where(alive, grad_times, tl)
+            return (x, xt, tl, ring, key), metrics
+
+        ring = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[:, None], (a.shape[0], horizon) + a.shape[1:]),
+            state.x) if horizon else None
+
+        def round_fn(carry, xs):
+            x, xt, tl, ring, key = carry
+            (partners, times, mask, src_slots, corrupts, grad_times,
+             grad_scale, alive, ring_pos) = xs
+            out, metrics = jax.vmap(
+                per_world,
+                in_axes=(0,) * 16 + (None,))(
+                x, xt, tl, ring, key, *pw, partners, times, mask,
+                src_slots, corrupts, grad_times, grad_scale, alive,
+                ring_pos)
+            return out, metrics
+
+        carry = (state.x, state.x_tilde, state.t_last, ring, state.key)
+        (x, xt, tl, _, key), metrics = jax.lax.scan(round_fn, carry,
+                                                    sched_arrays)
+        return SimState(x, xt, tl, key), \
+            SimTrace(metrics["loss"].T, metrics["consensus"].T,
+                     metrics["mean_param_norm"].T)
+
+    _run_worlds_channel_reference_jit, _run_worlds_channel_reference_dnt = \
+        _jit_pair(_run_worlds_channel_reference_impl, static=(0, 4))
+
+    # --- host-side batch compilation + the public entry point
+
+    @staticmethod
+    def _coalesce_batch(scheds):
+        """Coalesce each schedule once per unique OBJECT — a sweep grid
+        legitimately repeats one schedule across arms (baseline vs
+        accelerated replay the identical world), and coalescing is the
+        expensive host-side pass."""
+        cache = {}
+        for s in scheds:
+            if id(s) not in cache:
+                cache[id(s)] = coalesce_schedule(s)
+        return [cache[id(s)] for s in scheds]
+
+    def worlds_coalesced_arrays(self, states: SimState, scheds, *,
+                                css=None):
+        """Engine scan inputs for B schedules: coalesce each world, align
+        the streams (events.stack_streams), lift to device arrays."""
+        from .events import stack_streams
+        css = css if css is not None else self._coalesce_batch(scheds)
+        bs = stack_streams(css, np.asarray(states.t_last))
+        return (jnp.asarray(bs.prologue), jnp.asarray(bs.partners),
+                jnp.asarray(bs.dt_next), jnp.asarray(bs.is_grad),
+                jnp.asarray(bs.grad_scale), jnp.asarray(bs.grad_pos),
+                jnp.asarray(bs.t_final))
+
+    def worlds_channel_arrays(self, states: SimState, scheds, *, css=None):
+        """Channel twin of ``worlds_coalesced_arrays`` + shared ring depth
+        H = the max staleness ANY world demands (worlds with a shallower —
+        or no — delay read the same snapshots they would serially: a
+        deeper ring holds a superset of their window, and fresh reads use
+        the sentinel H)."""
+        from .events import stack_streams
+        css = css if css is not None else self._coalesce_batch(scheds)
+        bs = stack_streams(css, np.asarray(states.t_last))
+        S, B, n = bs.partners.shape
+        stale, corrupt, horizon = self._channel_extras(bs.extras_dict(),
+                                                       (S, B, n))
+        h = max(horizon, 1)
+        step_round = np.searchsorted(np.asarray(bs.grad_pos), np.arange(S),
+                                     side="left")
+        src_slot = np.where(stale > 0,
+                            (step_round[:, None, None] - stale) % h,
+                            horizon).astype(np.int32)
+        ring_pos = (step_round % h).astype(np.int32)
+        return (jnp.asarray(bs.prologue), jnp.asarray(bs.partners),
+                jnp.asarray(bs.dt_next), jnp.asarray(bs.is_grad),
+                jnp.asarray(bs.grad_scale), jnp.asarray(bs.grad_pos),
+                jnp.asarray(bs.t_final), jnp.asarray(corrupt),
+                jnp.asarray(src_slot), jnp.asarray(ring_pos)), horizon
+
+    def worlds_reference_arrays(self, scheds):
+        """Batched per-event reference inputs (events.stack_schedules)."""
+        from .events import stack_schedules
+        b = stack_schedules(list(scheds))
+        return (jnp.asarray(b.partners), jnp.asarray(b.event_times),
+                jnp.asarray(b.event_mask), jnp.asarray(b.grad_times),
+                jnp.asarray(b.grad_scale), jnp.asarray(b.alive))
+
+    def worlds_channel_reference_arrays(self, scheds):
+        """Batched per-event channel reference inputs + shared ring depth
+        (slot resolution as in ``worlds_channel_arrays``)."""
+        from .events import stack_schedules
+        b = stack_schedules(list(scheds))
+        R, B, K, n = b.partners.shape
+        stale, corrupt, horizon = self._channel_extras(b.extras_dict(),
+                                                       (R, B, K, n))
+        h = max(horizon, 1)
+        rr = np.arange(R)[:, None, None, None]
+        src_slot = np.where(stale > 0, (rr - stale) % h,
+                            horizon).astype(np.int32)
+        ring_pos = (np.arange(R) % h).astype(np.int32)
+        return (jnp.asarray(b.partners), jnp.asarray(b.event_times),
+                jnp.asarray(b.event_mask), jnp.asarray(src_slot),
+                jnp.asarray(corrupt), jnp.asarray(b.grad_times),
+                jnp.asarray(b.grad_scale), jnp.asarray(b.alive),
+                jnp.asarray(ring_pos)), horizon
+
+    def run_worlds(self, states, scheds, *, params=None, engine: bool = True
+                   ) -> tuple[SimState, SimTrace]:
+        """Replay B independent worlds in ONE compiled scan.
+
+        states — a list of per-world SimStates (stacked here via
+          ``batch_states``) or an already world-batched SimState (leaves
+          (B, n, ...)).
+        scheds — B compiled ``events.Schedule``s sharing (rounds, n) —
+          e.g. ``WorldSweep(...).compile(rounds)``.  Ragged event counts
+          are padded with identity groups (exact no-ops), never branches.
+        params — optional per-world ``A2CiD2Params`` (one per schedule),
+          letting baseline and accelerated worlds — and any parameter
+          grid — share the ONE trace; default replicates ``self.params``.
+
+        Returns the world-batched final state and a SimTrace whose arrays
+        are (B, rounds) — row b equals the serial replay of world b.
+        Dispatch mirrors ``run_schedule``: channel extras or robust
+        aggregation select the channel flavor; ``engine=False`` (or a
+        layout-rejected pytree) the per-event reference flavor.
+        """
+        scheds = list(scheds)
+        if not isinstance(states, SimState):
+            states = self.batch_states(states)
+        B = len(scheds)
+        lead = jax.tree.leaves(states.x)[0].shape[0]
+        if lead != B:
+            raise ValueError(f"states are batched for {lead} worlds but "
+                             f"{B} schedules were given")
+        plist = list(params) if params is not None else [self.params] * B
+        if len(plist) != B:
+            raise ValueError(f"params must have one entry per world "
+                             f"({B}), got {len(plist)}")
+        pw = self.world_params(plist)
+        if engine:
+            try:
+                FlatLayout.from_pytree(states.x, stacked=True, worlds=True)
+            except TypeError:
+                engine = False
+        channel = self.robust_clip is not None or any(
+            STALE_KEY in s.extras_dict() or CORRUPT_KEY in s.extras_dict()
+            for s in scheds)
+        if engine:
+            if channel:
+                arrays, horizon = self.worlds_channel_arrays(states, scheds)
+                fn = self._run_worlds_channel_dnt if self.donate \
+                    else self._run_worlds_channel_jit
+                return fn(states, pw, arrays, horizon)
+            fn = self._run_worlds_dnt if self.donate \
+                else self._run_worlds_jit
+            return fn(states, pw,
+                      self.worlds_coalesced_arrays(states, scheds))
+        if channel:
+            arrays, horizon = self.worlds_channel_reference_arrays(scheds)
+            fn = self._run_worlds_channel_reference_dnt if self.donate \
+                else self._run_worlds_channel_reference_jit
+            return fn(states, pw, arrays, horizon)
+        fn = self._run_worlds_reference_dnt if self.donate \
+            else self._run_worlds_reference_jit
+        return fn(states, pw, self.worlds_reference_arrays(scheds))
 
 
 # --------------------------------------------------------------- AR-SGD ref

@@ -43,6 +43,7 @@ come from ``analysis/roofline.py``).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 
 import numpy as np
@@ -706,3 +707,101 @@ class World:
     @staticmethod
     def from_json(s: str) -> "World":
         return World.from_dict(json.loads(s))
+
+
+# --------------------------------------------------------------------- sweeps
+
+@dataclasses.dataclass(frozen=True)
+class WorldSweep:
+    """A declarative grid of worlds — the unit the batched replay consumes.
+
+    The paper's claims are sweep-shaped (gain vs. topology, vs. Byzantine
+    fraction, vs. staleness horizon); a ``WorldSweep`` names one such grid:
+    explicit ``worlds`` (or ``WorldSweep.over(base, field=[...], ...)`` for
+    a cartesian product of ``World`` field overrides) crossed with
+    ``seeds``.  ``compile(rounds)`` lowers the whole grid host-side to one
+    schedule per point — seed-major within each world, so
+    ``points()[i]`` names what ``compile()[i]`` replays — ready for
+    ``Simulator.run_worlds`` to replay in ONE compiled scan (DESIGN.md
+    §11).  All worlds must share one worker count; ragged event shapes
+    across the grid are the batcher's problem (identity padding), not the
+    sweep's.
+    """
+
+    worlds: tuple[World, ...]
+    seeds: tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        object.__setattr__(self, "worlds", tuple(self.worlds))
+        object.__setattr__(self, "seeds",
+                           tuple(int(s) for s in self.seeds))
+        if not self.worlds:
+            raise ValueError("WorldSweep needs at least one world")
+        if not self.seeds:
+            raise ValueError("WorldSweep needs at least one seed")
+        for i, w in enumerate(self.worlds):
+            if not isinstance(w, World):
+                raise ValueError(f"worlds[{i}] must be a World, "
+                                 f"got {type(w).__name__}")
+        n = self.worlds[0].n
+        bad = [i for i, w in enumerate(self.worlds) if w.n != n]
+        if bad:
+            raise ValueError(f"all worlds must share one worker count "
+                             f"(worlds[0].n = {n}); worlds {bad} differ")
+
+    @staticmethod
+    def over(base: World, seeds=(0,), **axes) -> "WorldSweep":
+        """Cartesian product of ``World`` field overrides on ``base``.
+
+        Each keyword names a ``World`` dataclass field (``topology``,
+        ``channel``, ``comms_per_grad``, ...) with a sequence of values;
+        the grid is built with ``dataclasses.replace`` in the keyword
+        order given (last axis fastest), re-validating every point.
+        """
+        fields = {f.name for f in dataclasses.fields(World)}
+        bad = sorted(set(axes) - fields)
+        if bad:
+            raise ValueError(f"unknown World field(s) {bad}; sweep axes "
+                             f"must name one of {sorted(fields)}")
+        if not axes:
+            return WorldSweep((base,), seeds=tuple(seeds))
+        names = list(axes)
+        worlds = tuple(
+            dataclasses.replace(base, **dict(zip(names, values)))
+            for values in itertools.product(*[list(axes[k])
+                                              for k in names]))
+        return WorldSweep(worlds, seeds=tuple(seeds))
+
+    @property
+    def n(self) -> int:
+        return self.worlds[0].n
+
+    @property
+    def size(self) -> int:
+        return len(self.worlds) * len(self.seeds)
+
+    def points(self) -> list[tuple[World, int]]:
+        """The flattened (world, seed) grid, seed-major within a world."""
+        return [(w, s) for w in self.worlds for s in self.seeds]
+
+    def compile(self, rounds: int | None = None) -> list:
+        """One ``events.Schedule`` per grid point (host-side; the whole
+        grid is plain numpy event data before any jit runs)."""
+        return [w.compile(rounds, seed=s) for w, s in self.points()]
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"worlds": [w.to_dict() for w in self.worlds],
+                "seeds": list(self.seeds)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "WorldSweep":
+        return WorldSweep(tuple(World.from_dict(w) for w in d["worlds"]),
+                          seeds=tuple(d.get("seeds", (0,))))
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @staticmethod
+    def from_json(s: str) -> "WorldSweep":
+        return WorldSweep.from_dict(json.loads(s))

@@ -46,6 +46,14 @@ aggregation rides in two forms — a prefetched per-worker ``mscale``
 
     m   = clip((x - (1 + corrupt) * xp) * mscale, +-tau)
     ...same p2p-then-mix tail as above...
+
+``mixing_gossip_worlds`` / ``channel_gossip_worlds`` are the world-batched
+twins (DESIGN.md §11): the batch is the leading (slowest) grid axis over
+(B, W, D) buffers, and the A2CiD2 dynamics (eta, alpha, alpha_t) ride in
+as prefetched (B,) per-world scalars instead of static Python floats — so
+baseline and accelerated worlds, and every point of a sweep grid, share
+ONE kernel trace.  Per world the arithmetic is bitwise the serial
+kernel's (f32 param rounding commutes with the power-of-two multiplies).
 """
 from __future__ import annotations
 
@@ -268,6 +276,190 @@ def mixing_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
     if pad:
         out_x = out_x[:, :d_dim]
         out_xt = out_xt[:, :d_dim]
+    return out_x, out_xt
+
+
+# ---------------------------------------------------------------------------
+# world-batched fused gossip batch (3-D grid; many-worlds replay, §11)
+# ---------------------------------------------------------------------------
+
+def _worlds_kernel(partner_ref, dt_ref, eta_ref, alpha_ref, alphat_ref,
+                   x_ref, xp_ref, xt_ref, out_x_ref, out_xt_ref):
+    b = pl.program_id(0)
+    w = pl.program_id(1)
+    x = x_ref[...]
+    xp = xp_ref[...]
+    xt = xt_ref[...]
+    m = x - xp           # partner==w => xp==x => m==0 (idle worker no-op)
+    alpha = alpha_ref[b].astype(x.dtype)
+    alpha_t = alphat_ref[b].astype(x.dtype)
+    x1 = x - alpha * m
+    xt1 = xt - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta_ref[b] * dt_ref[b, w]))
+         ).astype(x.dtype)
+    d = xt1 - x1
+    out_x_ref[...] = x1 + c * d
+    out_xt_ref[...] = xt1 - c * d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mixing_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
+                         partner: jax.Array, dt_next: jax.Array,
+                         eta: jax.Array, alpha: jax.Array,
+                         alpha_t: jax.Array, *, interpret: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
+    """One coalesced gossip batch over B worlds' stacked buffers at once.
+
+    x, x_tilde: (B, W, D) same dtype; partner: (B, W) int32 (per-world
+    involutions); dt_next: (B, W) f32; eta/alpha/alpha_t: (B,) f32
+    per-world dynamics riding in as prefetched scalars — the batch mixes
+    baseline (eta 0) and accelerated worlds in ONE trace, which is what
+    makes a whole sweep family one compile + one dispatch.
+
+    Same structure as ``mixing_gossip_stacked`` with the batch as the
+    leading (slowest) grid axis: the partner row gather resolves to a
+    static (b, partner[b, w], d) block index via scalar prefetch, x~ only
+    reads its own row and aliases its output in place, and each grid step
+    stays 3 state reads + 2 writes.
+    """
+    b_dim, w_dim, d_dim = x.shape
+    block = min(BLOCK_D, d_dim)
+    pad = (-d_dim) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+        x_tilde = jnp.pad(x_tilde, ((0, 0), (0, 0), (0, pad)))
+    grid = (b_dim, w_dim, x.shape[2] // block)
+    partner = partner.astype(jnp.int32)
+    dt_next = dt_next.astype(jnp.float32)
+    # eta joins the f32 mixing-coefficient pipeline (what the serial
+    # kernel computes c in); alpha/alpha_t keep their precision and cast
+    # straight to the buffer dtype in-kernel (weak-scalar semantics)
+    pw = [jnp.asarray(eta, jnp.float32), jnp.asarray(alpha),
+          jnp.asarray(alpha_t)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,  # partner, dt_next, eta, alpha, alpha_t
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, p, t, e, a, at: (b, w, d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, p, t, e, a, at: (b, p[b, w], d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, p, t, e, a, at: (b, w, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, p, t, e, a, at: (b, w, d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, p, t, e, a, at: (b, w, d)),
+        ],
+    )
+    out_x, out_xt = pl.pallas_call(
+        _worlds_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        # inputs are (partner, dt, eta, alpha, alpha_t, x, x, xt):
+        # alias xt -> out_xt in place (x cannot alias: later grid steps
+        # may still read any row as a partner)
+        input_output_aliases={} if interpret else {7: 1},
+        interpret=interpret,
+    )(partner, dt_next, *pw, x, x, x_tilde)
+    if pad:
+        out_x = out_x[:, :, :d_dim]
+        out_xt = out_xt[:, :, :d_dim]
+    return out_x, out_xt
+
+
+def _channel_worlds_kernel(corrupt_ref, mscale_ref, dt_ref, eta_ref,
+                           alpha_ref, alphat_ref, x_ref, xp_ref, xt_ref,
+                           out_x_ref, out_xt_ref, *, clip):
+    b = pl.program_id(0)
+    w = pl.program_id(1)
+    x = x_ref[...]
+    xp = xp_ref[...]
+    xt = xt_ref[...]
+    cadv = (1.0 + corrupt_ref[b, w]).astype(x.dtype)
+    m = (x - cadv * xp) * mscale_ref[b, w].astype(x.dtype)
+    if clip is not None:
+        m = jnp.clip(m, -clip, clip)
+    alpha = alpha_ref[b].astype(x.dtype)
+    alpha_t = alphat_ref[b].astype(x.dtype)
+    x1 = x - alpha * m
+    xt1 = xt - alpha_t * m
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta_ref[b] * dt_ref[b, w]))
+         ).astype(x.dtype)
+    d = xt1 - x1
+    out_x_ref[...] = x1 + c * d
+    out_xt_ref[...] = xt1 - c * d
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "interpret"))
+def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
+                          x_partner: jax.Array, corrupt: jax.Array,
+                          mscale: jax.Array, dt_next: jax.Array,
+                          eta: jax.Array, alpha: jax.Array,
+                          alpha_t: jax.Array, *,
+                          clip: float | None = None,
+                          interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """World-batched unreliable-channel gossip batch (robust m-term).
+
+    x, x_tilde, x_partner: (B, W, D) same dtype — partner values arrive
+    PRE-GATHERED per world (fresh rows or (B, H, W, D) ring snapshots);
+    corrupt, mscale, dt_next: (B, W) f32; eta/alpha/alpha_t: (B,) f32
+    per-world dynamics; ``clip`` the static coordinate-clip rule.  All
+    per-(world, worker) scalars ride the prefetch lane, so every tensor
+    operand streams with static block indices exactly like the serial
+    channel kernel — 3 state reads + 2 writes per grid step, x~ aliased.
+    """
+    b_dim, w_dim, d_dim = x.shape
+    block = min(BLOCK_D, d_dim)
+    pad = (-d_dim) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad)))
+        x_tilde = jnp.pad(x_tilde, ((0, 0), (0, 0), (0, pad)))
+        x_partner = jnp.pad(x_partner, ((0, 0), (0, 0), (0, pad)))
+    grid = (b_dim, w_dim, x.shape[2] // block)
+    pw = [jnp.asarray(v, jnp.float32)
+          for v in (corrupt, mscale, dt_next, eta)]
+    pw += [jnp.asarray(alpha), jnp.asarray(alpha_t)]
+    kernel = functools.partial(_channel_worlds_kernel, clip=clip)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,  # corrupt, mscale, dt, eta, alpha, alpha_t
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+            pl.BlockSpec((1, 1, block),
+                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+        ],
+    )
+    out_x, out_xt = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+        ],
+        # inputs are (corrupt, mscale, dt, eta, alpha, alpha_t, x, xp, xt):
+        # alias xt -> out_xt in place
+        input_output_aliases={} if interpret else {8: 1},
+        interpret=interpret,
+    )(*pw, x, x_partner, x_tilde)
+    if pad:
+        out_x = out_x[:, :, :d_dim]
+        out_xt = out_xt[:, :, :d_dim]
     return out_x, out_xt
 
 

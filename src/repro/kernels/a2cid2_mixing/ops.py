@@ -14,10 +14,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .kernel import (channel_gossip_stacked, mixing_gossip_stacked,
+from .kernel import (channel_gossip_stacked, channel_gossip_worlds,
+                     mixing_gossip_stacked, mixing_gossip_worlds,
                      mixing_p2p, p2p_mixing)
-from .ref import (channel_gossip_stacked_ref, channel_p2p_mixing_ref,
-                  mixing_gossip_stacked_ref, mixing_p2p_ref, p2p_mixing_ref)
+from .ref import (channel_gossip_stacked_ref, channel_gossip_worlds_ref,
+                  channel_p2p_mixing_ref, mixing_gossip_stacked_ref,
+                  mixing_gossip_worlds_ref, mixing_p2p_ref, p2p_mixing_ref)
 
 PyTree = Any
 
@@ -88,6 +90,44 @@ def gossip_event_stacked(x: jax.Array, x_tilde: jax.Array,
                                          alpha_t=alpha_t)
     return mixing_gossip_stacked(x, x_tilde, partner, dt_next, eta=eta,
                                  alpha=alpha, alpha_t=alpha_t,
+                                 interpret=(backend == "pallas_interpret"))
+
+
+def gossip_event_worlds(x: jax.Array, x_tilde: jax.Array,
+                        partner: jax.Array, dt_next: jax.Array,
+                        eta: jax.Array, alpha: jax.Array,
+                        alpha_t: jax.Array, *, backend: str = "auto"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fused coalesced gossip batch over B worlds at once: (B, W, D)
+    buffers, (B, W) partners/dt, (B,) per-world dynamics (the batched
+    many-worlds replay — baseline and accelerated worlds share one
+    dispatch)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return mixing_gossip_worlds_ref(x, x_tilde, partner, dt_next,
+                                        eta, alpha, alpha_t)
+    return mixing_gossip_worlds(x, x_tilde, partner, dt_next, eta, alpha,
+                                alpha_t,
+                                interpret=(backend == "pallas_interpret"))
+
+
+def channel_event_worlds(x: jax.Array, x_tilde: jax.Array,
+                         x_partner: jax.Array, corrupt: jax.Array,
+                         mscale: jax.Array, dt_next: jax.Array,
+                         eta: jax.Array, alpha: jax.Array,
+                         alpha_t: jax.Array, *,
+                         clip: float | None = None, backend: str = "auto"
+                         ) -> tuple[jax.Array, jax.Array]:
+    """World-batched channel gossip batch: pre-gathered (B, W, D) partner
+    values, (B, W) corrupt/robust-mscale/dt, (B,) per-world dynamics,
+    optional static coordinate ``clip`` (DESIGN.md §10/§11)."""
+    backend = resolve_backend(backend)
+    if backend == "ref":
+        return channel_gossip_worlds_ref(x, x_tilde, x_partner, corrupt,
+                                         mscale, dt_next, eta, alpha,
+                                         alpha_t, clip=clip)
+    return channel_gossip_worlds(x, x_tilde, x_partner, corrupt, mscale,
+                                 dt_next, eta, alpha, alpha_t, clip=clip,
                                  interpret=(backend == "pallas_interpret"))
 
 

@@ -48,6 +48,66 @@ def mixing_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
     return x1 + c * d, xt1 - c * d
 
 
+def _per_world(v: jax.Array, x: jax.Array) -> jax.Array:
+    """(B,) per-world parameter -> broadcastable against (B, W, D) buffers
+    at the buffer dtype (mirrors how the serial kernels bind their static
+    Python-float params: one conversion straight to the buffer dtype, then
+    the multiply — full precision under x64, like a weak scalar)."""
+    v = jnp.asarray(v).astype(x.dtype)
+    return jnp.reshape(v, v.shape + (1,) * (x.ndim - v.ndim))
+
+
+def mixing_gossip_worlds_ref(x: jax.Array, x_tilde: jax.Array,
+                             partner: jax.Array, dt_next: jax.Array,
+                             eta: jax.Array, alpha: jax.Array,
+                             alpha_t: jax.Array
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the world-batched fused gossip batch.
+
+    x, x~: (B, W, D); partner, dt_next: (B, W); eta, alpha, alpha_t: (B,)
+    f32 per-world dynamics (the batched replay runs baseline AND
+    accelerated worlds — different Prop 3.6 params — in one dispatch).
+    Per world this is bitwise ``mixing_gossip_stacked_ref``: the f32 param
+    pipeline matches the static-scalar binding (rounding to f32 commutes
+    with the *2 in the exponent), and idle rows (partner[b, w] == w) stay
+    exact no-ops.
+    """
+    xp = jnp.take_along_axis(x, partner[:, :, None].astype(jnp.int32),
+                             axis=1)
+    m = x - xp
+    x1 = x - _per_world(alpha, x) * m
+    xt1 = x_tilde - _per_world(alpha_t, x) * m
+    eta32 = jnp.asarray(eta, jnp.float32)[:, None]
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta32
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)[:, :, None]
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d
+
+
+def channel_gossip_worlds_ref(x: jax.Array, x_tilde: jax.Array,
+                              x_partner: jax.Array, corrupt: jax.Array,
+                              mscale: jax.Array, dt_next: jax.Array,
+                              eta: jax.Array, alpha: jax.Array,
+                              alpha_t: jax.Array, *,
+                              clip: float | None = None
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the world-batched unreliable-channel batch: (B, W, D)
+    buffers with PRE-GATHERED partner values (fresh rows or per-world
+    ring-buffer snapshots), (B, W) ``corrupt``/``mscale``/``dt_next``, and
+    (B,) per-world dynamics; ``clip`` is the static coordinate-clip rule.
+    """
+    m = _robust_m(x, x_partner, corrupt, mscale, clip)
+    x1 = x - _per_world(alpha, x) * m
+    xt1 = x_tilde - _per_world(alpha_t, x) * m
+    eta32 = jnp.asarray(eta, jnp.float32)[:, None]
+    c = (0.5 * (1.0 - jnp.exp(-2.0 * eta32
+                              * jnp.asarray(dt_next, jnp.float32)))
+         ).astype(x.dtype)[:, :, None]
+    d = xt1 - x1
+    return x1 + c * d, xt1 - c * d
+
+
 def _robust_m(x: jax.Array, x_partner: jax.Array, corrupt: jax.Array,
               mscale: jax.Array | None, clip: float | None) -> jax.Array:
     """Channel m-term: corrupted received value, robustly aggregated.
