@@ -24,6 +24,7 @@ helpers block on results and report cold (compile-inclusive) and warm.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -588,9 +589,11 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
     Each family runs as ONE batched replay (DESIGN.md §11): every
     (point, baseline/accelerated, seed) world shares a single jit trace
     and device dispatch per replay config — the staleness family is one
-    dispatch, the Byzantine family two (non-robust + robust, the robust
-    knob being static).  Batching makes multi-seed cheap: the Byzantine
-    family carries mean +- std bands over ``byz_seeds`` >= 3 seeds.
+    dispatch and, since the robust tau became per-world ``(B,)`` data
+    (DESIGN.md §12), the Byzantine family's non-robust AND robust arms
+    ride one dispatch too.  Batching makes multi-seed cheap: the
+    Byzantine family carries mean +- std bands over ``byz_seeds`` >= 3
+    seeds.
 
     The Byzantine family is a garbage-injection adversary (``scale`` mode
     at 1e3, 50% duty cycle — an intermittent compromised link): without
@@ -620,18 +623,19 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
 
     compiled = _schedule_compiler(rounds)
 
-    def run_family(worlds_accels_seeds, robust):
-        """Replay a family grid in ONE batched dispatch; returns the (B,
-        rounds) consensus curves + the dispatch wall time."""
+    def run_family(worlds_accels_seeds, clips=None):
+        """Replay a family grid in ONE batched dispatch; ``clips`` lifts
+        the robust tau to per-world data (None = non-robust arm).
+        Returns the (B, rounds) consensus curves + dispatch wall time."""
         sim = Simulator(grad_fn, p_acid, gamma=cfg["gamma"],
-                        robust_clip=cfg["robust_clip"] if robust else None,
                         robust_rule=cfg["robust_rule"])
         scheds = [compiled(w, s) for w, _, s in worlds_accels_seeds]
         plist = [p_acid if a else p_base for _, a, _ in worlds_accels_seeds]
         states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
                   for _ in scheds]
         t0 = time.perf_counter()
-        _, trace = sim.run_worlds(states, scheds, params=plist)
+        _, trace = sim.run_worlds(states, scheds, params=plist,
+                                  robust_clips=clips)
         jax.block_until_ready(trace)
         us = (time.perf_counter() - t0) * 1e6
         return np.asarray(trace.consensus, np.float64), us
@@ -695,7 +699,7 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
                                 else ChannelModel(delay=delay))
     grid = [(w, a, seed) for w in stale_worlds.values()
             for a in (False, True)]
-    cons, us_stale = run_family(grid, robust=False)
+    cons, us_stale = run_family(grid)
     for i, h in enumerate(cfg["horizons"]):
         entry = curve_entry(stale_worlds[h], False,
                             cons[2 * i:2 * i + 1], cons[2 * i + 1:2 * i + 2],
@@ -706,8 +710,8 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
     rows.append(f"channel_stale_dispatch,{us_stale:.0f},"
                 f"worlds={len(grid)};dispatches=1")
 
-    # family 2: Byzantine-edge fraction sweep, non-robust vs robust replay
-    # (two dispatches — robust_clip is a static replay knob), mean +- std
+    # family 2: Byzantine-edge fraction sweep, non-robust vs robust arms
+    # TOGETHER in one dispatch (per-world robust_clips), mean +- std
     # bands over byz_seeds seeds per point
     E = ring.num_edges
     byz_seeds = [seed + i for i in range(cfg["byz_seeds"])]
@@ -731,11 +735,12 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
         off = frac_i * 2 * len(byz_seeds) + (len(byz_seeds) if accel else 0)
         return cons[off:off + len(byz_seeds)]
 
-    us_byz = 0.0
+    both = grid + grid
+    clips = [None] * len(grid) + [cfg["robust_clip"]] * len(grid)
+    cons_both, us_byz = run_family(both, clips=clips)
     entries = {}
     for robust in (False, True):
-        cons, us = run_family(grid, robust=robust)
-        us_byz += us
+        cons = cons_both[len(grid):] if robust else cons_both[:len(grid)]
         for i, frac in enumerate(cfg["byz_fracs"]):
             entries[(frac, robust)] = curve_entry(
                 byz_worlds[frac], robust, rows_for(cons, i, False),
@@ -755,7 +760,7 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
             f"gain_nonrobust={gains[0]};gain_robust={gains[1]};"
             f"diverged={nonrobust['diverged']}")
     rows.append(f"channel_byz_dispatch,{us_byz:.0f},"
-                f"worlds={2 * len(grid)};dispatches=2;"
+                f"worlds={len(both)};dispatches=1;"
                 f"seeds={len(byz_seeds)}")
 
     clean_gain = report["byzantine"]["f0"]["nonrobust"]["acid_gain"]
@@ -919,6 +924,241 @@ def bench_batched_sweep(seed: int = 0) -> list[str]:
     ]
 
 
+_DEF_BENCH = {
+    "n": 32, "d": 32, "rounds": 150, "comms_per_grad": 1.0,
+    "gamma": 0.05, "noise": 0.05, "target": 0.3,
+    "byz_frac": 0.1,                  # fraction of ring edges compromised
+    # the two adversaries the control loop must separate: garbage
+    # injection (norm 1e3 — static trim catches it) and sign flips at
+    # honest scale (norm ~2||x|| < static tau — only adaptive tau does)
+    "attacks": {
+        "scale": {"mode": "scale", "scale": 1e3, "prob": 0.5},
+        "sign_flip": {"mode": "sign_flip", "scale": 1.0, "prob": 1.0},
+    },
+    "robust_clip": 5.0, "robust_rule": "trim",
+    "seeds": 3,
+    # comm-controller demo: a lossy world thinned by the degradation-
+    # aware scheduler (host-side — separate from the in-scan grid)
+    "comm": {"horizon": 4, "stale_prob": 1.0,
+             "lo": 0.5, "hi": 1.0, "degrade": 0.5},
+}
+
+
+def bench_defense(seed: int = 0) -> list[str]:
+    """Self-healing gossip artifact (DESIGN.md §12): the static-trim vs
+    adaptive-defense grid under Byzantine attacks, and the degradation-
+    aware comm controller on a lossy ring.  Emits BENCH_defense.json.
+
+    The headline grid is (clean + {scale, sign_flip} x {none, static,
+    adaptive}) x {baseline, accelerated} x seeds — every arm a declared
+    ``World`` (defense included), replayed as ONE ``run_worlds`` batch:
+    one device dispatch, and the row asserts exactly one fresh jit trace
+    (the per-world defense knobs are (B,) data, DESIGN.md §12).
+
+    The story the summary tells: static trim already retains the clean
+    accelerated gain under garbage injection (norms 1e3 >> tau), but a
+    sign-flip adversary at honest scale (||corrupted|| ~ 2||x|| < tau)
+    passes the static threshold BITWISE — ``static`` equals ``none`` on
+    that family — while the adaptive quantile-tracking tau learns the
+    honest-norm floor and rejects it.  Acceptance bars: adaptive
+    retention >= 0.95 of the clean accelerated gain at 10% Byzantine
+    edges on BOTH attacks, adaptive sign-flip tail < 3x clean while the
+    static tail is > 10x clean (unbounded drift).
+
+    The comm-control section replays the same lossy world with and
+    without the controller and reports the kept-event fraction and the
+    consensus cost of communicating less.
+    """
+    from repro.core import (AdaptiveDefense, ByzantineEdges, ChannelModel,
+                            DelayProcess, Simulator, World, build_graph,
+                            params_from_graph)
+
+    cfg = _DEF_BENCH
+    n, d, rounds = cfg["n"], cfg["d"], cfg["rounds"]
+    # shared target: every worker pulls toward the same point, so the
+    # equilibrium consensus floor is the noise floor and a sign-flipped
+    # delta has norm ~2||x|| — comfortably under the static tau
+    b = jnp.broadcast_to(cfg["target"] * jnp.ones(d), (n, d))
+    grad_fn = _quad_grad_fn(b, noise=cfg["noise"])
+    ring = build_graph("ring", n)
+    p_acid = params_from_graph(ring, accelerated=True)
+    p_base = params_from_graph(ring, accelerated=False)
+    compiled = _schedule_compiler(rounds)
+    sim = Simulator(grad_fn, p_acid, gamma=cfg["gamma"],
+                    robust_rule=cfg["robust_rule"])
+    state = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+    seeds = [seed + i for i in range(cfg["seeds"])]
+
+    E = ring.num_edges
+    k = max(1, int(round(cfg["byz_frac"] * E)))
+    picks = np.linspace(0, E, k, endpoint=False).astype(int)
+    edges = tuple(ring.edges[i] for i in picks)
+    channels = {
+        name: ChannelModel(adversary=ByzantineEdges(
+            edges, a["mode"], scale=a["scale"], prob=a["prob"]))
+        for name, a in cfg["attacks"].items()}
+
+    # arm = (tag, channel, robust_clip, defense); clean anchor first
+    tau = cfg["robust_clip"]
+    arms = [("clean", None, None, None)]
+    for name, ch in channels.items():
+        arms += [(f"{name}/none", ch, None, None),
+                 (f"{name}/static", ch, tau, None),
+                 (f"{name}/adaptive", ch, tau, AdaptiveDefense())]
+
+    worlds, scheds, states, plist, clips, defs = [], [], [], [], [], []
+    for tag, ch, clip, dfn in arms:
+        for accel in (False, True):
+            for s in seeds:
+                w = World(topology=ring, comms_per_grad=cfg["comms_per_grad"],
+                          channel=ch, defense=dfn)
+                worlds.append(w)
+                scheds.append(compiled(w, s))
+                states.append(state)
+                plist.append(p_acid if accel else p_base)
+                clips.append(clip)
+                defs.append(dfn)
+
+    before = Simulator._run_worlds_defense_jit._cache_size()
+    t0 = time.perf_counter()
+    _, trace = sim.run_worlds(states, scheds, params=plist,
+                              robust_clips=clips, defenses=defs)
+    jax.block_until_ready(trace)
+    us_grid = (time.perf_counter() - t0) * 1e6
+    traces = Simulator._run_worlds_defense_jit._cache_size() - before
+    cons = np.asarray(trace.consensus, np.float64)
+    rejn = np.asarray(trace.defense.rejections, np.float64)
+    quarn = np.asarray(trace.defense.quarantined, np.float64)
+
+    def nantail(curve):
+        t = curve[-30:]
+        return float(np.nanmean(t)) if np.isfinite(t).any() else float("nan")
+
+    def band(curves):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            return np.nanmean(curves, axis=0), np.nanstd(curves, axis=0)
+
+    S = len(seeds)
+    entries, i = {}, 0
+    for tag, ch, clip, dfn in arms:
+        rows_b = slice(i, i + S)
+        rows_a = slice(i + S, i + 2 * S)
+        i += 2 * S
+        base, base_std = band(cons[rows_b])
+        acid, acid_std = band(cons[rows_a])
+        tail_b, tail_a = nantail(base), nantail(acid)
+        gain = tail_b / max(tail_a, 1e-12) if np.isfinite(tail_b) \
+            and np.isfinite(tail_a) else float("nan")
+        entry = {
+            "world": worlds[rows_a.start].to_dict(),
+            "robust_clip": clip,
+            "seeds": seeds,
+            "consensus_baseline": [_finite_or_none(v) for v in base],
+            "consensus_acid": [_finite_or_none(v) for v in acid],
+            "consensus_baseline_std": [_finite_or_none(v)
+                                       for v in base_std],
+            "consensus_acid_std": [_finite_or_none(v) for v in acid_std],
+            "tail_consensus_baseline": _finite_or_none(tail_b),
+            "tail_consensus_acid": _finite_or_none(tail_a),
+            "acid_gain": _finite_or_none(gain),
+            "diverged": not np.isfinite(cons[rows_b.start:i]).all(),
+            "rejections_per_round": float(np.mean(rejn[rows_b.start:i])),
+            "quarantined_per_round": float(np.mean(quarn[rows_b.start:i])),
+        }
+        entries[tag] = _downsample_entry(
+            entry, ("consensus_baseline", "consensus_acid",
+                    "consensus_baseline_std", "consensus_acid_std"))
+
+    clean = entries["clean"]
+    clean_gain = clean["acid_gain"]
+    clean_tail = clean["tail_consensus_acid"]
+    summary = {"clean_gain": clean_gain,
+               "byz_edge_fraction": k / E,
+               "num_byzantine_edges": k,
+               "grid_worlds": len(worlds),
+               "grid_traces": int(traces)}
+    for name in cfg["attacks"]:
+        for arm in ("none", "static", "adaptive"):
+            e = entries[f"{name}/{arm}"]
+            g = e["acid_gain"]
+            summary[f"{name}_retention_{arm}"] = (
+                None if g is None or not clean_gain else g / clean_gain)
+            t = e["tail_consensus_acid"]
+            summary[f"{name}_tail_vs_clean_{arm}"] = (
+                None if t is None or not clean_tail else t / clean_tail)
+    adaptive_ok = all(
+        (summary[f"{name}_retention_adaptive"] or 0.0) >= 0.95
+        for name in cfg["attacks"])
+    summary["adaptive_retention_ok"] = adaptive_ok
+    summary["signflip_adaptive_contained"] = \
+        (summary["sign_flip_tail_vs_clean_adaptive"] or np.inf) < 3.0
+    summary["signflip_static_fails"] = \
+        (summary["sign_flip_tail_vs_clean_static"] or np.inf) > 10.0
+
+    rows = [f"defense_grid_dispatch,{us_grid:.0f},"
+            f"worlds={len(worlds)};dispatches=1;traces={traces};"
+            f"seeds={S}"]
+    for tag, e in entries.items():
+        label = tag.replace("/", "_")
+        g = e["acid_gain"]
+        rows.append(
+            f"defense_{label}_n{n},0.0,"
+            f"gain={'None' if g is None else f'{g:.3f}'};"
+            f"rej_per_round={e['rejections_per_round']:.2f};"
+            f"quar_per_round={e['quarantined_per_round']:.2f};"
+            f"diverged={e['diverged']}")
+
+    # ------------------------------------------- comm controller demo
+    cc = cfg["comm"]
+    lossy = ChannelModel(delay=DelayProcess(horizon=cc["horizon"],
+                                            prob=cc["stale_prob"]))
+    ctrl = AdaptiveDefense(adaptive_tau=False, trust=False,
+                           comm_lo=cc["lo"], comm_hi=cc["hi"],
+                           comm_degrade=cc["degrade"])
+    w_full = World(topology=ring, comms_per_grad=cfg["comms_per_grad"],
+                   channel=lossy)
+    w_ctrl = dataclasses.replace(w_full, defense=ctrl)
+    s_full = compiled(w_full, seed)
+    s_ctrl = compiled(w_ctrl, seed)
+    kept = (int(np.sum(np.asarray(s_ctrl.event_mask)))
+            / max(int(np.sum(np.asarray(s_full.event_mask))), 1))
+    t0 = time.perf_counter()
+    _, tr_cc = sim.run_worlds([state, state], [s_full, s_ctrl],
+                              params=[p_acid, p_acid])
+    jax.block_until_ready(tr_cc)
+    us_cc = (time.perf_counter() - t0) * 1e6
+    cc_cons = np.asarray(tr_cc.consensus, np.float64)
+    tail_full, tail_ctrl = nantail(cc_cons[0]), nantail(cc_cons[1])
+    report_cc = {
+        "world_full": w_full.to_dict(), "world_controlled": w_ctrl.to_dict(),
+        "kept_event_fraction": kept,
+        "tail_consensus_full": _finite_or_none(tail_full),
+        "tail_consensus_controlled": _finite_or_none(tail_ctrl),
+        "consensus_cost_ratio": _finite_or_none(
+            tail_ctrl / max(tail_full, 1e-12)),
+    }
+    rows.append(f"defense_comm_control,{us_cc:.0f},"
+                f"kept_fraction={kept:.3f};"
+                f"cost_ratio={report_cc['consensus_cost_ratio']:.3f}")
+
+    report = {"config": _sanitize_json(dict(cfg)), "seed": seed,
+              "arms": entries, "comm_control": report_cc,
+              "summary": summary}
+    _dump_json(__file__, "BENCH_defense.json", report)
+    fmt = lambda v: "None" if v is None else f"{v:.3f}"  # noqa: E731
+    rows.append(
+        f"defense_summary,0.0,clean_gain={fmt(clean_gain)};"
+        f"scale_retention_adaptive={fmt(summary['scale_retention_adaptive'])};"
+        f"signflip_retention_adaptive="
+        f"{fmt(summary['sign_flip_retention_adaptive'])};"
+        f"signflip_static_tail_x="
+        f"{fmt(summary['sign_flip_tail_vs_clean_static'])};"
+        f"adaptive_ok={adaptive_ok}")
+    return rows
+
+
 def bench_roofline_summary(seed: int = 0) -> list[str]:
     """Roofline terms from the dry-run artifacts (if present)."""
     import json
@@ -952,6 +1192,7 @@ BENCHES = {
     "gossip": bench_gossip_engine,
     "topology": bench_topology_sweep,
     "channel": bench_channel_sweep,
+    "defense": bench_defense,
     "sweep": bench_batched_sweep,
     "roofline": bench_roofline_summary,
 }
@@ -979,6 +1220,10 @@ def main() -> None:
         # B = 8 batched-vs-serial grid for the CI perf gate
         _SWEEP_BENCH.update(n=16, rounds=60, horizons=[0, 2, 4, 8],
                             byz_fracs=[0.0, 0.125])
+        # defense grid at n=16/80 rounds, 2 seeds: the sign-flip physics
+        # still holds (||corrupted|| ~ 2*0.3*sqrt(16) = 2.4 < tau = 5,
+        # so the static arm stays bitwise-blind to the attack)
+        _DEF_BENCH.update(n=16, d=16, rounds=80, seeds=2)
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -3,8 +3,10 @@ heterogeneous quadratic on a ring, accelerated vs baseline; the same world
 made hostile (stragglers, churn, a mid-run topology switch), described
 declaratively with the World API (DESIGN.md §9); a LOSSY ring —
 stale partner reads plus two Byzantine edges (DESIGN.md §10) — replayed
-with and without the robust trimmed-aggregation defense; and a whole
-SWEEP of worlds replayed as one batched scan (DESIGN.md §11).
+with and without the robust trimmed-aggregation defense; the SELF-HEALING
+version of that defense (adaptive tau + edge quarantine, DESIGN.md §12)
+against an attack the static trim cannot see; and a whole SWEEP of worlds
+replayed as one batched scan (DESIGN.md §11).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,10 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
-                        PhaseSwitch, Simulator, WorkerModel, World,
-                        WorldSweep, hypercube_graph, params_from_graph,
-                        ring_graph, worker_mean)
+from repro.core import (AdaptiveDefense, ByzantineEdges, ChannelModel,
+                        DelayProcess, PhaseSwitch, Simulator, WorkerModel,
+                        World, WorldSweep, hypercube_graph,
+                        params_from_graph, ring_graph, worker_mean)
 
 N_WORKERS, DIM, ROUNDS = 16, 64, 300
 
@@ -98,6 +100,37 @@ for robust in (False, True):
     name = "A2CiD2 + trim   " if robust else "A2CiD2 no defense"
     print(f"{name}: consensus distance "
           f"{'DIVERGED' if not np.isfinite(tail) else f'{tail:.3f}'}")
+
+# -- self-healing gossip (DESIGN.md §12): a sign-flip adversary corrupts
+#    exchanges at HONEST scale, so the static tau above never fires — the
+#    trimmed replay is bitwise the undefended one.  Declaring a defense on
+#    the World closes the loop inside the compiled scan: an EMA quantile
+#    of admitted delta norms tightens tau to the honest noise floor, and
+#    per-edge trust quarantines (then heals) edges that keep violating it.
+print("\nself-healing: sign-flip attack at honest scale, adaptive tau")
+# shared target, scaled so a flipped exchange has norm ~2||x|| ~ 3 < tau=5
+# — under the static threshold's radar, well above the honest noise floor
+b_shared = 0.2 * b[0]
+flippy = ChannelModel(adversary=ByzantineEdges(
+    (graph.edges[0], graph.edges[8]), mode="sign_flip", prob=1.0))
+
+
+def shared_grad(x, key, worker_id):
+    del worker_id
+    return (0.5 * jnp.sum((x - b_shared) ** 2),
+            (x - b_shared) + 0.05 * jax.random.normal(key, x.shape))
+
+
+for label, defense in (("static trim    ", None),
+                       ("adaptive defense", AdaptiveDefense())):
+    world = World(topology=graph, channel=flippy, defense=defense)
+    sim = Simulator(shared_grad, acid, gamma=0.05,
+                    robust_clip=5.0, robust_rule="trim")
+    state = sim.init(jnp.zeros(DIM), N_WORKERS, jax.random.PRNGKey(2))
+    state, trace = sim.run_world(state, world, ROUNDS, seed=0)
+    rej = float(jnp.sum(trace.defense.rejections)) if trace.defense else 0.0
+    print(f"{label}: consensus distance {float(trace.consensus[-1]):.4f}  "
+          f"(rejected exchanges: {rej:.0f})")
 
 # -- many worlds at once: the paper's claims are sweep-shaped, so sweeps
 #    are first-class.  A WorldSweep names a grid declaratively; run_worlds

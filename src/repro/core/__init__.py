@@ -2,7 +2,9 @@
 from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
                      consensus_distance, gradient_event, matched_p2p_update,
                      mixing_coeff, p2p_event, params_from_graph, worker_mean)
-from .channel import ByzantineEdges, ChannelModel, DelayProcess
+from .channel import (ByzantineEdges, ChannelModel, DelayProcess,
+                      degradation_profile)
+from .defense import AdaptiveDefense, DefenseTrace
 from .engine import FlatGossipEngine, mix_flat
 from .events import (BatchedSchedule, BatchedStream, CoalescedSchedule,
                      EventStream, Schedule, coalesce_schedule,
@@ -19,7 +21,8 @@ from .world import (ChurnProcess, LinkModel, PhaseSwitch, WorkerModel,
                     World, WorldSweep)
 
 __all__ = [
-    "ByzantineEdges", "ChannelModel", "DelayProcess",
+    "ByzantineEdges", "ChannelModel", "DelayProcess", "degradation_profile",
+    "AdaptiveDefense", "DefenseTrace",
     "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
     "WorldSweep",
     "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",

@@ -356,3 +356,26 @@ def has_channel_extras(schedule) -> bool:
     channel extras the replay engines must honor."""
     extras = schedule.extras or {}
     return STALE_KEY in extras or CORRUPT_KEY in extras
+
+
+def degradation_profile(schedule) -> np.ndarray:
+    """(R,) per-round channel-degradation score: the fraction of involved
+    partner reads that are degraded — stale (served from the snapshot
+    ring) or corrupted (a Byzantine multiplier on the received value).
+    Rounds with no involved reads (or no channel extras at all) score 0.
+    The defense's host-side comm controller derates its keep-fraction by
+    this profile (``AdaptiveDefense.comm_degrade``)."""
+    R, K, n = schedule.partners.shape
+    idx = np.arange(n)
+    involved = (schedule.partners != idx) & schedule.event_mask[:, :, None]
+    extras = schedule.extras_dict()
+    bad = np.zeros((R, K, n), bool)
+    stale = extras.get(STALE_KEY)
+    if stale is not None:
+        bad |= np.asarray(stale) > 0
+    corrupt = extras.get(CORRUPT_KEY)
+    if corrupt is not None:
+        bad |= np.asarray(corrupt) != 0
+    num = (bad & involved).reshape(R, -1).sum(axis=1)
+    den = np.maximum(involved.reshape(R, -1).sum(axis=1), 1)
+    return (num / den).astype(np.float32)

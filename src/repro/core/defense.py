@@ -1,0 +1,421 @@
+"""Self-healing gossip defense (DESIGN.md §12).
+
+PR 4's robust m-term is a STATIC threshold: ``robust_clip`` picks one tau
+for the whole replay, and the ClippedGossip analysis shows why that is not
+enough — a sign-flip adversary (received value negated, scale ~ 1) emits
+corrupted deltas whose norm ``||x - (1+c)xp|| = ||x + xp|| ~ 2||x||`` sits
+in the honest range whenever the workers are far from consensus, so any
+tau loose enough to pass honest traffic passes the attack too.  This
+module closes the loop: the defense becomes per-round FEEDBACK computed
+from replay statistics carried in the scan state.
+
+Three controllers, all declaratively configured as
+``World(defense=AdaptiveDefense(...))`` and all exact no-ops when off:
+
+  * adaptive tau — an EMA of a quantile (default: 0.75, headroom for
+    heterogeneous-objective spread) of the admitted delta norms, updated
+    once per round at the gradient tick;
+    ``tau_r = q * quantile_est`` tracks the consensus-tightening
+    trajectory, so as honest norms shrink toward the gradient-noise floor
+    the threshold shrinks with them and the sign-flip deltas (pinned near
+    2||x||) fall outside.  The estimator learns from every admitted
+    non-gross exchange — borderline rejections included, because an
+    accepted-only estimator is a one-way ratchet (a tight tau shrinks its
+    own input until honest reads are rejected wholesale), while gross
+    violations (beyond ``margin * tau``) are excluded, because a sparse
+    round dominated by an attacked edge would otherwise hand an
+    attack-scale norm straight to the per-round quantile.  Quarantined
+    edges' norms are excluded too — conviction removes an attacker from
+    the estimator entirely.  Cold start uses ``min(tau0, static tau)``
+    until the first admitted norms seed the estimator, so a scale-1e3
+    burst at round 0 cannot poison the seed when a static threshold
+    exists.
+  * edge trust + quarantine — per directed edge (reader i, partner j) an
+    EMA trust score in [0, 1]: accepted exchanges pull it toward 1 at
+    rate ``rho``, rejections toward 0.  Below ``trust_floor`` the edge is
+    QUARANTINED: its exchanges are zeroed in-scan (mscale 0 — the same
+    rejection mechanism, so clocks and mixing still advance exactly like
+    a rejected event) while trust heals toward re-admission at rate
+    ``heal`` (probation).  A still-corrupt edge is re-rejected on
+    re-admission and falls straight back (backoff); a transiently corrupt
+    one (duty-cycle adversary that went honest) re-earns trust and stays.
+  * degradation-aware comm control — ``comms_per_grad`` becomes a
+    host-side controller: the World samples at the ``comm_hi`` rate and
+    the controller thins each round's matchings to a keep-fraction that
+    ramps from ``comm_lo``/``comm_hi`` up as training progresses and is
+    scaled down by ``comm_degrade`` times the round's channel-degradation
+    score (fraction of involved reads that are stale or corrupted).
+    Gated matchings are rewritten to identity with their extras zeroed —
+    exactly the PR 4 drop mechanism, so every replay path (engine,
+    reference, batched) consumes the thinned schedule unchanged.
+
+The in-scan state (``DefenseState``) and knobs (``DefenseKnobs``) are
+plain NamedTuples of f32 leaves so the whole control loop rides a single
+``lax.scan`` carry, vmaps over a world batch, and — crucially — NEUTRAL
+knobs (adapt 0, rho 0, floor -1) degenerate BITWISE to the static
+trim/plain channel arithmetic: ``mscale = (nrm <= tau)`` with tau static
+(or +inf).  That is what lets a static-vs-adaptive-vs-attack grid ride
+the PR 5 batched replay as ONE jit trace (tests/test_defense.py pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveDefense:
+    """Declarative self-healing defense spec (a ``World`` field).
+
+    adaptive_tau — enable the quantile-tracking threshold; ``q`` is the
+      multiplier on the quantile estimate (tau_r = q * qest), ``quantile``
+      the tracked order statistic of admitted norms (0.5 = median, robust
+      to <50% contamination of a round's exchanges), ``beta`` the EMA
+      rate of the estimator, ``tau0`` the cold-start threshold used until
+      the estimator has seen its first admitted norms (the effective cold
+      tau is min(tau0, static tau); inf + no static tau = accept all,
+      letting the median seed itself from majority-honest traffic).
+    trust — enable edge trust/quarantine; ``rho`` the trust EMA rate,
+      ``trust_floor`` the quarantine threshold (low floors tolerate
+      duty-cycle edges that are honest half the time), ``heal`` the
+      probation re-admission rate while quarantined, ``margin`` the
+      conviction margin: trust is only damaged by GROSS violations
+      (nrm > margin * tau).  A rejection just above tau still zeroes the
+      exchange but leaves trust intact — honest tail norms land there,
+      and rejecting an honest edge is self-reinforcing (no averaging =>
+      larger future deltas), so borderline rejections must never feed
+      the conviction loop.  Real attacks sit orders of magnitude out.
+    comm_lo/comm_hi/comm_degrade — the communication controller (host
+      side): keep-fraction ramps comm_lo -> comm_hi over the replay and
+      is derated by ``comm_degrade`` x the round's degradation score.
+      All three at their defaults = controller off (schedule untouched).
+    """
+
+    adaptive_tau: bool = True
+    q: float = 3.0
+    quantile: float = 0.75
+    beta: float = 0.2
+    tau0: float = float("inf")
+    trust: bool = True
+    rho: float = 0.25
+    trust_floor: float = 0.25
+    heal: float = 0.02
+    margin: float = 3.0
+    comm_lo: float = 1.0
+    comm_hi: float = 1.0
+    comm_degrade: float = 0.0
+
+    def __post_init__(self):
+        if not self.q > 0:
+            raise ValueError(f"q must be > 0, got {self.q}")
+        if not 0.0 < self.quantile <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got "
+                             f"{self.quantile}")
+        if not 0.0 < self.beta <= 1.0:
+            raise ValueError(f"beta must be in (0, 1], got {self.beta}")
+        if not self.tau0 > 0:
+            raise ValueError(f"tau0 must be > 0, got {self.tau0}")
+        if not 0.0 <= self.rho <= 1.0:
+            raise ValueError(f"rho must be in [0, 1], got {self.rho}")
+        if not self.trust_floor < 1.0:
+            raise ValueError(f"trust_floor must be < 1, got "
+                             f"{self.trust_floor}")
+        if not 0.0 <= self.heal <= 1.0:
+            raise ValueError(f"heal must be in [0, 1], got {self.heal}")
+        if not self.margin >= 1.0:
+            raise ValueError(f"margin must be >= 1, got {self.margin}")
+        if not 0.0 < self.comm_lo <= self.comm_hi:
+            raise ValueError("need 0 < comm_lo <= comm_hi, got "
+                             f"({self.comm_lo}, {self.comm_hi})")
+        if self.comm_degrade < 0:
+            raise ValueError(f"comm_degrade must be >= 0, got "
+                             f"{self.comm_degrade}")
+
+    @property
+    def is_active(self) -> bool:
+        """True when the IN-SCAN loop must run (adaptive tau or trust);
+        the comm controller alone is a host-side schedule transform."""
+        return self.adaptive_tau or self.trust
+
+    @property
+    def has_comm_control(self) -> bool:
+        return (self.comm_lo != 1.0 or self.comm_hi != 1.0
+                or self.comm_degrade != 0.0)
+
+    # ------------------------------------------------- comm controller
+    def comm_multipliers(self, rounds: int,
+                         degradation: np.ndarray) -> np.ndarray:
+        """(R,) keep-fraction per round: a comm_lo -> comm_hi ramp over
+        the replay (communication pays off most once the consensus error
+        is small), derated by the channel-degradation score."""
+        prog = (np.arange(rounds, dtype=np.float64) + 1.0) / max(rounds, 1)
+        ramp = self.comm_lo + (self.comm_hi - self.comm_lo) * prog
+        derate = np.clip(1.0 - self.comm_degrade
+                         * np.asarray(degradation, np.float64), 0.0, 1.0)
+        return np.clip(ramp * derate / self.comm_hi, 0.0, 1.0)
+
+    def apply_comm_control(self, schedule):
+        """Thin a compiled schedule to the controller's per-round rate.
+
+        The World samples matchings at the ``comm_hi`` rate; this pass
+        keeps the first ceil(frac_r * K_active) active matchings of round
+        r and gates the rest — partners rewritten to identity AND the
+        event masked AND every extras row zeroed, so a gated slot is an
+        exact no-op on all replay paths (the reference path applies p2p
+        unconditionally, which is why identity-rewrite is mandatory).
+        """
+        if not self.has_comm_control:
+            return schedule
+        from .channel import degradation_profile
+        frac = self.comm_multipliers(schedule.rounds,
+                                     degradation_profile(schedule))
+        partners = np.array(schedule.partners)
+        mask = np.array(schedule.event_mask)
+        extras = {k: np.array(v) for k, v in schedule.extras_dict().items()}
+        R, K, n = partners.shape
+        idx = np.arange(n, dtype=partners.dtype)
+        for r in range(R):
+            active = np.flatnonzero(mask[r]
+                                    & (partners[r] != idx).any(axis=1))
+            keep = int(math.ceil(frac[r] * active.size))
+            for k in active[keep:]:
+                partners[r, k] = idx
+                mask[r, k] = False
+                for a in extras.values():
+                    a[r, k] = 0
+        out = dataclasses.replace(schedule, partners=partners,
+                                  event_mask=mask)
+        return out.with_extras(**extras) if extras else out
+
+    # ------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        # JSON has no inf literal; None round-trips to the default
+        if math.isinf(d["tau0"]):
+            d["tau0"] = None
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "AdaptiveDefense":
+        d = dict(d)
+        if d.get("tau0") is None:
+            d["tau0"] = float("inf")
+        return AdaptiveDefense(**d)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @staticmethod
+    def from_json(s: str) -> "AdaptiveDefense":
+        return AdaptiveDefense.from_dict(json.loads(s))
+
+
+# ------------------------------------------------------------ scan-side IR
+# The jit'd replay impls never see AdaptiveDefense itself: the spec lowers
+# to a DefenseKnobs of f32 leaves (scalars serially, (B,) world-batched),
+# so every defense configuration — including "no defense", lowered to the
+# NEUTRAL knobs — shares one trace.
+
+class DefenseKnobs(NamedTuple):
+    adapt: jax.Array   # > 0 enables adaptive tau
+    q: jax.Array       # tau multiplier on the quantile estimate
+    p: jax.Array       # tracked quantile of accepted norms
+    beta: jax.Array    # quantile-estimator EMA rate
+    tau0: jax.Array    # cold-start tau while the estimator is unseeded
+    tau_s: jax.Array   # static tau (adapt == 0 arms; inf = accept all)
+    rho: jax.Array     # trust EMA rate (0 freezes trust)
+    floor: jax.Array   # quarantine threshold (-1 disables quarantine)
+    heal: jax.Array    # probation re-admission rate
+    margin: jax.Array  # conviction margin: trust damage needs nrm > m*tau
+
+
+class DefenseState(NamedTuple):
+    qest: jax.Array      # scalar quantile estimate (0 = unseeded)
+    trust: jax.Array     # (n, n) directed edge trust, init 1
+    lastn: jax.Array     # (n,) this round's last accepted positive norm
+    lastv: jax.Array     # (n,) bool: lastn valid
+    rej_acc: jax.Array   # scalar, norm-rejections accumulated this round
+    quar_acc: jax.Array  # scalar, quarantined exchanges this round
+
+
+class DefenseTrace(NamedTuple):
+    """Per-round control-loop trace riding SimTrace.defense: the tau in
+    effect, norm-rejection count, and quarantined-exchange count (each
+    (R,) serial / (B, R) batched)."""
+    tau: jax.Array
+    rejections: jax.Array
+    quarantined: jax.Array
+
+
+_NEUTRAL = {"adapt": 0.0, "q": 1.0, "p": 0.5, "beta": 1.0,
+            "tau0": float("inf"), "rho": 0.0, "floor": -1.0, "heal": 0.0,
+            "margin": 1.0}
+
+
+def defense_knobs(defense: AdaptiveDefense | None,
+                  static_tau: float | None) -> tuple:
+    """Lower one (defense, static robust tau) arm to plain knob floats.
+
+    ``defense=None`` (or trust/adaptive arms switched off) lowers to the
+    neutral values, under which the scan arithmetic is BITWISE the static
+    path: tau constant (``static_tau`` or +inf -> mscale == (nrm <= tau)
+    == all-ones when non-robust), trust frozen at 1, no quarantine.
+    """
+    tau_s = float("inf") if static_tau is None else float(static_tau)
+    if defense is None:
+        k = dict(_NEUTRAL)
+    else:
+        # Cold-start tau never looser than the static threshold: until the
+        # quantile estimator seeds, an explicit tau0 or the static tau_s
+        # screens the first exchanges (an unscreened round-0 read of a
+        # scale-1e3 corruption would poison the estimator's own seed).
+        k = {"adapt": 1.0 if defense.adaptive_tau else 0.0,
+             "q": defense.q, "p": defense.quantile, "beta": defense.beta,
+             "tau0": min(defense.tau0, tau_s),
+             "rho": defense.rho if defense.trust else 0.0,
+             "floor": defense.trust_floor if defense.trust else -1.0,
+             "heal": defense.heal if defense.trust else 0.0,
+             "margin": defense.margin}
+    return (k["adapt"], k["q"], k["p"], k["beta"], k["tau0"], tau_s,
+            k["rho"], k["floor"], k["heal"], k["margin"])
+
+
+def knobs_single(defense: AdaptiveDefense | None,
+                 static_tau: float | None) -> DefenseKnobs:
+    """Serial-replay knobs: f32 scalars."""
+    vals = defense_knobs(defense, static_tau)
+    return DefenseKnobs(*(jnp.float32(v) for v in vals))
+
+
+def knobs_worlds(defenses, static_taus) -> DefenseKnobs:
+    """World-batched knobs: (B,) f32 arrays, one row per arm."""
+    rows = [defense_knobs(d, t) for d, t in zip(defenses, static_taus)]
+    cols = np.asarray(rows, np.float32).T
+    return DefenseKnobs(*(jnp.asarray(c) for c in cols))
+
+
+def defense_init(n: int, batch: int | None = None) -> DefenseState:
+    """Fresh control-loop state (all trust 1, estimator unseeded)."""
+    lead = () if batch is None else (batch,)
+    return DefenseState(
+        qest=jnp.zeros(lead, jnp.float32),
+        trust=jnp.ones(lead + (n, n), jnp.float32),
+        lastn=jnp.zeros(lead + (n,), jnp.float32),
+        lastv=jnp.zeros(lead + (n,), bool),
+        rej_acc=jnp.zeros(lead, jnp.float32),
+        quar_acc=jnp.zeros(lead, jnp.float32))
+
+
+def _tau_of(k: DefenseKnobs, ds: DefenseState) -> jax.Array:
+    """The round's threshold: q * qest once seeded, tau0 while cold,
+    the static tau on adapt == 0 arms."""
+    return jnp.where(k.adapt > 0,
+                     jnp.where(ds.qest > 0, k.q * ds.qest, k.tau0),
+                     k.tau_s)
+
+
+def defense_comm(k: DefenseKnobs, ds: DefenseState, partner: jax.Array,
+                 involved: jax.Array, nrm: jax.Array
+                 ) -> tuple[jax.Array, jax.Array, DefenseState]:
+    """One comm step of the control loop (unbatched; vmap for worlds).
+
+    partner/involved/nrm are (n,) per-reader rows (nrm the delta norm of
+    the exchange, 0 on idle rows).  Returns the (n,) f32 mscale for the
+    fused channel kernel, the (n,) bool quarantine mask, and the updated
+    state.  Neutral knobs reproduce the static trim mscale bitwise.
+
+    Order-invariance within a coalesced batch: the engine path applies
+    this once per FUSED batch where the reference path applies it once
+    per event — equivalent because a batch merges only disjoint
+    matchings, so each reader row (and its trust entry) is touched by at
+    most one event per batch and the row updates commute.
+    """
+    idx = jnp.arange(partner.shape[0])
+    tau = _tau_of(k, ds)
+    accept = nrm <= tau
+    tr = ds.trust[idx, partner]
+    quar = (tr < k.floor) & involved
+    mscale = (accept & ~quar).astype(jnp.float32)
+    # trust EMA on involved edges; quarantined edges observe nothing (the
+    # exchange was suppressed) and instead heal toward re-admission.
+    # The margin splits rejections into BORDERLINE (tau < nrm <= margin *
+    # tau: honest tail norms, transient growth) and GROSS (attacks, orders
+    # of magnitude out).  Conviction counts only gross violations — an
+    # honest edge that stops averaging only drifts further (rejection is
+    # self-reinforcing), so borderline rejections must never feed the
+    # conviction loop.
+    fine = nrm <= k.margin * tau
+    obs = fine.astype(jnp.float32)
+    upd = jnp.where(quar, tr + k.heal * (1.0 - tr),
+                    (1.0 - k.rho) * tr + k.rho * obs)
+    trust = ds.trust.at[idx, partner].set(jnp.where(involved, upd, tr))
+    # norm record for the quantile estimator: every admitted NON-GROSS
+    # exchange, accepted or borderline-rejected.  Borderline rejections
+    # must count — recording only accepted norms lets a tight tau shrink
+    # its own estimator, a one-way ratchet ending in wholesale rejection
+    # of honest reads.  Gross violations must NOT count — the per-round
+    # quantile is taken over the workers involved that round, and a
+    # sparse round dominated by an attacked edge would hand a scale-1e3
+    # norm straight to the estimator.  Quarantined reads are excluded
+    # (their edge is already convicted), as are idle rows (self-read ->
+    # nrm 0).
+    rec = involved & ~quar & fine & (nrm > 0)
+    return mscale, quar, ds._replace(
+        trust=trust,
+        lastn=jnp.where(rec, nrm, ds.lastn),
+        lastv=ds.lastv | rec)
+
+
+def defense_absorb(ds: DefenseState, rej: jax.Array, quar: jax.Array,
+                   involved: jax.Array) -> DefenseState:
+    """Fold the kernel's per-event rejection mask (mscale == 0) into the
+    round counters; quarantine-induced zeros are counted separately."""
+    rejn = jnp.sum(jnp.where(involved & ~quar, rej, 0.0))
+    return ds._replace(rej_acc=ds.rej_acc + rejn,
+                       quar_acc=ds.quar_acc
+                       + jnp.sum(quar.astype(jnp.float32)))
+
+
+def defense_grad(k: DefenseKnobs, ds: DefenseState
+                 ) -> tuple[DefenseState, tuple]:
+    """The gradient-tick controller update (unbatched; vmap for worlds).
+
+    Folds the round's admitted norms into the quantile EMA and resets the
+    per-round records.  Returns the new state and the (tau, rejections,
+    quarantined) trace row — tau is the threshold that was IN EFFECT this
+    round.  Learns only from strictly positive norms, so an all-idle
+    round leaves the estimate untouched and a cold estimator cannot lock
+    itself at tau = 0.
+    """
+    n = ds.lastn.shape[0]
+    tau = _tau_of(k, ds)
+    s = jnp.sort(jnp.where(ds.lastv, ds.lastn, jnp.inf))
+    m = jnp.sum(ds.lastv.astype(jnp.int32))
+    iq = jnp.clip(jnp.ceil(k.p * m.astype(jnp.float32)).astype(jnp.int32)
+                  - 1, 0, n - 1)
+    quant = s[iq]
+    upd = (m > 0) & (k.adapt > 0) & jnp.isfinite(quant)
+    seeded = jnp.where(ds.qest > 0,
+                       (1.0 - k.beta) * ds.qest + k.beta * quant, quant)
+    # pressure valve against the low-side freeze: a round that rejected
+    # exchanges yet recorded NOTHING means every admitted read was gross —
+    # with a minority-Byzantine channel that is a miscalibrated tau (e.g.
+    # seeded from a degenerate near-zero consensus), not an attack, so
+    # grow the estimate by the margin factor until honest norms land back
+    # inside the recordable band.  An attacker would need to dominate
+    # nearly every round to ratchet tau upward through this path, and any
+    # honest admission immediately resumes EMA tracking.
+    starve = (m == 0) & (k.adapt > 0) & (ds.qest > 0) & (ds.rej_acc > 0)
+    grown = jnp.where(starve, ds.qest * k.margin, ds.qest)
+    out = (tau, ds.rej_acc, ds.quar_acc)
+    return ds._replace(qest=jnp.where(upd, seeded, grown),
+                       lastn=jnp.zeros_like(ds.lastn),
+                       lastv=jnp.zeros_like(ds.lastv),
+                       rej_acc=jnp.zeros_like(ds.rej_acc),
+                       quar_acc=jnp.zeros_like(ds.quar_acc)), out

@@ -172,17 +172,34 @@ class FlatGossipEngine:
 
     def channel_batch_worlds(self, bx: jax.Array, bxt: jax.Array,
                              xp: jax.Array, corrupt: jax.Array,
-                             dt_next: jax.Array, pw
+                             dt_next: jax.Array, pw, taus=None
                              ) -> tuple[jax.Array, jax.Array]:
         """World-batched channel group: pre-gathered (B, W, D) partner
         values, (B, W) corrupt offsets, per-world dynamics; the engine's
-        robust rule derives the (B, W) mscale in one fused reduce."""
+        robust rule derives the (B, W) mscale in one fused reduce.  When
+        ``taus`` (a traced (B,) threshold array) is given it replaces the
+        static ``robust_clip`` per world — tau = inf arms degenerate
+        bitwise to the plain m-term for finite deltas (DESIGN.md §11)."""
         eta, alpha, alpha_t = pw
-        mscale = self._mscale(bx, xp, corrupt, axes=2)
+        mscale = self._mscale(bx, xp, corrupt, axes=2, taus=taus)
         return channel_event_worlds(bx, bxt, xp, corrupt, mscale, dt_next,
                                     eta, alpha, alpha_t,
                                     clip=self._coord_clip(),
                                     backend=self.backend)
+
+    def channel_batch_worlds_scaled(self, bx: jax.Array, bxt: jax.Array,
+                                    xp: jax.Array, corrupt: jax.Array,
+                                    mscale: jax.Array, dt_next: jax.Array,
+                                    pw) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+        """World-batched channel group with an EXTERNAL (B, W) mscale (the
+        self-healing defense derives it from adaptive tau + quarantine);
+        also returns the kernel's (B, W) rejection mask for the trust
+        loop."""
+        eta, alpha, alpha_t = pw
+        return channel_event_worlds(bx, bxt, xp, corrupt, mscale, dt_next,
+                                    eta, alpha, alpha_t, clip=None,
+                                    want_rej=True, backend=self.backend)
 
     def ring_init_worlds(self, bx: jax.Array, horizon: int) -> jax.Array:
         """(B, H, W, D) per-world snapshot rings seeded with ``bx``."""
@@ -204,25 +221,43 @@ class FlatGossipEngine:
     def _coord_clip(self) -> float | None:
         return self.robust_clip if self.robust_rule == "coord" else None
 
-    def _norm_scale(self, nrm: jax.Array) -> jax.Array:
+    def _norm_scale(self, nrm: jax.Array, taus=None) -> jax.Array:
         """Robust scale from the delta norm (trim rejection or norm clip);
-        honest/accepted deltas get exactly 1.0 (a bitwise no-op)."""
-        tau = self.robust_clip
+        honest/accepted deltas get exactly 1.0 (a bitwise no-op).  ``taus``
+        (a traced per-world (B,) array) overrides the static threshold —
+        tau = inf accepts every finite delta."""
+        if taus is None:
+            tau = self.robust_clip
+        else:
+            tau = jnp.asarray(taus, jnp.float32)
+            tau = jnp.reshape(tau, tau.shape + (1,) * (nrm.ndim - tau.ndim))
         if self.robust_rule == "trim":
             return (nrm <= tau).astype(jnp.float32)
         return jnp.minimum(1.0, tau / jnp.maximum(nrm, 1e-30)
                            ).astype(jnp.float32)
 
-    def _mscale(self, bx: jax.Array, xp: jax.Array, corrupt: jax.Array,
-                axes) -> jax.Array:
-        """Per-worker robust scale — one fused reduce over the raw delta
-        (the norm never materializes an extra state-sized buffer)."""
-        if self.robust_clip is None or self.robust_rule == "coord":
-            return jnp.ones(corrupt.shape, jnp.float32)
+    def delta_norms(self, bx: jax.Array, xp: jax.Array, corrupt: jax.Array,
+                    axes) -> jax.Array:
+        """f32 L2 norms of the corrupted channel deltas — one fused reduce
+        (the same one ``_mscale`` runs; the defense path needs the raw
+        norms for its quantile tracker)."""
         cadv = (1.0 + jnp.asarray(corrupt, jnp.float32)).astype(bx.dtype)
         cadv = jnp.reshape(cadv, cadv.shape + (1,) * (bx.ndim - cadv.ndim))
         m32 = (bx - cadv * xp).astype(jnp.float32)
-        return self._norm_scale(jnp.sqrt(jnp.sum(m32 * m32, axis=axes)))
+        return jnp.sqrt(jnp.sum(m32 * m32, axis=axes))
+
+    def _mscale(self, bx: jax.Array, xp: jax.Array, corrupt: jax.Array,
+                axes, taus=None) -> jax.Array:
+        """Per-worker robust scale — one fused reduce over the raw delta
+        (the norm never materializes an extra state-sized buffer)."""
+        if taus is None and (self.robust_clip is None
+                             or self.robust_rule == "coord"):
+            return jnp.ones(corrupt.shape, jnp.float32)
+        if taus is not None and self.robust_rule == "coord":
+            raise ValueError("per-world taus require a norm rule "
+                             "('trim' or 'clip'), not 'coord'")
+        return self._norm_scale(self.delta_norms(bx, xp, corrupt, axes),
+                                taus=taus)
 
     def channel_batch(self, bx: jax.Array, bxt: jax.Array, xp: jax.Array,
                       corrupt: jax.Array, dt_next: jax.Array
@@ -240,6 +275,20 @@ class FlatGossipEngine:
                                      alpha_t=p.alpha_tilde,
                                      clip=self._coord_clip(),
                                      backend=self.backend)
+
+    def channel_batch_scaled(self, bx: jax.Array, bxt: jax.Array,
+                             xp: jax.Array, corrupt: jax.Array,
+                             mscale: jax.Array, dt_next: jax.Array
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Serial channel group with an EXTERNAL (W,) mscale (the
+        self-healing defense derives it from adaptive tau + quarantine);
+        also returns the kernel's (W,) rejection mask for the trust
+        loop."""
+        p = self.params
+        return channel_event_stacked(bx, bxt, xp, corrupt, mscale, dt_next,
+                                     eta=p.eta, alpha=p.alpha,
+                                     alpha_t=p.alpha_tilde, clip=None,
+                                     want_rej=True, backend=self.backend)
 
     def channel_batch_local(self, bx: jax.Array, bxt: jax.Array,
                             xp: jax.Array, corrupt, dt_next

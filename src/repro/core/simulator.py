@@ -61,6 +61,8 @@ import numpy as np
 from .a2cid2 import (A2CiD2Params, apply_mixing, consensus_distance,
                      matched_p2p_update, worker_mean)
 from .channel import CORRUPT_KEY, STALE_KEY
+from .defense import (DefenseTrace, defense_absorb, defense_comm,
+                      defense_grad, defense_init, knobs_single, knobs_worlds)
 from .engine import FlatGossipEngine
 from .events import Schedule, coalesce_schedule
 from .flatbuf import FlatLayout
@@ -92,6 +94,10 @@ class SimTrace(NamedTuple):
     loss: jax.Array               # (rounds,) mean worker loss
     consensus: jax.Array          # (rounds,) ||pi x||^2 / n
     mean_param_norm: jax.Array    # (rounds,)
+    # control-loop trace (defense.DefenseTrace) on the self-healing
+    # replays, None elsewhere — a defaulted tail field so every existing
+    # 3-tuple construction/unpacking site stays valid
+    defense: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -309,6 +315,96 @@ class Simulator:
     _run_channel_reference_jit, _run_channel_reference_dnt = _jit_pair(
         _run_channel_reference_impl, static=(0, 3))
 
+    def _round_defense(self, horizon: int, dk, carry, round_sched):
+        """Defense twin of ``_round_channel``: defense_comm runs per EVENT
+        here where the engine path runs it per fused batch — equivalent
+        because a batch merges only disjoint matchings (each reader row
+        and its trust entry sees at most one event per batch, so the row
+        updates commute; DESIGN.md §12)."""
+        x, x_tilde, t_last, ring, key, ds = carry
+        (partners, times, mask, src_slots, corrupts, grad_times, grad_scale,
+         alive, ring_pos) = round_sched
+        alpha = jnp.asarray(self.params.alpha)
+        alpha_t = jnp.asarray(self.params.alpha_tilde)
+        idx = jnp.arange(t_last.shape[0])
+
+        def comm_event(carry, event):
+            x, xt, tl, ds = carry
+            partner, time, msk, src_slot, corrupt = event
+            involved = (partner != idx) & msk
+            dt = jnp.where(involved, time - tl, 0.0)
+            x, xt = apply_mixing(x, xt, self.params.eta, dt)
+            tl = jnp.where(involved, time, tl)
+            flat_x, treedef = jax.tree_util.tree_flatten(x)
+            ring_leaves = treedef.flatten_up_to(ring) if horizon \
+                else [None] * len(flat_x)
+            xp = treedef.unflatten([
+                self._partner_leaf(a, ra, partner, src_slot, horizon)
+                for a, ra in zip(flat_x, ring_leaves)])
+            nrm = self._delta_norms_tree(x, xp, corrupt)
+            mscale, quar, ds = defense_comm(dk, ds, partner, involved, nrm)
+            x, xt = self._channel_p2p_scaled(x, xt, xp, corrupt, mscale,
+                                             alpha, alpha_t)
+            # the kernel's rejection output IS (mscale == 0) — provably,
+            # so the reference folds the same mask into the counters
+            ds = defense_absorb(ds, (mscale == 0.0).astype(jnp.float32),
+                                quar, involved)
+            return (x, xt, tl, ds), None
+
+        (x, x_tilde, t_last, ds), _ = jax.lax.scan(
+            comm_event, (x, x_tilde, t_last, ds),
+            (partners, times, mask, src_slots, corrupts))
+
+        dt = jnp.where(alive, grad_times - t_last, 0.0)
+        x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
+        n = grad_times.shape[0]
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        losses, grads = jax.vmap(self.grad_fn)(x, keys, jnp.arange(n))
+
+        def upd(p, g):
+            s = jnp.reshape(grad_scale, grad_scale.shape
+                            + (1,) * (g.ndim - 1)).astype(g.dtype)
+            return p - self.gamma * (s * g)
+
+        x = jax.tree.map(upd, x, grads)
+        x_tilde = jax.tree.map(upd, x_tilde, grads)
+        ds, (tau, rejn, quarn) = defense_grad(dk, ds)
+        if horizon:
+            ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
+                                ring, x)
+        t_last = jnp.where(alive, grad_times, t_last)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "consensus": consensus_distance(x),
+            "mean_param_norm": sum(jnp.sum(m ** 2) for m in
+                                   jax.tree.leaves(worker_mean(x))),
+            "tau": tau, "rejections": rejn, "quarantined": quarn,
+        }
+        return (x, x_tilde, t_last, ring, key, ds), metrics
+
+    def _run_defense_reference_impl(self, state: SimState, dk,
+                                    schedule_arrays, horizon: int
+                                    ) -> tuple[SimState, SimTrace]:
+        ring = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), state.x) \
+            if horizon else None
+        n = jnp.asarray(state.t_last).shape[0]
+        carry = (state.x, state.x_tilde, state.t_last, ring, state.key,
+                 defense_init(n))
+        carry, metrics = jax.lax.scan(
+            partial(self._round_defense, horizon, dk), carry,
+            schedule_arrays)
+        x, x_tilde, t_last, _, key, _ = carry
+        return SimState(x, x_tilde, t_last, key), \
+            SimTrace(metrics["loss"], metrics["consensus"],
+                     metrics["mean_param_norm"],
+                     DefenseTrace(metrics["tau"], metrics["rejections"],
+                                  metrics["quarantined"]))
+
+    _run_defense_reference_jit, _run_defense_reference_dnt = _jit_pair(
+        _run_defense_reference_impl, static=(0, 4))
+
     def _channel_step(self, engine: FlatGossipEngine, n: int, horizon: int,
                       carry, xs):
         """Channel twin of ``_engine_step``: fused channel batches with
@@ -372,6 +468,88 @@ class Simulator:
 
     _run_channel_jit, _run_channel_dnt = _jit_pair(
         _run_channel_impl, static=(0, 3))
+
+    # ------------------------------------------- self-healing replays
+    # (DESIGN.md §12) The defense flavors are the channel flavors with the
+    # control loop threaded through the scan carry: per comm step the
+    # delta norms feed defense_comm (adaptive tau + trust/quarantine ->
+    # the external mscale), the fused kernel emits its rejection mask back
+    # into the trust counters, and each gradient tick runs defense_grad
+    # (quantile EMA update + trace row).  NEUTRAL knobs reproduce the
+    # static trim arithmetic bitwise, so one trace serves the whole
+    # none-vs-static-vs-adaptive grid.
+
+    def _defense_step(self, engine: FlatGossipEngine, n: int, horizon: int,
+                      dk, carry, xs):
+        """Defense twin of ``_channel_step``: the control loop rides the
+        carry as a ``defense.DefenseState``."""
+        partner, dt_nxt, is_grad, gscale, corrupt, src_slot, ring_pos = xs
+
+        def comm(args):
+            bx, bxt, ring, key, ds = args
+            if horizon:
+                xp = engine.partner_values(ring, bx, partner, src_slot)
+            else:
+                xp = jnp.take(bx, partner, axis=0)
+            nrm = engine.delta_norms(bx, xp, corrupt, axes=1)
+            involved = partner != jnp.arange(n)
+            mscale, quar, ds = defense_comm(dk, ds, partner, involved, nrm)
+            bx, bxt, rej = engine.channel_batch_scaled(bx, bxt, xp, corrupt,
+                                                       mscale, dt_nxt)
+            ds = defense_absorb(ds, rej, quar, involved)
+            z = jnp.zeros((), jnp.float32)
+            return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
+
+        def grad(args):
+            bx, bxt, ring, key, ds = args
+            key, sub = jax.random.split(key)
+            keys = jax.random.split(sub, n)
+            losses, grads = jax.vmap(self.grad_fn)(engine.unpack(bx), keys,
+                                                   jnp.arange(n))
+            g = engine.pack(grads)
+            g = gscale[:, None].astype(g.dtype) * g
+            bx = bx - self.gamma * g
+            bxt = bxt - self.gamma * g
+            mean = jnp.mean(bx, axis=0, keepdims=True)
+            loss = jnp.mean(losses).astype(jnp.float32)
+            consensus = (jnp.sum((bx - mean) ** 2) / n).astype(jnp.float32)
+            mean_norm = jnp.sum(mean ** 2).astype(jnp.float32)
+            ds, (tau, rejn, quarn) = defense_grad(dk, ds)
+            if horizon:
+                ring = engine.ring_push(ring, bx, ring_pos)
+            bx, bxt = engine.mix(bx, bxt, dt_nxt)
+            return (bx, bxt, ring, key, ds), (loss, consensus, mean_norm,
+                                              tau, rejn, quarn)
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    def _run_defense_impl(self, state: SimState, dk, stream_arrays,
+                          horizon: int) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final, corrupt, src_slot, ring_pos) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True,
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
+        bx = engine.pack(state.x)
+        bxt = engine.pack(state.x_tilde)
+        bx, bxt = engine.mix(bx, bxt, prologue)
+        n = prologue.shape[0]
+        ring = engine.ring_init(bx, horizon) if horizon else None
+        (bx, bxt, ring, key, _), ys = jax.lax.scan(
+            partial(self._defense_step, engine, n, horizon, dk),
+            (bx, bxt, ring, state.key, defense_init(n)),
+            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
+             ring_pos))
+        loss, consensus, mean_norm, tau, rejn, quarn = ys
+        final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
+        return final, SimTrace(
+            loss[grad_pos], consensus[grad_pos], mean_norm[grad_pos],
+            DefenseTrace(tau[grad_pos], rejn[grad_pos], quarn[grad_pos]))
+
+    _run_defense_jit, _run_defense_dnt = _jit_pair(
+        _run_defense_impl, static=(0, 4))
 
     @staticmethod
     def _channel_extras(extras: dict, shape, horizon_from: str = STALE_KEY):
@@ -505,12 +683,20 @@ class Simulator:
 
         Sugar for ``run_schedule(state, world.compile(rounds, seed))`` —
         the scenario description stays first-class up to the replay call.
+        A ``world.defense`` rides along: its comm controller was already
+        applied by ``compile``, its in-scan loop engages here.
         """
         return self.run_schedule(state, world.compile(rounds, seed=seed),
-                                 engine=engine)
+                                 engine=engine,
+                                 defense=getattr(world, "defense", None))
 
     def run_schedule(self, state: SimState, sched: Schedule, *,
-                     engine: bool = True):
+                     engine: bool = True, defense=None):
+        active = defense is not None and defense.is_active
+        if active and self.robust_rule != "trim":
+            raise ValueError("the self-healing defense needs "
+                             "robust_rule='trim' (its accept/reject loop "
+                             f"is binary), got {self.robust_rule!r}")
         if engine:
             try:
                 # layout build validates an exact buffer dtype exists
@@ -518,12 +704,19 @@ class Simulator:
             except TypeError:
                 engine = False  # e.g. int leaves: per-event path handles
         # channel worlds (stale/corrupt extras) and robust aggregation run
-        # on the channel twins of both paths; everything else stays on the
-        # original replays bit-for-bit
+        # on the channel twins of both paths; an active defense selects
+        # the self-healing twins; everything else stays on the original
+        # replays bit-for-bit
         extras = sched.extras_dict()
         channel = (STALE_KEY in extras or CORRUPT_KEY in extras
                    or self.robust_clip is not None)
         if engine:
+            if active:
+                arrays, horizon = self.channel_coalesced_arrays(state, sched)
+                dk = knobs_single(defense, self.robust_clip)
+                fn = self._run_defense_dnt if self.donate \
+                    else self._run_defense_jit
+                return fn(state, dk, arrays, horizon)
             if channel:
                 arrays, horizon = self.channel_coalesced_arrays(state, sched)
                 fn = self._run_channel_dnt if self.donate \
@@ -531,6 +724,12 @@ class Simulator:
                 return fn(state, arrays, horizon)
             return self.run_coalesced(state, self.coalesced_arrays(state,
                                                                    sched))
+        if active:
+            arrays, horizon = self.channel_reference_arrays(sched)
+            dk = knobs_single(defense, self.robust_clip)
+            fn = self._run_defense_reference_dnt if self.donate \
+                else self._run_defense_reference_jit
+            return fn(state, dk, arrays, horizon)
         if channel:
             arrays, horizon = self.channel_reference_arrays(sched)
             fn = self._run_channel_reference_dnt if self.donate \
@@ -582,10 +781,13 @@ class Simulator:
             key=jnp.stack([s.key for s in states]))
 
     def _grad_worlds(self, engine: FlatGossipEngine, n: int, bx, bxt, key,
-                     gscale):
+                     gscale, gammas):
         """Shared gradient tick of the batched engine flavors: per-world
         key streams (identical to each serial replay's), doubly-vmapped
-        grad_fn, per-world metrics."""
+        grad_fn, per-world metrics.  ``gammas`` is the (B,) per-world
+        step-size array (built at default precision, so the cast to the
+        buffer dtype reproduces the serial weak-scalar multiply
+        bitwise)."""
         ks = jax.vmap(jax.random.split)(key)
         key, sub = ks[:, 0], ks[:, 1]
         wkeys = jax.vmap(lambda k: jax.random.split(k, n))(sub)
@@ -594,8 +796,9 @@ class Simulator:
             engine.unpack_worlds(bx), wkeys, jnp.arange(n))
         g = engine.pack_worlds(grads)
         g = gscale[:, :, None].astype(g.dtype) * g
-        bx = bx - self.gamma * g
-        bxt = bxt - self.gamma * g
+        gs = jnp.asarray(gammas).astype(g.dtype)[:, None, None]
+        bx = bx - gs * g
+        bxt = bxt - gs * g
         mean = jnp.mean(bx, axis=1, keepdims=True)
         loss = jnp.mean(losses, axis=1).astype(jnp.float32)
         consensus = (jnp.sum((bx - mean) ** 2, axis=(1, 2)) / n
@@ -603,7 +806,8 @@ class Simulator:
         mean_norm = jnp.sum(mean ** 2, axis=(1, 2)).astype(jnp.float32)
         return bx, bxt, key, (loss, consensus, mean_norm)
 
-    def _worlds_step(self, engine: FlatGossipEngine, n: int, pw, carry, xs):
+    def _worlds_step(self, engine: FlatGossipEngine, n: int, pw, gammas,
+                     carry, xs):
         """Batched twin of ``_engine_step``; ``is_grad`` is shared across
         the batch (stream alignment), so the step keeps one lax.cond."""
         partner, dt_nxt, is_grad, gscale = xs
@@ -617,13 +821,13 @@ class Simulator:
         def grad(args):
             bx, bxt, key = args
             bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
-                                                      key, gscale)
+                                                      key, gscale, gammas)
             bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
             return (bx, bxt, key), metrics
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
-    def _run_worlds_impl(self, state: SimState, pw, stream_arrays
+    def _run_worlds_impl(self, state: SimState, pw, gammas, stream_arrays
                          ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final) = stream_arrays
@@ -635,7 +839,7 @@ class Simulator:
         bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
         n = prologue.shape[1]
         (bx, bxt, key), ys = jax.lax.scan(
-            partial(self._worlds_step, engine, n, pw),
+            partial(self._worlds_step, engine, n, pw, gammas),
             (bx, bxt, state.key),
             (partners, dt_next, is_grad, grad_scale))
         loss, consensus, mean_norm = ys
@@ -648,9 +852,10 @@ class Simulator:
     _run_worlds_jit, _run_worlds_dnt = _jit_pair(_run_worlds_impl)
 
     def _worlds_channel_step(self, engine: FlatGossipEngine, n: int,
-                             horizon: int, pw, carry, xs):
+                             horizon: int, pw, gammas, taus, carry, xs):
         """Batched twin of ``_channel_step``: per-world ring reads, one
-        shared ring rotation slot per gradient tick."""
+        shared ring rotation slot per gradient tick.  ``taus`` (None or a
+        traced (B,) array) is the lifted per-world robust threshold."""
         (partner, dt_nxt, is_grad, gscale, corrupt, src_slot,
          ring_pos) = xs
 
@@ -662,14 +867,14 @@ class Simulator:
             else:
                 xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
             bx, bxt = engine.channel_batch_worlds(bx, bxt, xp, corrupt,
-                                                  dt_nxt, pw)
+                                                  dt_nxt, pw, taus)
             z = jnp.zeros((partner.shape[0],), jnp.float32)
             return (bx, bxt, ring, key), (z, z, z)
 
         def grad(args):
             bx, bxt, ring, key = args
             bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
-                                                      key, gscale)
+                                                      key, gscale, gammas)
             if horizon:
                 ring = engine.ring_push_worlds(ring, bx, ring_pos)
             bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
@@ -677,8 +882,9 @@ class Simulator:
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
-    def _run_worlds_channel_impl(self, state: SimState, pw, stream_arrays,
-                                 horizon: int) -> tuple[SimState, SimTrace]:
+    def _run_worlds_channel_impl(self, state: SimState, pw, gammas, taus,
+                                 stream_arrays, horizon: int
+                                 ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final, corrupt, src_slot, ring_pos) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
@@ -692,7 +898,8 @@ class Simulator:
         n = prologue.shape[1]
         ring = engine.ring_init_worlds(bx, horizon) if horizon else None
         (bx, bxt, ring, key), ys = jax.lax.scan(
-            partial(self._worlds_channel_step, engine, n, horizon, pw),
+            partial(self._worlds_channel_step, engine, n, horizon, pw,
+                    gammas, taus),
             (bx, bxt, ring, state.key),
             (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
              ring_pos))
@@ -703,7 +910,77 @@ class Simulator:
                                mean_norm[grad_pos].T)
 
     _run_worlds_channel_jit, _run_worlds_channel_dnt = _jit_pair(
-        _run_worlds_channel_impl, static=(0, 4))
+        _run_worlds_channel_impl, static=(0, 6))
+
+    def _worlds_defense_step(self, engine: FlatGossipEngine, n: int,
+                             horizon: int, pw, gammas, dk, carry, xs):
+        """Batched twin of ``_defense_step``: the control loop vmaps over
+        the world axis (``dk`` a DefenseKnobs of (B,) arrays — every arm,
+        including 'no defense' lowered to the neutral knobs, shares this
+        one trace)."""
+        (partner, dt_nxt, is_grad, gscale, corrupt, src_slot,
+         ring_pos) = xs
+
+        def comm(args):
+            bx, bxt, ring, key, ds = args
+            if horizon:
+                xp = engine.partner_values_worlds(ring, bx, partner,
+                                                  src_slot)
+            else:
+                xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
+            nrm = engine.delta_norms(bx, xp, corrupt, axes=2)
+            involved = partner != jnp.arange(n)[None, :]
+            mscale, quar, ds = jax.vmap(defense_comm)(dk, ds, partner,
+                                                      involved, nrm)
+            bx, bxt, rej = engine.channel_batch_worlds_scaled(
+                bx, bxt, xp, corrupt, mscale, dt_nxt, pw)
+            ds = jax.vmap(defense_absorb)(ds, rej, quar, involved)
+            z = jnp.zeros((partner.shape[0],), jnp.float32)
+            return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
+
+        def grad(args):
+            bx, bxt, ring, key, ds = args
+            bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
+                                                      key, gscale, gammas)
+            ds, (tau, rejn, quarn) = jax.vmap(defense_grad)(dk, ds)
+            if horizon:
+                ring = engine.ring_push_worlds(ring, bx, ring_pos)
+            bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
+            return (bx, bxt, ring, key, ds), metrics + (tau, rejn, quarn)
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    def _run_worlds_defense_impl(self, state: SimState, pw, gammas, dk,
+                                 stream_arrays, horizon: int
+                                 ) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final, corrupt, src_slot, ring_pos) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True, worlds=True,
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
+        bx = engine.pack_worlds(state.x)
+        bxt = engine.pack_worlds(state.x_tilde)
+        bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
+        B, n = prologue.shape
+        ring = engine.ring_init_worlds(bx, horizon) if horizon else None
+        (bx, bxt, ring, key, _), ys = jax.lax.scan(
+            partial(self._worlds_defense_step, engine, n, horizon, pw,
+                    gammas, dk),
+            (bx, bxt, ring, state.key, defense_init(n, batch=B)),
+            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
+             ring_pos))
+        loss, consensus, mean_norm, tau, rejn, quarn = ys
+        final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
+                         t_final, key)
+        return final, SimTrace(
+            loss[grad_pos].T, consensus[grad_pos].T, mean_norm[grad_pos].T,
+            DefenseTrace(tau[grad_pos].T, rejn[grad_pos].T,
+                         quarn[grad_pos].T))
+
+    _run_worlds_defense_jit, _run_worlds_defense_dnt = _jit_pair(
+        _run_worlds_defense_impl, static=(0, 6))
 
     # --- batched per-event reference flavor: the serial round body with
     # dynamic per-world params, vmapped over the world axis inside the
@@ -745,9 +1022,13 @@ class Simulator:
         return (treedef.unflatten([o[0] for o in out]),
                 treedef.unflatten([o[1] for o in out]))
 
-    def _channel_p2p_dyn(self, x, x_tilde, xp, corrupt, alpha, alpha_t):
+    def _channel_p2p_dyn(self, x, x_tilde, xp, corrupt, alpha, alpha_t,
+                         tau=None):
         """``_channel_p2p`` with traced per-world alphas (robust rule and
-        clip stay static — they are replay knobs, not world data)."""
+        clip stay static — they are replay knobs, not world data).  A
+        traced per-world ``tau`` overrides the static threshold (the
+        lifted ``robust_clips`` axis; norm rules only): tau = inf arms
+        degenerate bitwise to the plain m-term for finite deltas."""
         clip = self.robust_clip
         rule = self.robust_rule
         flat_x, treedef = jax.tree_util.tree_flatten(x)
@@ -759,16 +1040,17 @@ class Simulator:
             return jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
 
         mscale = None
-        if clip is not None and rule != "coord":
+        if tau is not None or (clip is not None and rule != "coord"):
             nrm2 = sum(
                 jnp.sum(((a - cadv_for(a) * b).astype(jnp.float32)) ** 2,
                         axis=tuple(range(1, a.ndim)))
                 for a, b in zip(flat_x, flat_p))
             nrm = jnp.sqrt(nrm2)
+            tval = tau if tau is not None else clip
             if rule == "trim":
-                mscale = (nrm <= clip).astype(jnp.float32)
+                mscale = (nrm <= tval).astype(jnp.float32)
             else:
-                mscale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-30))
+                mscale = jnp.minimum(1.0, tval / jnp.maximum(nrm, 1e-30))
 
         def upd(a, at, b):
             m = a - cadv_for(a) * b
@@ -784,9 +1066,53 @@ class Simulator:
         return (treedef.unflatten([o[0] for o in out]),
                 treedef.unflatten([o[1] for o in out]))
 
-    def _grad_world_ref(self, x, x_tilde, t_last, key, eta, grad_times,
-                        grad_scale, alive):
-        """Shared gradient tail of the per-world reference round."""
+    @staticmethod
+    def _delta_norms_tree(x, xp, corrupt):
+        """Pytree twin of ``engine.delta_norms``: (n,) f32 L2 norms of the
+        corrupted channel deltas (per-leaf f32 square-sums, the same
+        arithmetic ``_channel_p2p_dyn`` runs for its norm rules)."""
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_p = treedef.flatten_up_to(xp)
+
+        def cadv_for(a):
+            c = (1.0 + corrupt).astype(a.dtype)
+            return jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
+
+        nrm2 = sum(
+            jnp.sum(((a - cadv_for(a) * b).astype(jnp.float32)) ** 2,
+                    axis=tuple(range(1, a.ndim)))
+            for a, b in zip(flat_x, flat_p))
+        return jnp.sqrt(nrm2)
+
+    @staticmethod
+    def _channel_p2p_scaled(x, x_tilde, xp, corrupt, mscale, alpha,
+                            alpha_t):
+        """Channel p2p with an EXTERNAL (n,) mscale (the defense loop's
+        adaptive-tau + quarantine decision) — the reference twin of
+        ``engine.channel_batch_scaled``'s m-term."""
+        flat_x, treedef = jax.tree_util.tree_flatten(x)
+        flat_t = treedef.flatten_up_to(x_tilde)
+        flat_p = treedef.flatten_up_to(xp)
+
+        def upd(a, at, b):
+            c = (1.0 + corrupt).astype(a.dtype)
+            c = jnp.reshape(c, c.shape + (1,) * (a.ndim - 1))
+            m = a - c * b
+            s = mscale.astype(a.dtype)
+            m = m * jnp.reshape(s, s.shape + (1,) * (a.ndim - 1))
+            return (a - alpha.astype(a.dtype) * m,
+                    at - alpha_t.astype(a.dtype) * m)
+
+        out = [upd(a, at, b) for a, at, b in zip(flat_x, flat_t, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    def _grad_world_ref(self, x, x_tilde, t_last, key, eta, gamma,
+                        grad_times, grad_scale, alive):
+        """Shared gradient tail of the per-world reference round;
+        ``gamma`` is the traced per-world step size (cast to the leaf
+        dtype — the same bits the serial weak-scalar multiply lands
+        on)."""
         dt = jnp.where(alive, grad_times - t_last, 0.0)
         x, x_tilde = self._mix_dyn(x, x_tilde, eta, dt)
         n = grad_times.shape[0]
@@ -797,7 +1123,7 @@ class Simulator:
         def upd(p, g):
             s = jnp.reshape(grad_scale, grad_scale.shape
                             + (1,) * (g.ndim - 1)).astype(g.dtype)
-            return p - self.gamma * (s * g)
+            return p - gamma.astype(g.dtype) * (s * g)
 
         x = jax.tree.map(upd, x, grads)
         x_tilde = jax.tree.map(upd, x_tilde, grads)
@@ -809,10 +1135,11 @@ class Simulator:
         }
         return x, x_tilde, key, metrics
 
-    def _run_worlds_reference_impl(self, state: SimState, pw, sched_arrays
+    def _run_worlds_reference_impl(self, state: SimState, pw, gammas,
+                                   sched_arrays
                                    ) -> tuple[SimState, SimTrace]:
-        def per_world(x, xt, tl, key, eta, alpha, alphat, partners, times,
-                      mask, grad_times, grad_scale, alive):
+        def per_world(x, xt, tl, key, eta, alpha, alphat, gamma, partners,
+                      times, mask, grad_times, grad_scale, alive):
             idx = jnp.arange(tl.shape[0])
 
             def comm_event(carry, event):
@@ -828,7 +1155,7 @@ class Simulator:
             (x, xt, tl), _ = jax.lax.scan(comm_event, (x, xt, tl),
                                           (partners, times, mask))
             x, xt, key, metrics = self._grad_world_ref(
-                x, xt, tl, key, eta, grad_times, grad_scale, alive)
+                x, xt, tl, key, eta, gamma, grad_times, grad_scale, alive)
             tl = jnp.where(alive, grad_times, tl)
             return (x, xt, tl, key), metrics
 
@@ -836,8 +1163,8 @@ class Simulator:
             x, xt, tl, key = carry
             partners, times, mask, grad_times, grad_scale, alive = xs
             (x, xt, tl, key), metrics = jax.vmap(per_world)(
-                x, xt, tl, key, *pw, partners, times, mask, grad_times,
-                grad_scale, alive)
+                x, xt, tl, key, *pw, gammas, partners, times, mask,
+                grad_times, grad_scale, alive)
             return (x, xt, tl, key), metrics
 
         carry = (state.x, state.x_tilde, state.t_last, state.key)
@@ -851,11 +1178,12 @@ class Simulator:
         _run_worlds_reference_impl)
 
     def _run_worlds_channel_reference_impl(self, state: SimState, pw,
-                                           sched_arrays, horizon: int
+                                           gammas, taus, sched_arrays,
+                                           horizon: int
                                            ) -> tuple[SimState, SimTrace]:
-        def per_world(x, xt, tl, ring, key, eta, alpha, alphat, partners,
-                      times, mask, src_slots, corrupts, grad_times,
-                      grad_scale, alive, ring_pos):
+        def per_world(x, xt, tl, ring, key, eta, alpha, alphat, gamma, tau,
+                      partners, times, mask, src_slots, corrupts,
+                      grad_times, grad_scale, alive, ring_pos):
             idx = jnp.arange(tl.shape[0])
 
             def comm_event(carry, event):
@@ -872,14 +1200,14 @@ class Simulator:
                     self._partner_leaf(a, ra, partner, src_slot, horizon)
                     for a, ra in zip(flat_x, ring_leaves)])
                 x, xt = self._channel_p2p_dyn(x, xt, xp, corrupt, alpha,
-                                              alphat)
+                                              alphat, tau)
                 return (x, xt, tl), None
 
             (x, xt, tl), _ = jax.lax.scan(
                 comm_event, (x, xt, tl),
                 (partners, times, mask, src_slots, corrupts))
             x, xt, key, metrics = self._grad_world_ref(
-                x, xt, tl, key, eta, grad_times, grad_scale, alive)
+                x, xt, tl, key, eta, gamma, grad_times, grad_scale, alive)
             if horizon:
                 ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
                                     ring, x)
@@ -897,9 +1225,9 @@ class Simulator:
              grad_scale, alive, ring_pos) = xs
             out, metrics = jax.vmap(
                 per_world,
-                in_axes=(0,) * 16 + (None,))(
-                x, xt, tl, ring, key, *pw, partners, times, mask,
-                src_slots, corrupts, grad_times, grad_scale, alive,
+                in_axes=(0,) * 18 + (None,))(
+                x, xt, tl, ring, key, *pw, gammas, taus, partners, times,
+                mask, src_slots, corrupts, grad_times, grad_scale, alive,
                 ring_pos)
             return out, metrics
 
@@ -911,7 +1239,85 @@ class Simulator:
                      metrics["mean_param_norm"].T)
 
     _run_worlds_channel_reference_jit, _run_worlds_channel_reference_dnt = \
-        _jit_pair(_run_worlds_channel_reference_impl, static=(0, 4))
+        _jit_pair(_run_worlds_channel_reference_impl, static=(0, 6))
+
+    def _run_worlds_defense_reference_impl(self, state: SimState, pw,
+                                           gammas, dk, sched_arrays,
+                                           horizon: int
+                                           ) -> tuple[SimState, SimTrace]:
+        def per_world(x, xt, tl, ring, key, ds, eta, alpha, alphat, gamma,
+                      dkr, partners, times, mask, src_slots, corrupts,
+                      grad_times, grad_scale, alive, ring_pos):
+            idx = jnp.arange(tl.shape[0])
+
+            def comm_event(carry, event):
+                x, xt, tl, ds = carry
+                partner, time, msk, src_slot, corrupt = event
+                involved = (partner != idx) & msk
+                dt = jnp.where(involved, time - tl, 0.0)
+                x, xt = self._mix_dyn(x, xt, eta, dt)
+                tl = jnp.where(involved, time, tl)
+                flat_x, treedef = jax.tree_util.tree_flatten(x)
+                ring_leaves = treedef.flatten_up_to(ring) if horizon \
+                    else [None] * len(flat_x)
+                xp = treedef.unflatten([
+                    self._partner_leaf(a, ra, partner, src_slot, horizon)
+                    for a, ra in zip(flat_x, ring_leaves)])
+                nrm = self._delta_norms_tree(x, xp, corrupt)
+                mscale, quar, ds = defense_comm(dkr, ds, partner, involved,
+                                                nrm)
+                x, xt = self._channel_p2p_scaled(x, xt, xp, corrupt,
+                                                 mscale, alpha, alphat)
+                ds = defense_absorb(ds,
+                                    (mscale == 0.0).astype(jnp.float32),
+                                    quar, involved)
+                return (x, xt, tl, ds), None
+
+            (x, xt, tl, ds), _ = jax.lax.scan(
+                comm_event, (x, xt, tl, ds),
+                (partners, times, mask, src_slots, corrupts))
+            x, xt, key, metrics = self._grad_world_ref(
+                x, xt, tl, key, eta, gamma, grad_times, grad_scale, alive)
+            ds, (tau, rejn, quarn) = defense_grad(dkr, ds)
+            if horizon:
+                ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
+                                    ring, x)
+            tl = jnp.where(alive, grad_times, tl)
+            metrics = {**metrics, "tau": tau, "rejections": rejn,
+                       "quarantined": quarn}
+            return (x, xt, tl, ring, key, ds), metrics
+
+        ring = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[:, None], (a.shape[0], horizon) + a.shape[1:]),
+            state.x) if horizon else None
+        B, n = jnp.asarray(state.t_last).shape
+
+        def round_fn(carry, xs):
+            x, xt, tl, ring, key, ds = carry
+            (partners, times, mask, src_slots, corrupts, grad_times,
+             grad_scale, alive, ring_pos) = xs
+            out, metrics = jax.vmap(
+                per_world,
+                in_axes=(0,) * 19 + (None,))(
+                x, xt, tl, ring, key, ds, *pw, gammas, dk, partners,
+                times, mask, src_slots, corrupts, grad_times, grad_scale,
+                alive, ring_pos)
+            return out, metrics
+
+        carry = (state.x, state.x_tilde, state.t_last, ring, state.key,
+                 defense_init(n, batch=B))
+        (x, xt, tl, _, key, _), metrics = jax.lax.scan(round_fn, carry,
+                                                       sched_arrays)
+        return SimState(x, xt, tl, key), \
+            SimTrace(metrics["loss"].T, metrics["consensus"].T,
+                     metrics["mean_param_norm"].T,
+                     DefenseTrace(metrics["tau"].T,
+                                  metrics["rejections"].T,
+                                  metrics["quarantined"].T))
+
+    _run_worlds_defense_reference_jit, _run_worlds_defense_reference_dnt = \
+        _jit_pair(_run_worlds_defense_reference_impl, static=(0, 6))
 
     # --- host-side batch compilation + the public entry point
 
@@ -991,7 +1397,8 @@ class Simulator:
                 jnp.asarray(b.grad_scale), jnp.asarray(b.alive),
                 jnp.asarray(ring_pos)), horizon
 
-    def run_worlds(self, states, scheds, *, params=None, engine: bool = True
+    def run_worlds(self, states, scheds, *, params=None, gammas=None,
+                   robust_clips=None, defenses=None, engine: bool = True
                    ) -> tuple[SimState, SimTrace]:
         """Replay B independent worlds in ONE compiled scan.
 
@@ -1004,6 +1411,18 @@ class Simulator:
         params — optional per-world ``A2CiD2Params`` (one per schedule),
           letting baseline and accelerated worlds — and any parameter
           grid — share the ONE trace; default replicates ``self.params``.
+        gammas — optional per-world step sizes (floats; default
+          ``self.gamma``), lifted to a traced (B,) array so a step-size
+          grid shares the trace too.
+        robust_clips — optional per-world robust-trim/clip thresholds
+          (None entries fall back to ``self.robust_clip``, or +inf = the
+          non-robust m-term bitwise), lifted to a traced (B,) array so
+          robust-vs-plain ablations stop forcing a second trace.
+        defenses — optional per-world ``AdaptiveDefense | None`` arms.
+          Any ACTIVE arm routes the whole batch onto the self-healing
+          flavor; inactive arms lower to the neutral knobs, which
+          reproduce their static trim (or plain-channel) arithmetic
+          bitwise — none-vs-static-vs-adaptive is still ONE trace.
 
         Returns the world-batched final state and a SimTrace whose arrays
         are (B, rounds) — row b equals the serial replay of world b.
@@ -1024,32 +1443,75 @@ class Simulator:
             raise ValueError(f"params must have one entry per world "
                              f"({B}), got {len(plist)}")
         pw = self.world_params(plist)
+        glist = list(gammas) if gammas is not None else [self.gamma] * B
+        if len(glist) != B:
+            raise ValueError(f"gammas must have one entry per world "
+                             f"({B}), got {len(glist)}")
+        gw = jnp.asarray([float(g) for g in glist])
+        clist = list(robust_clips) if robust_clips is not None \
+            else [None] * B
+        if len(clist) != B:
+            raise ValueError(f"robust_clips must have one entry per world "
+                             f"({B}), got {len(clist)}")
+        taus_list = [self.robust_clip if c is None else float(c)
+                     for c in clist]
+        any_clip = robust_clips is not None
+        dlist = list(defenses) if defenses is not None else [None] * B
+        if len(dlist) != B:
+            raise ValueError(f"defenses must have one entry per world "
+                             f"({B}), got {len(dlist)}")
+        active = any(d is not None and d.is_active for d in dlist)
+        if (active or any_clip) and self.robust_rule == "coord":
+            raise ValueError("per-world thresholds and the self-healing "
+                             "defense need a norm rule ('trim' or "
+                             "'clip'), not 'coord'")
+        if active and self.robust_rule != "trim":
+            raise ValueError("the self-healing defense needs "
+                             "robust_rule='trim' (its accept/reject loop "
+                             f"is binary), got {self.robust_rule!r}")
         if engine:
             try:
                 FlatLayout.from_pytree(states.x, stacked=True, worlds=True)
             except TypeError:
                 engine = False
-        channel = self.robust_clip is not None or any(
-            STALE_KEY in s.extras_dict() or CORRUPT_KEY in s.extras_dict()
-            for s in scheds)
+        channel = (active or any_clip or self.robust_clip is not None
+                   or any(STALE_KEY in s.extras_dict()
+                          or CORRUPT_KEY in s.extras_dict()
+                          for s in scheds))
+        taus = None
+        if any_clip and not active:
+            taus = jnp.asarray([float("inf") if t is None else t
+                                for t in taus_list], jnp.float32)
         if engine:
+            if active:
+                arrays, horizon = self.worlds_channel_arrays(states, scheds)
+                dk = knobs_worlds(dlist, taus_list)
+                fn = self._run_worlds_defense_dnt if self.donate \
+                    else self._run_worlds_defense_jit
+                return fn(states, pw, gw, dk, arrays, horizon)
             if channel:
                 arrays, horizon = self.worlds_channel_arrays(states, scheds)
                 fn = self._run_worlds_channel_dnt if self.donate \
                     else self._run_worlds_channel_jit
-                return fn(states, pw, arrays, horizon)
+                return fn(states, pw, gw, taus, arrays, horizon)
             fn = self._run_worlds_dnt if self.donate \
                 else self._run_worlds_jit
-            return fn(states, pw,
+            return fn(states, pw, gw,
                       self.worlds_coalesced_arrays(states, scheds))
+        if active:
+            arrays, horizon = self.worlds_channel_reference_arrays(scheds)
+            dk = knobs_worlds(dlist, taus_list)
+            fn = self._run_worlds_defense_reference_dnt if self.donate \
+                else self._run_worlds_defense_reference_jit
+            return fn(states, pw, gw, dk, arrays, horizon)
         if channel:
             arrays, horizon = self.worlds_channel_reference_arrays(scheds)
             fn = self._run_worlds_channel_reference_dnt if self.donate \
                 else self._run_worlds_channel_reference_jit
-            return fn(states, pw, arrays, horizon)
+            return fn(states, pw, gw, taus, arrays, horizon)
         fn = self._run_worlds_reference_dnt if self.donate \
             else self._run_worlds_reference_jit
-        return fn(states, pw, self.worlds_reference_arrays(scheds))
+        return fn(states, pw, gw, self.worlds_reference_arrays(scheds))
 
 
 # --------------------------------------------------------------- AR-SGD ref

@@ -49,6 +49,7 @@ import json
 import numpy as np
 
 from .channel import ChannelModel
+from .defense import AdaptiveDefense
 from .graphs import Graph, TopologyPhase, TopologySchedule
 
 # rng-stream tag for churn draws — independent of the schedule's main stream
@@ -422,6 +423,7 @@ class World:
     comms_per_grad: float = 1.0
     jitter_grad_times: bool = True
     t_offset: float = 0.0
+    defense: AdaptiveDefense | None = None
 
     def __post_init__(self):
         if not isinstance(self.topology, (Graph, TopologySchedule)):
@@ -502,6 +504,10 @@ class World:
             self.channel.validate_for(
                 n, [frozenset((min(i, j), max(i, j)) for i, j in g.edges)
                     for g in graphs])
+        if self.defense is not None and not isinstance(self.defense,
+                                                       AdaptiveDefense):
+            raise ValueError("defense must be an AdaptiveDefense, "
+                             f"got {type(self.defense).__name__}")
 
     # ------------------------------------------------------------ structure
     @property
@@ -641,10 +647,16 @@ class World:
         from .events import _sample_schedule, concat_schedules
 
         grad_rates = self.workers.grad_rates_arr()
+        comm_ctrl = self.defense is not None \
+            and self.defense.has_comm_control
+        # with the comm controller on, sample at the controller's CEILING
+        # rate; the controller thins each round down to its keep-fraction
+        rate = self.comms_per_grad * (self.defense.comm_hi if comm_ctrl
+                                      else 1.0)
         scheds = []
         for s in self.segments(rounds, seed):
             scheds.append(_sample_schedule(
-                s.graph, s.rounds, self.comms_per_grad,
+                s.graph, s.rounds, rate,
                 seed=seed + s.seed_offset,
                 jitter_grad_times=self.jitter_grad_times,
                 grad_rates=grad_rates,
@@ -658,6 +670,10 @@ class World:
             # staleness caps need absolute round indices), drawing from its
             # own rng stream — a trivial channel is an exact no-op
             sched = self.channel.apply(sched, seed=seed)
+        if comm_ctrl:
+            # the controller thins AFTER the channel: its degradation
+            # score reads the channel extras, and gated slots zero them
+            sched = self.defense.apply_comm_control(sched)
         return sched
 
     def round_seconds(self, schedule) -> np.ndarray:
@@ -686,7 +702,9 @@ class World:
                 else self.channel.to_dict(),
                 "comms_per_grad": self.comms_per_grad,
                 "jitter_grad_times": self.jitter_grad_times,
-                "t_offset": self.t_offset}
+                "t_offset": self.t_offset,
+                "defense": None if self.defense is None
+                else self.defense.to_dict()}
 
     @staticmethod
     def from_dict(d: dict) -> "World":
@@ -699,7 +717,9 @@ class World:
                      else ChannelModel.from_dict(d["channel"]),
                      comms_per_grad=d.get("comms_per_grad", 1.0),
                      jitter_grad_times=d.get("jitter_grad_times", True),
-                     t_offset=d.get("t_offset", 0.0))
+                     t_offset=d.get("t_offset", 0.0),
+                     defense=None if d.get("defense") is None
+                     else AdaptiveDefense.from_dict(d["defense"]))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

@@ -375,7 +375,7 @@ def mixing_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
 
 def _channel_worlds_kernel(corrupt_ref, mscale_ref, dt_ref, eta_ref,
                            alpha_ref, alphat_ref, x_ref, xp_ref, xt_ref,
-                           out_x_ref, out_xt_ref, *, clip):
+                           out_x_ref, out_xt_ref, *rej_ref, clip):
     b = pl.program_id(0)
     w = pl.program_id(1)
     x = x_ref[...]
@@ -394,17 +394,25 @@ def _channel_worlds_kernel(corrupt_ref, mscale_ref, dt_ref, eta_ref,
     d = xt1 - x1
     out_x_ref[...] = x1 + c * d
     out_xt_ref[...] = xt1 - c * d
+    if rej_ref:
+        # per-event rejection mask (self-healing defense, DESIGN.md §12):
+        # 1.0 where the robust scale zeroed the exchange; the (1, 1, 1)
+        # output block is constant along the d axis, so every d-step
+        # rewrites the same value
+        rej_ref[0][...] = (mscale_ref[b, w] == 0.0).astype(
+            jnp.float32).reshape(1, 1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("clip", "interpret"))
+@functools.partial(jax.jit, static_argnames=("clip", "want_rej",
+                                             "interpret"))
 def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
                           x_partner: jax.Array, corrupt: jax.Array,
                           mscale: jax.Array, dt_next: jax.Array,
                           eta: jax.Array, alpha: jax.Array,
                           alpha_t: jax.Array, *,
                           clip: float | None = None,
-                          interpret: bool = False
-                          ) -> tuple[jax.Array, jax.Array]:
+                          want_rej: bool = False,
+                          interpret: bool = False):
     """World-batched unreliable-channel gossip batch (robust m-term).
 
     x, x_tilde, x_partner: (B, W, D) same dtype — partner values arrive
@@ -414,6 +422,9 @@ def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
     per-(world, worker) scalars ride the prefetch lane, so every tensor
     operand streams with static block indices exactly like the serial
     channel kernel — 3 state reads + 2 writes per grid step, x~ aliased.
+    ``want_rej`` (static) adds a third output: the (B, W) f32 rejection
+    mask ``mscale == 0`` the self-healing defense's trust loop consumes
+    (a (1, 1, 1)-blocked scalar lane, negligible extra traffic).
     """
     b_dim, w_dim, d_dim = x.shape
     block = min(BLOCK_D, d_dim)
@@ -427,6 +438,21 @@ def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
           for v in (corrupt, mscale, dt_next, eta)]
     pw += [jnp.asarray(alpha), jnp.asarray(alpha_t)]
     kernel = functools.partial(_channel_worlds_kernel, clip=clip)
+    out_specs = [
+        pl.BlockSpec((1, 1, block),
+                     lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+        pl.BlockSpec((1, 1, block),
+                     lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+    ]
+    if want_rej:
+        out_specs.append(pl.BlockSpec(
+            (1, 1, 1), lambda b, w, d, c, s, t, e, a, at: (b, w, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b_dim, w_dim, 1), jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=6,  # corrupt, mscale, dt, eta, alpha, alpha_t
         grid=grid,
@@ -438,28 +464,23 @@ def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
             pl.BlockSpec((1, 1, block),
                          lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, block),
-                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
-            pl.BlockSpec((1, 1, block),
-                         lambda b, w, d, c, s, t, e, a, at: (b, w, d)),
-        ],
+        out_specs=out_specs,
     )
-    out_x, out_xt = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct(x.shape, x.dtype),
-            jax.ShapeDtypeStruct(x.shape, x.dtype),
-        ],
+        out_shape=out_shape,
         # inputs are (corrupt, mscale, dt, eta, alpha, alpha_t, x, xp, xt):
         # alias xt -> out_xt in place
         input_output_aliases={} if interpret else {8: 1},
         interpret=interpret,
     )(*pw, x, x_partner, x_tilde)
+    out_x, out_xt = outs[0], outs[1]
     if pad:
         out_x = out_x[:, :, :d_dim]
         out_xt = out_xt[:, :, :d_dim]
+    if want_rej:
+        return out_x, out_xt, outs[2][:, :, 0]
     return out_x, out_xt
 
 
@@ -468,8 +489,8 @@ def channel_gossip_worlds(x: jax.Array, x_tilde: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _channel_kernel(corrupt_ref, mscale_ref, dt_ref, x_ref, xp_ref, xt_ref,
-                    out_x_ref, out_xt_ref, *, eta: float, alpha: float,
-                    alpha_t: float, clip):
+                    out_x_ref, out_xt_ref, *rej_ref, eta: float,
+                    alpha: float, alpha_t: float, clip):
     w = pl.program_id(0)
     x = x_ref[...]
     xp = xp_ref[...]
@@ -489,18 +510,24 @@ def _channel_kernel(corrupt_ref, mscale_ref, dt_ref, x_ref, xp_ref, xt_ref,
     d = xt1 - x1
     out_x_ref[...] = x1 + c * d
     out_xt_ref[...] = xt1 - c * d
+    if rej_ref:
+        # per-event rejection mask (self-healing defense, DESIGN.md §12):
+        # the (1, 1) block is constant along the d axis, so every d-step
+        # rewrites the same scalar
+        rej_ref[0][...] = (mscale_ref[w] == 0.0).astype(
+            jnp.float32).reshape(1, 1)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("eta", "alpha", "alpha_t", "clip",
-                                    "interpret"))
+                                    "want_rej", "interpret"))
 def channel_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
                            x_partner: jax.Array, corrupt: jax.Array,
                            mscale: jax.Array, dt_next: jax.Array, *,
                            eta: float, alpha: float, alpha_t: float,
                            clip: float | None = None,
-                           interpret: bool = False
-                           ) -> tuple[jax.Array, jax.Array]:
+                           want_rej: bool = False,
+                           interpret: bool = False):
     """One unreliable-channel gossip batch over worker-stacked buffers.
 
     x, x_tilde, x_partner: (W, D) same dtype; corrupt, mscale, dt_next:
@@ -515,7 +542,9 @@ def channel_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
     as the clean kernel (the caller's norm reduce for mscale adds 2 reads
     when a norm rule is on).  x~ only ever reads its own row and is
     aliased in place; x and x_partner are distinct buffers here, so x
-    cannot alias.
+    cannot alias.  ``want_rej`` (static) adds a third output: the (W,)
+    f32 rejection mask ``mscale == 0`` the self-healing defense's trust
+    loop consumes (a (1, 1)-blocked scalar lane).
     """
     w_dim, d_dim = x.shape
     block = min(BLOCK_D, d_dim)
@@ -530,6 +559,18 @@ def channel_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
     dt_next = dt_next.astype(jnp.float32)
     kernel = functools.partial(_channel_kernel, eta=eta, alpha=alpha,
                                alpha_t=alpha_t, clip=clip)
+    out_specs = [
+        pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+        pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.ShapeDtypeStruct(x.shape, x.dtype),
+    ]
+    if want_rej:
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda w, d, c, s, t: (w, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((w_dim, 1), jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # corrupt, mscale, dt_next
         grid=grid,
@@ -538,23 +579,20 @@ def channel_gossip_stacked(x: jax.Array, x_tilde: jax.Array,
             pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
             pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
-            pl.BlockSpec((1, block), lambda w, d, c, s, t: (w, d)),
-        ],
+        out_specs=out_specs,
     )
-    out_x, out_xt = pl.pallas_call(
+    outs = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct(x.shape, x.dtype),
-            jax.ShapeDtypeStruct(x.shape, x.dtype),
-        ],
+        out_shape=out_shape,
         # inputs are (corrupt, mscale, dt, x, xp, xt): alias xt -> out_xt
         input_output_aliases={} if interpret else {5: 1},
         interpret=interpret,
     )(corrupt, mscale, dt_next, x, x_partner, x_tilde)
+    out_x, out_xt = outs[0], outs[1]
     if pad:
         out_x = out_x[:, :d_dim]
         out_xt = out_xt[:, :d_dim]
+    if want_rej:
+        return out_x, out_xt, outs[2][:, 0]
     return out_x, out_xt

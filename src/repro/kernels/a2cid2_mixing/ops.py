@@ -116,18 +116,21 @@ def channel_event_worlds(x: jax.Array, x_tilde: jax.Array,
                          mscale: jax.Array, dt_next: jax.Array,
                          eta: jax.Array, alpha: jax.Array,
                          alpha_t: jax.Array, *,
-                         clip: float | None = None, backend: str = "auto"
-                         ) -> tuple[jax.Array, jax.Array]:
+                         clip: float | None = None, want_rej: bool = False,
+                         backend: str = "auto"):
     """World-batched channel gossip batch: pre-gathered (B, W, D) partner
     values, (B, W) corrupt/robust-mscale/dt, (B,) per-world dynamics,
-    optional static coordinate ``clip`` (DESIGN.md §10/§11)."""
+    optional static coordinate ``clip`` (DESIGN.md §10/§11).  With
+    ``want_rej`` the kernel also emits the (B, W) rejection mask (§12)."""
     backend = resolve_backend(backend)
     if backend == "ref":
         return channel_gossip_worlds_ref(x, x_tilde, x_partner, corrupt,
                                          mscale, dt_next, eta, alpha,
-                                         alpha_t, clip=clip)
+                                         alpha_t, clip=clip,
+                                         want_rej=want_rej)
     return channel_gossip_worlds(x, x_tilde, x_partner, corrupt, mscale,
                                  dt_next, eta, alpha, alpha_t, clip=clip,
+                                 want_rej=want_rej,
                                  interpret=(backend == "pallas_interpret"))
 
 
@@ -137,21 +140,23 @@ def channel_event_stacked(x: jax.Array, x_tilde: jax.Array,
                           x_partner: jax.Array, corrupt: jax.Array,
                           mscale: jax.Array, dt_next: jax.Array, *,
                           eta: float, alpha: float, alpha_t: float,
-                          clip: float | None = None, backend: str = "auto"
-                          ) -> tuple[jax.Array, jax.Array]:
+                          clip: float | None = None, want_rej: bool = False,
+                          backend: str = "auto"):
     """Fused channel gossip batch on (W, D) buffers: pre-gathered partner
     values (fresh or ring-buffer stale), per-worker ``corrupt`` multiplier
     offsets, per-worker robust ``mscale`` (norm trim/clip), optional
-    in-kernel coordinate ``clip`` (DESIGN.md §10)."""
+    in-kernel coordinate ``clip`` (DESIGN.md §10).  With ``want_rej`` the
+    kernel also emits the (W,) rejection mask (§12)."""
     backend = resolve_backend(backend)
     if backend == "ref":
         return channel_gossip_stacked_ref(x, x_tilde, x_partner, corrupt,
                                           mscale, dt_next, eta=eta,
                                           alpha=alpha, alpha_t=alpha_t,
-                                          clip=clip)
+                                          clip=clip, want_rej=want_rej)
     return channel_gossip_stacked(x, x_tilde, x_partner, corrupt, mscale,
                                   dt_next, eta=eta, alpha=alpha,
                                   alpha_t=alpha_t, clip=clip,
+                                  want_rej=want_rej,
                                   interpret=(backend == "pallas_interpret"))
 
 

@@ -90,12 +90,14 @@ def channel_gossip_worlds_ref(x: jax.Array, x_tilde: jax.Array,
                               mscale: jax.Array, dt_next: jax.Array,
                               eta: jax.Array, alpha: jax.Array,
                               alpha_t: jax.Array, *,
-                              clip: float | None = None
-                              ) -> tuple[jax.Array, jax.Array]:
+                              clip: float | None = None,
+                              want_rej: bool = False):
     """Oracle for the world-batched unreliable-channel batch: (B, W, D)
     buffers with PRE-GATHERED partner values (fresh rows or per-world
     ring-buffer snapshots), (B, W) ``corrupt``/``mscale``/``dt_next``, and
     (B,) per-world dynamics; ``clip`` is the static coordinate-clip rule.
+    ``want_rej`` adds the (B, W) f32 rejection mask (``mscale == 0``) as a
+    third output for the self-healing trust loop.
     """
     m = _robust_m(x, x_partner, corrupt, mscale, clip)
     x1 = x - _per_world(alpha, x) * m
@@ -105,6 +107,9 @@ def channel_gossip_worlds_ref(x: jax.Array, x_tilde: jax.Array,
                               * jnp.asarray(dt_next, jnp.float32)))
          ).astype(x.dtype)[:, :, None]
     d = xt1 - x1
+    if want_rej:
+        rej = (jnp.asarray(mscale, jnp.float32) == 0.0).astype(jnp.float32)
+        return x1 + c * d, xt1 - c * d, rej
     return x1 + c * d, xt1 - c * d
 
 
@@ -134,8 +139,8 @@ def channel_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
                                x_partner: jax.Array, corrupt: jax.Array,
                                mscale: jax.Array, dt_next: jax.Array, *,
                                eta: float, alpha: float, alpha_t: float,
-                               clip: float | None = None
-                               ) -> tuple[jax.Array, jax.Array]:
+                               clip: float | None = None,
+                               want_rej: bool = False):
     """Oracle for the unreliable-channel fused batch.
 
     Like ``mixing_gossip_stacked_ref`` but the partner values ``x_partner``
@@ -143,7 +148,8 @@ def channel_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
     stale reads BEFORE the kernel), ``corrupt`` (W,) is the per-worker
     received-value multiplier offset, ``mscale`` (W,) the robust
     trim/clip scale on the delta's norm, and ``clip`` the in-kernel
-    coordinate-clip rule.
+    coordinate-clip rule.  ``want_rej`` adds the (W,) f32 rejection mask
+    (``mscale == 0``) as a third output for the self-healing trust loop.
     """
     m = _robust_m(x, x_partner, corrupt, mscale, clip)
     x1 = x - alpha * m
@@ -152,6 +158,9 @@ def channel_gossip_stacked_ref(x: jax.Array, x_tilde: jax.Array,
                               * jnp.asarray(dt_next, jnp.float32)))
          ).astype(x.dtype)[:, None]
     d = xt1 - x1
+    if want_rej:
+        rej = (jnp.asarray(mscale, jnp.float32) == 0.0).astype(jnp.float32)
+        return x1 + c * d, xt1 - c * d, rej
     return x1 + c * d, xt1 - c * d
 
 

@@ -1,0 +1,427 @@
+"""Self-healing gossip defense (core/defense.py; DESIGN.md §12).
+
+The contracts under test:
+
+  * exact reduction — ``defense=None`` and neutral knobs replay bit-for-bit
+    as the PR 4/5 static paths, serially and in the world batch;
+  * the sign-flip gap — the scenario where a static trim provably passes
+    the attack (corrupted norm 2||x|| under tau) while the adaptive
+    quantile-tracking tau contains it at the clean consensus level;
+  * the control loop — quarantine convicts a persistent attacker, heals
+    after the attack stops, and the estimator cannot ratchet itself shut;
+  * equivalence — engine vs per-event reference, serial vs batched, jnp
+    oracle vs Pallas interpret kernel (the new rejection-mask output);
+  * one trace — a mixed none/static/adaptive grid rides the batched
+    replay as a single compiled dispatch.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveDefense, ByzantineEdges, ChannelModel,
+                        DelayProcess, Simulator, World, degradation_profile,
+                        params_from_graph, ring_graph)
+from repro.core.channel import CORRUPT_KEY
+from repro.kernels.a2cid2_mixing.kernel import channel_gossip_stacked
+from repro.kernels.a2cid2_mixing.ref import channel_gossip_stacked_ref
+
+
+def _quad_grad_fn(b, noise=0.0):
+    def grad_fn(x, key, wid):
+        g = (x - b[wid]).astype(x.dtype)
+        if noise:
+            g = g + noise * jax.random.normal(key, g.shape).astype(x.dtype)
+        return 0.5 * jnp.sum(g ** 2), g
+    return grad_fn
+
+def _sim(n, d, backend="ref", robust_clip=None, noise=0.0, seed=1,
+         shared=False):
+    g = ring_graph(n)
+    b = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    if shared:  # consensus objective: every worker pulls to the same optimum
+        b = jnp.broadcast_to(b[0], (n, d))
+    sim = Simulator(_quad_grad_fn(b, noise), params_from_graph(g),
+                    gamma=0.05, backend=backend, robust_clip=robust_clip)
+    st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+    return g, sim, st
+
+
+# ------------------------------------------------------------- validation
+
+def test_validation_names_the_offending_field():
+    for kw in ({"q": 0.0}, {"quantile": 0.0}, {"quantile": 1.5},
+               {"beta": 0.0}, {"tau0": -1.0}, {"rho": 2.0},
+               {"trust_floor": 1.0}, {"heal": -0.1},
+               {"comm_lo": 0.0}, {"comm_lo": 0.9, "comm_hi": 0.5},
+               {"comm_degrade": -1.0}):
+        with pytest.raises(ValueError):
+            AdaptiveDefense(**kw)
+    with pytest.raises(ValueError, match="defense must be"):
+        World(topology=ring_graph(8), defense="paranoid")
+
+
+def test_defense_requires_trim_rule():
+    """The feedback loop reasons about whole-delta accept/reject; clip and
+    coord rescale instead, so an active defense demands the trim rule."""
+    g, sim, st = _sim(8, 6, robust_clip=1.0)
+    sim = dataclasses.replace(sim, robust_rule="clip")
+    w = World(topology=g, defense=AdaptiveDefense())
+    with pytest.raises(ValueError, match="trim"):
+        sim.run_world(st, w, 4, seed=0)
+    with pytest.raises(ValueError, match="trim"):
+        sim.run_worlds([st], [w.compile(4, seed=0)],
+                       defenses=[AdaptiveDefense()])
+
+
+# ---------------------------------------------------------- serialization
+
+def test_defense_json_round_trip():
+    specs = [AdaptiveDefense(),
+             AdaptiveDefense(tau0=2.5, q=4.0, quantile=0.75, beta=0.1),
+             AdaptiveDefense(adaptive_tau=False, trust=True, rho=0.5),
+             AdaptiveDefense(comm_lo=0.5, comm_hi=2.0, comm_degrade=1.0)]
+    for d in specs:
+        d2 = AdaptiveDefense.from_json(d.to_json())
+        assert d2 == d
+    # inf tau0 has no JSON literal: round-trips through None
+    assert AdaptiveDefense().to_dict()["tau0"] is None
+    assert AdaptiveDefense.from_dict({"tau0": None}).tau0 == float("inf")
+
+
+def test_defense_world_json_round_trip():
+    g = ring_graph(8)
+    w = World(topology=g,
+              channel=ChannelModel(adversary=ByzantineEdges(g.edges[:2])),
+              defense=AdaptiveDefense(tau0=3.0, comm_lo=0.5, comm_hi=1.0))
+    w2 = World.from_json(w.to_json())
+    assert w2 == w
+    a, b = w.compile(10, seed=3), w2.compile(10, seed=3)
+    np.testing.assert_array_equal(a.partners, b.partners)
+    for k in a.extras_dict():
+        np.testing.assert_array_equal(a.extras[k], b.extras[k])
+    # a defense-free world keeps the old wire format readable both ways
+    plain = World(topology=g)
+    assert World.from_json(plain.to_json()) == plain
+
+
+# --------------------------------------------------------- exact reduction
+
+def _attack_world(g, mode="scale", scale=1e3, prob=0.5, frac=None):
+    E = len(g.edges)
+    k = max(1, int(round((frac or 0.1) * E)))
+    picks = np.linspace(0, E, k, endpoint=False).astype(int)
+    edges = tuple(g.edges[i] for i in picks)
+    return World(topology=g, channel=ChannelModel(
+        adversary=ByzantineEdges(edges, mode, scale=scale, prob=prob)))
+
+
+def test_defense_none_is_bitwise_the_static_path():
+    """defense=None (serial and batched) replays bit-for-bit as the PR 4/5
+    paths and attaches no DefenseTrace."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d, robust_clip=5.0)
+    sched = _attack_world(g).compile(15, seed=0)
+    fin0, tr0 = sim.run_schedule(st, sched)
+    fin1, tr1 = sim.run_schedule(st, sched, defense=None)
+    assert tr0.defense is None and tr1.defense is None
+    np.testing.assert_array_equal(np.asarray(fin0.x), np.asarray(fin1.x))
+    np.testing.assert_array_equal(np.asarray(tr0.consensus),
+                                  np.asarray(tr1.consensus))
+    # batched: an explicit all-None defenses kwarg routes through the
+    # PR 5 dispatch untouched
+    _, trb = sim.run_worlds([st, st], [sched, sched])
+    _, trn = sim.run_worlds([st, st], [sched, sched], defenses=[None, None])
+    assert trb.defense is None and trn.defense is None
+    np.testing.assert_array_equal(np.asarray(trb.consensus),
+                                  np.asarray(trn.consensus))
+    np.testing.assert_array_equal(np.asarray(trb.consensus[0]),
+                                  np.asarray(tr0.consensus))
+
+
+def test_neutral_arms_in_defense_grid_are_bitwise_static():
+    """Inside an ACTIVE defense grid, the none/static arms still reproduce
+    their serial static replays bit-for-bit — the neutral knobs degenerate
+    to the static trim arithmetic, not merely approximate it."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d)
+    sched = _attack_world(g).compile(20, seed=0)
+    _, trb = sim.run_worlds([st] * 3, [sched] * 3,
+                            robust_clips=[None, 5.0, 5.0],
+                            defenses=[None, None, AdaptiveDefense()])
+    _, tr_plain = sim.run_schedule(st, sched)
+    sim5 = dataclasses.replace(sim, robust_clip=5.0)
+    _, tr_static = sim5.run_schedule(st, sched)
+    np.testing.assert_array_equal(np.asarray(trb.consensus[0]),
+                                  np.asarray(tr_plain.consensus))
+    np.testing.assert_array_equal(np.asarray(trb.consensus[1]),
+                                  np.asarray(tr_static.consensus))
+    # defense trace rows exist for every arm; the neutral arms never
+    # quarantine and count only their static trim rejections
+    assert np.asarray(trb.defense.quarantined[:2]).sum() == 0.0
+    assert np.isinf(np.asarray(trb.defense.tau[0])).all()
+    assert (np.asarray(trb.defense.tau[1]) == 5.0).all()
+
+
+def test_gamma_and_clip_lift_bitwise():
+    """Satellite: per-world gammas / robust_clips reproduce the serial
+    replays bit-for-bit through the batched dispatch."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d)
+    sched = _attack_world(g).compile(12, seed=1)
+    _, trb = sim.run_worlds([st, st], [sched, sched], gammas=[0.05, 0.11],
+                            robust_clips=[None, 4.0])
+    _, tr0 = sim.run_schedule(st, sched)
+    simc = dataclasses.replace(sim, gamma=0.11, robust_clip=4.0)
+    _, tr1 = simc.run_schedule(st, sched)
+    np.testing.assert_array_equal(np.asarray(trb.consensus[0]),
+                                  np.asarray(tr0.consensus))
+    np.testing.assert_array_equal(np.asarray(trb.consensus[1]),
+                                  np.asarray(tr1.consensus))
+
+
+# ------------------------------------------------------- the sign-flip gap
+
+def test_adaptive_tau_contains_the_sign_flip_attack():
+    """THE tentpole scenario.  A sign-flip adversary (received value
+    negated) emits deltas of norm ||x + xp|| ~ 2||x||, under any static
+    tau loose enough for honest traffic — here tau=5 vs 2||b|| ~ 3.4, so
+    the static arm is BITWISE the undefended arm.  The adaptive tau tracks
+    the honest median toward the noise floor and throws the attack out."""
+    n, d, rounds = 32, 32, 150
+    g = ring_graph(n)
+    b = np.broadcast_to(0.3 * np.ones(d, np.float32), (n, d))
+    sim = Simulator(_quad_grad_fn(jnp.asarray(b), noise=0.05),
+                    params_from_graph(g), gamma=0.05, backend="ref")
+    st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
+    w_att = _attack_world(g, mode="sign_flip", scale=1.0, prob=1.0)
+    sched = w_att.compile(rounds, seed=0)
+    clean = World(topology=g).compile(rounds, seed=0)
+    _, tr = sim.run_worlds([st] * 4, [clean, sched, sched, sched],
+                           robust_clips=[None, None, 5.0, 5.0],
+                           defenses=[None, None, None, AdaptiveDefense()])
+    cons = np.asarray(tr.consensus)
+    tails = np.nanmean(cons[:, -30:], axis=1)
+    # static trim provably passes the attack: bitwise the undefended arm
+    np.testing.assert_array_equal(cons[1], cons[2])
+    assert np.asarray(tr.defense.rejections[2]).sum() == 0.0
+    # the attack visibly breaks consensus, adaptive restores it
+    assert tails[1] > 20.0 * tails[0]
+    assert tails[3] < 3.0 * tails[0]
+    # the loop did its job through both controllers
+    assert np.asarray(tr.defense.rejections[3]).sum() > 0
+    assert np.asarray(tr.defense.quarantined[3]).sum() > 0
+    assert np.asarray(tr.defense.tau[3])[-1] < 5.0
+
+
+def test_adaptive_matches_static_on_garbage_injection():
+    """Where the static trim IS sufficient (scale-1e3 garbage), adaptive
+    keeps the same containment — the cold-start tau is never looser than
+    the static threshold, so round 0 cannot poison the estimator seed."""
+    n, d, rounds = 16, 16, 60
+    g, sim, st = _sim(n, d, noise=0.01)
+    sched = _attack_world(g, mode="scale", scale=1e3, prob=0.5
+                          ).compile(rounds, seed=0)
+    _, tr = sim.run_worlds([st] * 3, [sched] * 3,
+                           robust_clips=[None, 5.0, 5.0],
+                           defenses=[None, None, AdaptiveDefense()])
+    tails = np.nanmean(np.asarray(tr.consensus)[:, -15:], axis=1)
+    assert not np.isfinite(tails[0]) or tails[0] > 1e3 * tails[1]
+    assert tails[2] < 10.0 * tails[1]
+
+
+# ------------------------------------------------------- the control loop
+
+def test_quarantine_convicts_then_heals_after_probation():
+    """A persistently corrupt edge (prob=1 — duty-cycle attackers are
+    rejected per-event but deliberately NOT convicted, their trust hovers
+    at the duty ratio) is quarantined; once the attack stops (corrupt
+    extras zeroed mid-schedule) probation healing re-admits it and the
+    tail runs quarantine-free."""
+    n, d, rounds, stop = 8, 16, 120, 30
+    g, sim, st = _sim(n, d, robust_clip=5.0, noise=0.01, shared=True)
+    sched = _attack_world(g, mode="scale", scale=1e3, prob=1.0,
+                          frac=1 / len(g.edges)).compile(rounds, seed=0)
+    c = np.array(sched.extras[CORRUPT_KEY])
+    c[stop:] = 0.0
+    sched = dataclasses.replace(sched,
+                                extras={**sched.extras, CORRUPT_KEY: c})
+    _, tr = sim.run_schedule(st, sched, defense=AdaptiveDefense())
+    quar = np.asarray(tr.defense.quarantined)
+    assert quar[:stop].sum() > 0          # convicted during the attack
+    assert quar[-30:].sum() == 0.0        # healed once it went honest
+    assert float(np.asarray(tr.consensus)[-1]) < 1e-2
+
+
+def test_estimator_does_not_ratchet_shut_on_clean_traffic():
+    """The failure mode the admitted-norms estimator exists to prevent:
+    on a long CLEAN run the adaptive tau must keep (nearly) all honest
+    exchanges admitted rather than shrinking its own input distribution
+    until everything is rejected."""
+    n, d, rounds = 16, 16, 120
+    g, sim, st = _sim(n, d, noise=0.05)
+    sched = World(topology=g).compile(rounds, seed=0)
+    _, tr = sim.run_schedule(st, sched, defense=AdaptiveDefense())
+    rej = np.asarray(tr.defense.rejections)
+    quar = np.asarray(tr.defense.quarantined)
+    events_per_round = (np.asarray(sched.partners)
+                        != np.arange(n)).sum() / rounds
+    assert quar.sum() == 0.0
+    assert rej[-60:].mean() < 0.10 * events_per_round
+    _, tr_plain = sim.run_schedule(st, sched)
+    tail = float(np.mean(np.asarray(tr.consensus)[-20:]))
+    tail_plain = float(np.mean(np.asarray(tr_plain.consensus)[-20:]))
+    assert tail < 3.0 * tail_plain
+
+
+# ------------------------------------------------------- comm controller
+
+def test_comm_control_thins_the_compiled_schedule():
+    g = ring_graph(8)
+    base = World(topology=g, comms_per_grad=2.0)
+    ctl = AdaptiveDefense(adaptive_tau=False, trust=False,
+                          comm_lo=0.5, comm_hi=2.0)
+    w = dataclasses.replace(base, comms_per_grad=1.0, defense=ctl)
+    plain = dataclasses.replace(base, comms_per_grad=2.0).compile(40, seed=3)
+    thin = w.compile(40, seed=3)
+    idx = np.arange(8)
+
+    def pairs(s):
+        return (np.asarray(s.partners) != idx).sum()
+
+    # samples at the comm_hi rate, then keeps a lo -> hi ramp of it
+    assert 0 < pairs(thin) < pairs(plain)
+    early = (np.asarray(thin.partners[:10]) != idx).sum()
+    late = (np.asarray(thin.partners[-10:]) != idx).sum()
+    assert early < late
+    # gated slots are exact no-ops: identity partners, masked, zero extras
+    for s in (plain, thin):
+        assert np.all(np.asarray(s.partners)[~np.asarray(s.event_mask)]
+                      == idx)
+    # no controller fields -> the schedule object passes through untouched
+    noop = AdaptiveDefense()
+    sched = base.compile(10, seed=0)
+    assert noop.apply_comm_control(sched) is sched
+
+
+def test_degradation_derates_the_comm_rate():
+    g = ring_graph(8)
+    chan = ChannelModel(delay=DelayProcess(horizon=3, prob=1.0))
+    clean = World(topology=g, comms_per_grad=2.0).compile(30, seed=1)
+    lossy = World(topology=g, comms_per_grad=2.0,
+                  channel=chan).compile(30, seed=1)
+    assert degradation_profile(clean).max() == 0.0
+    prof = degradation_profile(lossy)
+    assert prof.shape == (30,)
+    # prob=1 delays: every involved read past the warmup is stale (rounds
+    # whose sampler drew no matchings at all score 0 by convention)
+    busy = (np.asarray(lossy.partners) != np.arange(8)).any(axis=(1, 2))
+    assert prof[3:][busy[3:]].min() > 0.9
+    ctl = AdaptiveDefense(adaptive_tau=False, trust=False, comm_degrade=0.5)
+    mult_clean = ctl.comm_multipliers(30, degradation_profile(clean))
+    mult_lossy = ctl.comm_multipliers(30, prof)
+    assert (mult_lossy <= mult_clean).all()
+    assert mult_lossy[5:][busy[5:]].max() < 1.0
+
+
+# ------------------------------------------------ end-to-end equivalence
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_defense_engine_matches_reference(backend):
+    """The acceptance oracle: the fused-scan defense replay agrees with
+    the per-event reference path, counters included, on a hostile world."""
+    n, d = 8, 16
+    rounds = 10 if backend == "pallas_interpret" else 40
+    g, sim, st = _sim(n, d, backend=backend, robust_clip=5.0, noise=0.01)
+    w = dataclasses.replace(_attack_world(g), defense=AdaptiveDefense())
+    fin_ref, tr_ref = sim.run_world(st, w, rounds, seed=4, engine=False)
+    fin_eng, tr_eng = sim.run_world(st, w, rounds, seed=4, engine=True)
+    np.testing.assert_allclose(fin_eng.x, fin_ref.x, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(fin_eng.x_tilde, fin_ref.x_tilde,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(tr_eng.consensus, tr_ref.consensus,
+                               atol=1e-6, rtol=1e-4)
+    np.testing.assert_allclose(tr_eng.defense.tau, tr_ref.defense.tau,
+                               atol=1e-6, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(tr_eng.defense.rejections),
+                                  np.asarray(tr_ref.defense.rejections))
+    np.testing.assert_array_equal(np.asarray(tr_eng.defense.quarantined),
+                                  np.asarray(tr_ref.defense.quarantined))
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_batched_defense_matches_serial(engine):
+    n, d, rounds = 8, 10, 20
+    g, sim, st = _sim(n, d, noise=0.01)
+    sched = _attack_world(g).compile(rounds, seed=2)
+    defense = AdaptiveDefense()
+    _, trb = sim.run_worlds([st, st], [sched, sched],
+                            robust_clips=[5.0, 5.0],
+                            defenses=[defense, defense], engine=engine)
+    _, trs = sim.run_schedule(st, sched, defense=defense, engine=engine)
+    np.testing.assert_allclose(np.asarray(trb.consensus[0]),
+                               np.asarray(trs.consensus),
+                               atol=1e-6, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(trb.defense.rejections[0]),
+                                  np.asarray(trs.defense.rejections))
+    # identical arms agree with each other exactly
+    np.testing.assert_array_equal(np.asarray(trb.consensus[0]),
+                                  np.asarray(trb.consensus[1]))
+
+
+def test_mixed_defense_grid_is_one_trace():
+    """ISSUE acceptance: none / static / adaptive / attack arms share ONE
+    compiled dispatch — the knobs are (B,) data, never trace constants."""
+    n, d = 8, 10
+    g, sim, st = _sim(n, d)
+    sched_att = _attack_world(g).compile(10, seed=0)
+    sched_cln = World(topology=g).compile(10, seed=0)
+    fn = type(sim)._run_worlds_defense_jit
+    before = fn._cache_size()
+    sim.run_worlds([st] * 4, [sched_cln, sched_att, sched_att, sched_att],
+                   robust_clips=[None, None, 5.0, 5.0],
+                   gammas=[0.05, 0.05, 0.05, 0.07],
+                   defenses=[None, None, None, AdaptiveDefense()])
+    assert fn._cache_size() - before == 1
+    # a second same-shape grid with DIFFERENT knob values reuses the trace
+    sim.run_worlds([st] * 4, [sched_att] * 4,
+                   robust_clips=[3.0, 7.0, None, 1.0],
+                   defenses=[AdaptiveDefense(q=5.0, rho=0.5), None,
+                             AdaptiveDefense(adaptive_tau=False), None])
+    assert fn._cache_size() - before == 1
+
+
+# ----------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_channel_kernel_rejection_mask_parity(dtype):
+    """want_rej adds the (W,) rejection mask as a third output; the Pallas
+    interpret path matches the oracle and the 2-output form is unchanged."""
+    w, d = 6, 256
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (w, d), dtype)
+    xt = jax.random.normal(jax.random.fold_in(key, 1), (w, d), dtype)
+    perm = jnp.asarray([1, 0, 3, 2, 4, 5], jnp.int32)
+    xp = jnp.take(x, perm, axis=0)
+    corrupt = jnp.asarray([-2.0, 0.0, -1.0, 4.0, 0.0, 0.0], jnp.float32)
+    mscale = jnp.asarray([0.0, 1.0, 0.0, 1.0, 1.0, 1.0], jnp.float32)
+    dt = jax.random.uniform(jax.random.fold_in(key, 2), (w,))
+    kw = dict(eta=0.37, alpha=0.5, alpha_t=1.4, clip=None)
+    ox, ot, orj = channel_gossip_stacked(x, xt, xp, corrupt, mscale, dt,
+                                         want_rej=True, interpret=True,
+                                         **kw)
+    rx, rt, rrj = channel_gossip_stacked_ref(x, xt, xp, corrupt, mscale,
+                                             dt, want_rej=True, **kw)
+    np.testing.assert_array_equal(np.asarray(orj), np.asarray(rrj))
+    np.testing.assert_array_equal(np.asarray(rrj),
+                                  np.asarray(mscale == 0.0, np.float32))
+    atol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(ox, np.float32),
+                               np.asarray(rx, np.float32), atol=atol)
+    # the two-output arity is untouched
+    ox2, ot2 = channel_gossip_stacked(x, xt, xp, corrupt, mscale, dt,
+                                      interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ox2), np.asarray(ox))
+    np.testing.assert_array_equal(np.asarray(ot2), np.asarray(ot))
