@@ -9,8 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Simulator, World, build_graph, params_from_graph,
-                        worker_mean)
+from repro.core import Algorithm, Simulator, World, build_graph, worker_mean
 from repro.data import SyntheticCIFAR
 from repro.models.resnet import init_resnet, resnet8_cifar, resnet_loss
 
@@ -35,12 +34,16 @@ def main():
         return jax.value_and_grad(loss_fn)(params)
 
     graph = build_graph(args.graph, args.workers)
-    sched = World(topology=graph).compile(args.rounds, seed=args.seed)
+    # both arms are coupled-clock algorithms, so they compile the identical
+    # schedule — declare the worlds and reuse one compile
+    arms = {"adpsgd": World(topology=graph, algorithm=Algorithm("adpsgd")),
+            "a2cid2": World(topology=graph, algorithm=Algorithm("a2cid2"))}
+    sched = arms["a2cid2"].compile(args.rounds, seed=args.seed)
     params0 = init_resnet(jax.random.PRNGKey(0), cfg)
 
-    for accel in (False, True):
-        acid = params_from_graph(graph, accelerated=accel)
-        sim = Simulator(grad_fn, acid, gamma=0.05)
+    for kind, world in arms.items():
+        accel = kind == "a2cid2"
+        sim = Simulator(grad_fn, world.algorithm_params(), gamma=0.05)
         state = sim.init(params0, args.workers, jax.random.PRNGKey(1))
         t0 = time.time()
         state, trace = sim.run_schedule(state, sched)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import Simulator, World, params_from_graph, ring_graph
+from repro.core import Algorithm, Simulator, World, ring_graph
 from repro.data import LMTaskStream
 from repro.models import Model
 
@@ -42,15 +42,19 @@ def main():
         return jax.value_and_grad(loss_fn)(params)
 
     graph = ring_graph(args.workers)
-    sched = World(topology=graph).compile(args.rounds, seed=args.seed)
+    # coupled-clock algorithms compile the identical schedule; declare the
+    # zoo arms as Worlds and reuse one compile
+    arms = {"adpsgd": World(topology=graph, algorithm=Algorithm("adpsgd")),
+            "a2cid2": World(topology=graph, algorithm=Algorithm("a2cid2"))}
+    sched = arms["a2cid2"].compile(args.rounds, seed=args.seed)
     params0 = model.init(jax.random.PRNGKey(0))
     n_params = sum(p.size for p in jax.tree.leaves(params0))
     print(f"nano-lm: {n_params/1e6:.1f}M params, {args.workers} workers, "
           f"ring graph, bayes CE {stream.bayes_ce():.3f}")
 
-    for accel in (False, True):
-        acid = params_from_graph(graph, accelerated=accel)
-        sim = Simulator(grad_fn, acid, gamma=0.05)
+    for kind, world in arms.items():
+        accel = kind == "a2cid2"
+        sim = Simulator(grad_fn, world.algorithm_params(), gamma=0.05)
         state = sim.init(params0, args.workers, jax.random.PRNGKey(1))
         t0 = time.time()
         state, trace = sim.run_schedule(state, sched)

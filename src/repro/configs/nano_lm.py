@@ -18,3 +18,15 @@ def reduced() -> ModelConfig:
         num_heads=4, num_kv_heads=2, head_dim=32,
         d_ff=256, mlp_act="silu", tie_embeddings=True,
     )
+
+
+def train_bench() -> ModelConfig:
+    """Micro variant for ``benchmarks/run.py --only train``: same block
+    structure as nano-lm but small enough (~45k params) that an n=64,
+    36-world batched replay of the full per-worker state fits CPU memory."""
+    return ModelConfig(
+        name="nano-lm-bench", family="dense", d_model=64, vocab_size=128,
+        blocks=uniform_blocks(Block("attn", "dense"), 1),
+        num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, mlp_act="silu", tie_embeddings=True,
+    )

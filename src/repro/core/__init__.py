@@ -1,7 +1,8 @@
 """Core library: the paper's contribution (A2CiD2) as composable JAX modules."""
-from .a2cid2 import (A2CiD2Params, acid_params, apply_mixing, baseline_params,
-                     consensus_distance, gradient_event, matched_p2p_update,
-                     mixing_coeff, p2p_event, params_from_graph, worker_mean)
+from .a2cid2 import (A2CiD2Params, Algorithm, acid_params, apply_mixing,
+                     baseline_params, consensus_distance, gradient_event,
+                     matched_p2p_update, mixing_coeff, p2p_event,
+                     params_from_graph, worker_mean)
 from .channel import (ByzantineEdges, ChannelModel, DelayProcess,
                       degradation_profile)
 from .defense import AdaptiveDefense, DefenseTrace
@@ -25,7 +26,8 @@ __all__ = [
     "AdaptiveDefense", "DefenseTrace",
     "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
     "WorldSweep",
-    "A2CiD2Params", "acid_params", "apply_mixing", "baseline_params",
+    "A2CiD2Params", "Algorithm", "acid_params", "apply_mixing",
+    "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",
     "mixing_coeff", "p2p_event", "params_from_graph", "worker_mean",
     "BatchedSchedule", "BatchedStream", "CoalescedSchedule", "EventStream",

@@ -27,11 +27,13 @@ All update functions operate on arbitrary pytrees and are jit/vmap friendly.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -73,6 +75,151 @@ def params_from_graph(graph, accelerated: bool = True) -> A2CiD2Params:
     if not accelerated:
         return baseline_params(chi1)
     return acid_params(chi1, graph.chi2())
+
+
+# ------------------------------------------------------------- algorithm zoo
+
+#: Known algorithm kinds and whether their canonical form runs the
+#: accelerated (eta > 0) dynamics.  Every kind lowers onto the SAME scan —
+#: the zoo is per-world (B,) dynamics data plus clock structure, never a
+#: new engine (DESIGN.md §13):
+#:   a2cid2  — the paper's dynamic (Prop 3.6), coupled unit-rate clocks
+#:   adpsgd  — the asynchronous baseline the paper compares against
+#:             (Eq 6 ≈ AD-PSGD, Lian et al. 2018): eta = 0, alpha = 1/2,
+#:             no momentum — bitwise `baseline_params(chi1)`
+#:   dadao   — DADAO-style DECOUPLED gradient/gossip Poisson clocks
+#:             (Nabli & Oyallon 2022): independent event-rate axes for the
+#:             two point processes, realized as schedule data
+ALGORITHM_KINDS = ("a2cid2", "adpsgd", "dadao")
+_KIND_ACCELERATED = {"a2cid2": True, "adpsgd": False, "dadao": True}
+
+# rng-stream tag for the algorithm's decoupled gradient clock: like the
+# straggler (0x48455) and channel (0xC4A77) streams, algorithm draws come
+# from their own SeedSequence child so a coupled algorithm leaves the main
+# schedule stream — and hence the schedule — bit-for-bit untouched
+_ALGO_TAG = 0xDADA0
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """Declarative algorithm spec — a World axis, serialized like
+    ``ChannelModel``/``AdaptiveDefense`` and lowered at compile time.
+
+    The spec splits into two orthogonal parts:
+
+    * **dynamics column** — ``params_for(graph)`` resolves the kind +
+      ``accelerated`` flag to the scalar ``A2CiD2Params`` that ride the
+      per-world (B,) arrays of the batched replay (``world_params``).
+      ``accelerated=None`` takes the kind's canonical form (a2cid2/dadao
+      accelerated, adpsgd base); setting it overrides — e.g.
+      ``Algorithm("adpsgd", accelerated=True)`` is the "what if AD-PSGD
+      had the momentum" counterfactual arm benchmarks sweep.
+    * **clock structure** — only ``kind="dadao"`` has one: independent
+      Poisson rates for the gradient (``grad_rate``, Bernoulli thinning
+      of the unit tick process, same realization as straggler
+      ``grad_rates``) and gossip (``gossip_rate``, replaces
+      ``comms_per_grad`` as the comm-event intensity) processes.  When
+      the rates coincide with the coupled defaults (grad_rate = 1,
+      gossip_rate = None) the schedule is bitwise the coupled one —
+      asserted in tests/test_algorithms.py.
+    """
+
+    kind: str = "a2cid2"
+    accelerated: bool | None = None
+    grad_rate: float = 1.0
+    gossip_rate: float | None = None
+
+    def __post_init__(self):
+        if self.kind not in ALGORITHM_KINDS:
+            raise ValueError(f"Algorithm.kind must be one of "
+                             f"{ALGORITHM_KINDS}, got {self.kind!r}")
+        if self.accelerated is not None and \
+                not isinstance(self.accelerated, bool):
+            raise ValueError("Algorithm.accelerated must be None or bool, "
+                             f"got {self.accelerated!r}")
+        gr = self.grad_rate
+        if not (isinstance(gr, (int, float)) and 0.0 < float(gr) <= 1.0):
+            raise ValueError("Algorithm.grad_rate must be a float in "
+                             f"(0, 1], got {gr!r}")
+        if self.gossip_rate is not None:
+            g = self.gossip_rate
+            if not (isinstance(g, (int, float)) and float(g) > 0.0
+                    and math.isfinite(float(g))):
+                raise ValueError("Algorithm.gossip_rate must be None or a "
+                                 f"finite float > 0, got {g!r}")
+        if self.kind != "dadao" and (float(gr) != 1.0
+                                     or self.gossip_rate is not None):
+            raise ValueError(
+                f"decoupled clocks (grad_rate/gossip_rate) are a "
+                f"kind='dadao' axis; kind={self.kind!r} must keep "
+                f"grad_rate=1.0 and gossip_rate=None")
+
+    # ------------------------------------------------------ dynamics column
+    @property
+    def is_accelerated(self) -> bool:
+        if self.accelerated is not None:
+            return self.accelerated
+        return _KIND_ACCELERATED[self.kind]
+
+    def params_for(self, graph) -> A2CiD2Params:
+        """Lower to the scalar dynamics column for ``graph``.
+
+        The adpsgd base arm is bitwise ``baseline_params(graph.chi1())``
+        (eta = 0, alpha = alpha_tilde = 1/2) because ``params_from_graph``
+        routes through exactly that constructor — the closed-form pin in
+        tests/test_algorithms.py.
+        """
+        return params_from_graph(graph, accelerated=self.is_accelerated)
+
+    # ------------------------------------------------------ clock structure
+    @property
+    def decoupled(self) -> bool:
+        """True iff the spec carries a non-trivial decoupled clock."""
+        return self.kind == "dadao" and (
+            float(self.grad_rate) != 1.0 or self.gossip_rate is not None)
+
+    def comm_rate(self, comms_per_grad: float) -> float:
+        """Effective comm-event intensity: the independent gossip clock
+        when set, the coupled ``comms_per_grad`` otherwise."""
+        if self.kind == "dadao" and self.gossip_rate is not None:
+            return float(self.gossip_rate)
+        return float(comms_per_grad)
+
+    def apply_grad_clock(self, schedule, seed: int):
+        """Thin gradient ticks by the decoupled gradient rate.
+
+        Bernoulli(grad_rate) per (round, worker) — the same tick-thinning
+        realization of a slower Poisson clock that straggler ``grad_rates``
+        use (DESIGN.md §8), drawn from the algorithm's own rng stream so a
+        unit rate returns ``schedule`` unchanged (bitwise reduction)."""
+        rate = float(self.grad_rate)
+        if self.kind != "dadao" or rate == 1.0:
+            return schedule
+        rng = np.random.default_rng(
+            np.random.SeedSequence([int(seed), _ALGO_TAG]))
+        gate = rng.uniform(size=(schedule.rounds, schedule.n)) < rate
+        return schedule.with_grad_gate(gate)
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "accelerated": self.accelerated,
+                "grad_rate": float(self.grad_rate),
+                "gossip_rate": None if self.gossip_rate is None
+                else float(self.gossip_rate)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Algorithm":
+        return Algorithm(kind=d.get("kind", "a2cid2"),
+                         accelerated=d.get("accelerated"),
+                         grad_rate=d.get("grad_rate", 1.0),
+                         gossip_rate=d.get("gossip_rate"))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @staticmethod
+    def from_json(s: str) -> "Algorithm":
+        return Algorithm.from_dict(json.loads(s))
 
 
 # ----------------------------------------------------------------- mixing ODE

@@ -126,6 +126,24 @@ class Schedule:
             out[name] = a
         return dataclasses.replace(self, extras=out)
 
+    def with_grad_gate(self, gate: np.ndarray) -> "Schedule":
+        """AND a (R, n) boolean gate into ``grad_mask``.
+
+        The decoupled-gradient-clock hook (``Algorithm`` kind "dadao",
+        DESIGN.md §13): a False entry skips that worker's round-r gradient
+        tick exactly like straggler thinning — the worker stays alive, its
+        clock advances, mixing applies.  Like every heterogeneity axis the
+        gate is schedule DATA (it lowers into the stream's ``grad_scale``
+        column), never a scan branch.
+        """
+        gate = np.asarray(gate, dtype=bool)
+        if gate.shape != (self.rounds, self.n):
+            raise ValueError(
+                f"grad gate must have shape ({self.rounds}, {self.n}) = "
+                f"(rounds, n), got {gate.shape}")
+        mask = gate if self.grad_mask is None else (self.grad_mask & gate)
+        return dataclasses.replace(self, grad_mask=mask)
+
     def comm_events_per_round(self) -> np.ndarray:
         """(R,) pairwise communication count per round (benchmark x-axis)."""
         idx = np.arange(self.n)

@@ -1398,8 +1398,8 @@ class Simulator:
                 jnp.asarray(ring_pos)), horizon
 
     def run_worlds(self, states, scheds, *, params=None, gammas=None,
-                   robust_clips=None, defenses=None, engine: bool = True
-                   ) -> tuple[SimState, SimTrace]:
+                   robust_clips=None, defenses=None, worlds=None,
+                   engine: bool = True) -> tuple[SimState, SimTrace]:
         """Replay B independent worlds in ONE compiled scan.
 
         states — a list of per-world SimStates (stacked here via
@@ -1411,6 +1411,13 @@ class Simulator:
         params — optional per-world ``A2CiD2Params`` (one per schedule),
           letting baseline and accelerated worlds — and any parameter
           grid — share the ONE trace; default replicates ``self.params``.
+        worlds — optional B ``World`` specs (one per schedule): derives
+          what the spec declares and the call didn't pass explicitly —
+          ``params`` from each world's algorithm zoo arm
+          (``World.algorithm_params()``; worlds with ``algorithm=None``
+          keep ``self.params``, so scenario grids without a declared
+          algorithm stay bitwise PR 6) and ``defenses`` from each world's
+          ``defense`` field.  Explicit kwargs always win.
         gammas — optional per-world step sizes (floats; default
           ``self.gamma``), lifted to a traced (B,) array so a step-size
           grid shares the trace too.
@@ -1438,6 +1445,17 @@ class Simulator:
         if lead != B:
             raise ValueError(f"states are batched for {lead} worlds but "
                              f"{B} schedules were given")
+        if worlds is not None:
+            wlist = list(worlds)
+            if len(wlist) != B:
+                raise ValueError(f"worlds must have one entry per schedule "
+                                 f"({B}), got {len(wlist)}")
+            if params is None:
+                params = [self.params if w.algorithm is None
+                          else w.algorithm_params() for w in wlist]
+            if defenses is None and any(w.defense is not None
+                                        for w in wlist):
+                defenses = [w.defense for w in wlist]
         plist = list(params) if params is not None else [self.params] * B
         if len(plist) != B:
             raise ValueError(f"params must have one entry per world "

@@ -48,6 +48,7 @@ import json
 
 import numpy as np
 
+from .a2cid2 import Algorithm
 from .channel import ChannelModel
 from .defense import AdaptiveDefense
 from .graphs import Graph, TopologyPhase, TopologySchedule
@@ -424,6 +425,11 @@ class World:
     jitter_grad_times: bool = True
     t_offset: float = 0.0
     defense: AdaptiveDefense | None = None
+    # algorithm zoo (DESIGN.md §13): None = the legacy default (bitwise
+    # PR 6 compile; dynamics chosen by the caller), an Algorithm spec
+    # otherwise — its clock structure lowers into the schedule here, its
+    # dynamics column via ``algorithm_params()``
+    algorithm: Algorithm | None = None
 
     def __post_init__(self):
         if not isinstance(self.topology, (Graph, TopologySchedule)):
@@ -508,6 +514,10 @@ class World:
                                                        AdaptiveDefense):
             raise ValueError("defense must be an AdaptiveDefense, "
                              f"got {type(self.defense).__name__}")
+        if self.algorithm is not None and not isinstance(self.algorithm,
+                                                         Algorithm):
+            raise ValueError("algorithm must be an Algorithm, "
+                             f"got {type(self.algorithm).__name__}")
 
     # ------------------------------------------------------------ structure
     @property
@@ -636,6 +646,21 @@ class World:
             g = g.with_rates(er)
         return g
 
+    def algorithm_params(self, accelerated: bool | None = None):
+        """The world's scalar dynamics column — what rides the batched
+        replay's per-world (B,) arrays (``Simulator.world_params``).
+
+        Resolves ``algorithm`` (default ``Algorithm()`` = canonical A²CiD²)
+        against ``static_graph()``'s chi values; ``accelerated`` overrides
+        the arm (the benchmarks' base/accelerated sweep axis).  Needs a
+        static world — chi of a phased/churned world is only defined per
+        phase (see ``static_graph``).
+        """
+        algo = self.algorithm if self.algorithm is not None else Algorithm()
+        if accelerated is not None:
+            algo = dataclasses.replace(algo, accelerated=bool(accelerated))
+        return algo.params_for(self.static_graph())
+
     # -------------------------------------------------------------- compile
     def compile(self, rounds: int | None = None, seed: int = 0):
         """Lower the world to ONE ``events.Schedule``.
@@ -649,10 +674,14 @@ class World:
         grad_rates = self.workers.grad_rates_arr()
         comm_ctrl = self.defense is not None \
             and self.defense.has_comm_control
+        # the algorithm's independent gossip clock (DADAO) replaces
+        # comms_per_grad as the comm-event intensity; coupled algorithms
+        # pass it through unchanged, keeping the compile bitwise-identical
+        cpg = self.comms_per_grad if self.algorithm is None \
+            else self.algorithm.comm_rate(self.comms_per_grad)
         # with the comm controller on, sample at the controller's CEILING
         # rate; the controller thins each round down to its keep-fraction
-        rate = self.comms_per_grad * (self.defense.comm_hi if comm_ctrl
-                                      else 1.0)
+        rate = cpg * (self.defense.comm_hi if comm_ctrl else 1.0)
         scheds = []
         for s in self.segments(rounds, seed):
             scheds.append(_sample_schedule(
@@ -665,6 +694,12 @@ class World:
                 t_offset=self.t_offset + float(s.start),
                 active=s.active))
         sched = concat_schedules(scheds)
+        if self.algorithm is not None:
+            # decoupled gradient clock (DADAO): Bernoulli tick thinning on
+            # the final concatenated schedule, drawn from the algorithm's
+            # own rng stream — a coupled (unit-rate) algorithm returns the
+            # schedule bitwise unchanged
+            sched = self.algorithm.apply_grad_clock(sched, seed=seed)
         if self.channel is not None:
             # the channel rides on the FINAL concatenated schedule (its
             # staleness caps need absolute round indices), drawing from its
@@ -704,7 +739,9 @@ class World:
                 "jitter_grad_times": self.jitter_grad_times,
                 "t_offset": self.t_offset,
                 "defense": None if self.defense is None
-                else self.defense.to_dict()}
+                else self.defense.to_dict(),
+                "algorithm": None if self.algorithm is None
+                else self.algorithm.to_dict()}
 
     @staticmethod
     def from_dict(d: dict) -> "World":
@@ -719,7 +756,9 @@ class World:
                      jitter_grad_times=d.get("jitter_grad_times", True),
                      t_offset=d.get("t_offset", 0.0),
                      defense=None if d.get("defense") is None
-                     else AdaptiveDefense.from_dict(d["defense"]))
+                     else AdaptiveDefense.from_dict(d["defense"]),
+                     algorithm=None if d.get("algorithm") is None
+                     else Algorithm.from_dict(d["algorithm"]))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

@@ -15,8 +15,17 @@ A2CiD2.  ``ar_train_step`` (worker-axis all-reduce each step) is the AR-SGD
 baseline at equal mesh.
 
 The asynchronous event *schedule* (who gossips when, per-worker event clocks)
-is sampled with jax.random inside the step — identical in distribution to
-events.make_schedule (see DESIGN.md on the SPMD event-driven adaptation).
+is sampled with jax.random inside the step — matching ``events.make_schedule``
+in the laws the consensus theory consumes (see DESIGN.md on the SPMD
+event-driven adaptation): per-worker gradient clocks are the same Poisson
+rate processes (Exp(1)/rate_i gaps here vs. tick thinning there, DESIGN.md
+§8), gossip events arrive with Exp inter-event gaps at the declared
+per-step intensity, and matchings are drawn with the bank's per-edge rates.
+The joint matching law differs — the in-step sampler draws whole matchings
+from the static edge-coloring bank, the schedule sampler greedy-maximal
+matchings from random edge orders — so only these marginals, not the full
+joint distribution, are shared.  ``tests/test_algorithms.py`` pins exactly
+which laws agree (KS on the clock gaps, chi-squared on the per-edge rates).
 """
 from __future__ import annotations
 
@@ -39,17 +48,50 @@ PyTree = Any
 
 
 def _comms_per_step(world) -> int:
-    """The world's comms_per_grad as the trainers' whole-event count.
+    """The world's effective comm intensity as the trainers' whole-event
+    count — an ``Algorithm`` with a decoupled gossip clock (DADAO)
+    replaces ``comms_per_grad`` here exactly as it does in
+    ``World.compile``.
 
     The mesh trainers run an integer number of gossip events per super-step,
     so a fractional declared rate cannot be honored silently."""
     cps = float(world.comms_per_grad)
+    if world.algorithm is not None:
+        cps = world.algorithm.comm_rate(cps)
     if abs(cps - round(cps)) > 1e-9:
         raise ValueError(
-            f"world.comms_per_grad={cps} is not an integer; the mesh "
-            "trainers run a whole number of gossip events per step — pass "
-            "comms_per_step explicitly to choose one")
+            f"the world's effective comms per step is {cps}, not an "
+            "integer; the mesh trainers run a whole number of gossip "
+            "events per step — pass comms_per_step explicitly to choose "
+            "one")
     return int(round(cps))
+
+
+def _world_dynamics(world, accelerated: bool | None):
+    """Resolve a World's algorithm spec to the trainers' (graph, acid,
+    grad_rates) triple.
+
+    ``accelerated=None`` takes the algorithm's own arm — canonical
+    accelerated A²CiD² when the world declares no algorithm, which is the
+    trainers' historical default; a bool overrides the arm (the
+    benchmarks' base/accelerated sweep).  A DADAO decoupled gradient
+    clock folds into the per-worker rate vector: ``grad_rate`` scales
+    every worker's Poisson rate, the time-dilation realization of the
+    same rate process the compiled schedule expresses by tick thinning
+    (DESIGN.md §8/§13).  Its gossip clock feeds ``_comms_per_step``.
+    """
+    from ..core.a2cid2 import Algorithm
+
+    graph = world.static_graph()
+    algo = world.algorithm if world.algorithm is not None else Algorithm()
+    if accelerated is not None:
+        algo = dataclasses.replace(algo, accelerated=bool(accelerated))
+    acid = algo.params_for(graph)
+    grad_rates = world.workers.grad_rates
+    if algo.kind == "dadao" and float(algo.grad_rate) != 1.0:
+        base = grad_rates if grad_rates is not None else (1.0,) * graph.n
+        grad_rates = tuple(float(r) * float(algo.grad_rate) for r in base)
+    return graph, acid, grad_rates
 
 
 def _rate_vec(grad_rates, n: int) -> jax.Array | None:
@@ -104,26 +146,25 @@ class GossipTrainer:
 
     @classmethod
     def from_world(cls, world, loss_fn: Callable, optimizer: Optimizer, *,
-                   accelerated: bool = True, **kw) -> "GossipTrainer":
+                   accelerated: bool | None = None, **kw) -> "GossipTrainer":
         """Build the trainer from a declarative ``core.world.World``.
 
         The world must be static (fault-free Graph topology —
         ``World.static_graph``); its link model sets the gossip graph's edge
-        rates, its worker model the straggler clocks, its ``comms_per_grad``
-        the per-step gossip-event count, and the A²CiD² parameters come from
-        the effective graph's chi values.  A ``world.channel`` rides along
-        (adversary + drops; delayed worlds are rejected —
+        rates, its worker model the straggler clocks, its effective comm
+        intensity the per-step gossip-event count, and the dynamics come
+        from ``world.algorithm`` (``accelerated`` overrides the arm; None =
+        the algorithm's own, canonical accelerated A²CiD² when the world
+        declares none — see ``_world_dynamics``).  A ``world.channel``
+        rides along (adversary + drops; delayed worlds are rejected —
         ``check_mesh_channel``).
         """
-        from ..core.a2cid2 import params_from_graph
-
-        graph = world.static_graph()
+        graph, acid, grad_rates = _world_dynamics(world, accelerated)
         if "comms_per_step" not in kw:  # explicit override skips the check
             kw["comms_per_step"] = _comms_per_step(world)
         kw.setdefault("channel", world.channel)
-        return cls(loss_fn, optimizer, graph,
-                   params_from_graph(graph, accelerated=accelerated),
-                   grad_rates=world.workers.grad_rates, **kw)
+        return cls(loss_fn, optimizer, graph, acid,
+                   grad_rates=grad_rates, **kw)
 
     def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
         return GossipTrainState(
@@ -252,18 +293,17 @@ class StackedGossipTrainer:
 
     @classmethod
     def from_world(cls, world, grad_fn: Callable, optimizer: Optimizer, *,
-                   accelerated: bool = True, **kw) -> "StackedGossipTrainer":
+                   accelerated: bool | None = None,
+                   **kw) -> "StackedGossipTrainer":
         """Build the trainer from a declarative ``core.world.World`` (static
-        Graph topology; see ``GossipTrainer.from_world``)."""
-        from ..core.a2cid2 import params_from_graph
-
-        graph = world.static_graph()
+        Graph topology, algorithm-zoo aware; see
+        ``GossipTrainer.from_world``)."""
+        graph, acid, grad_rates = _world_dynamics(world, accelerated)
         if "comms_per_step" not in kw:  # explicit override skips the check
             kw["comms_per_step"] = _comms_per_step(world)
         kw.setdefault("channel", world.channel)
-        return cls(grad_fn, optimizer, graph,
-                   params_from_graph(graph, accelerated=accelerated),
-                   grad_rates=world.workers.grad_rates, **kw)
+        return cls(grad_fn, optimizer, graph, acid,
+                   grad_rates=grad_rates, **kw)
 
     def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
         n = self.graph.n

@@ -1,0 +1,610 @@
+"""Algorithm zoo (DESIGN.md §13): distribution, closed-form rate, and
+equivalence tests.
+
+This is the repo's first *statistical* (not bitwise) claim surface, so the
+tests split into three tiers:
+
+  * distribution — the mesh trainers' in-step sampler and the compiled
+    ``Schedule`` sampler are pinned against their OWN closed-form laws
+    (Poisson counts, Exp gaps, Binomial thinning) and against EACH OTHER on
+    the laws they genuinely share: the gradient-clock rate process and the
+    per-edge event-rate *composition*.  They intentionally do NOT share a
+    joint matching law (bank-categorical vs greedy-maximal — see the
+    ``launch/gossip_train.py`` module docstring); the star graph, where
+    every matching is a single edge, is the case where even the per-event
+    law coincides.
+  * closed-form rates — the zoo's arms against theory: adpsgd is bitwise
+    the eta=0 baseline, DADAO's decoupled clocks collapse bitwise onto the
+    coupled schedule when the rates coincide, and the accelerated/baseline
+    consensus-rate ratio on the ring tracks sqrt(chi1/chi2) (Prop 3.6).
+  * equivalence + serialization — engine == per-event reference on
+    algorithm worlds (both backends, channel/defense composition included),
+    ``Algorithm`` JSON round-trips, ``World(algorithm=None)`` is bitwise
+    the legacy replay, and a mixed-algorithm ``WorldSweep`` shares ONE jit
+    trace.
+
+Every stochastic assertion uses a FIXED seed, a tolerance derived from the
+law under test (KS: Kolmogorov asymptotic critical value; chi-squared:
+Wilson-Hilferty cube approximation; counts: CLT z-bands), and a comment
+naming the variance source.  Critical values are numpy-only (CI has no
+scipy).  Flaky-surface audit: each stochastic test was re-run across 20
+seeds (seed offsets 0..19) locally; worst-case margins are recorded in the
+test docstrings.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveDefense, Algorithm, ByzantineEdges,
+                        ChannelModel, Simulator, World, WorldSweep,
+                        WorkerModel, baseline_params, params_from_graph,
+                        ring_graph, star_graph)
+from repro.core.a2cid2 import _ALGO_TAG
+from repro.launch.gossip_train import _comms_per_step, _world_dynamics
+
+# ------------------------------------------------------- numpy-only stats
+#
+# CI installs no scipy, so critical values are closed-form:
+#  * KS one-sample: the asymptotic Kolmogorov critical value
+#      D_crit = sqrt(-ln(alpha/2) / (2 N))
+#    (exact as N -> inf; conservative-to-slightly-liberal at finite N —
+#    the tests use N >= 2000 where the approximation error is < 2%).
+#  * chi-squared upper quantile: Wilson-Hilferty cube
+#      crit = df * (1 - 2/(9 df) + z_alpha * sqrt(2/(9 df)))**3
+#    with hard-coded standard-normal quantiles (no scipy.stats.norm).
+
+_Z = {0.05: 1.6449, 1e-2: 2.3263, 1e-3: 3.0902, 1e-4: 3.7190}
+
+
+def _ks_crit(n: int, alpha: float = 1e-3) -> float:
+    return float(np.sqrt(-np.log(alpha / 2.0) / (2.0 * n)))
+
+
+def _ks_stat(samples: np.ndarray, cdf) -> float:
+    s = np.sort(np.asarray(samples, np.float64))
+    n = len(s)
+    f = cdf(s)
+    up = np.arange(1, n + 1, dtype=np.float64) / n
+    lo = np.arange(0, n, dtype=np.float64) / n
+    return float(np.max(np.maximum(up - f, f - lo)))
+
+
+def _chi2_crit(df: int, alpha: float = 1e-3) -> float:
+    z = _Z[alpha]
+    return float(df * (1.0 - 2.0 / (9.0 * df)
+                       + z * np.sqrt(2.0 / (9.0 * df))) ** 3)
+
+
+def _poisson_pmf(k: np.ndarray, lam: float) -> np.ndarray:
+    from math import lgamma
+    k = np.asarray(k, np.float64)
+    logp = -lam + k * np.log(lam) - np.array(
+        [lgamma(x + 1.0) for x in k])
+    return np.exp(logp)
+
+
+def _edge_counts_from_schedule(graph, sched) -> np.ndarray:
+    """Count per-edge comm events in a compiled Schedule."""
+    eidx = {tuple(sorted(e)): i for i, e in enumerate(graph.edges)}
+    counts = np.zeros(len(graph.edges), np.int64)
+    partners = np.asarray(sched.partners)
+    mask = np.asarray(sched.event_mask)
+    n = sched.n
+    idx = np.arange(n)
+    for r in range(sched.rounds):
+        for e in range(partners.shape[1]):
+            if not mask[r, e]:
+                continue
+            p = partners[r, e]
+            for i in idx[p != idx]:
+                j = int(p[i])
+                if i < j:
+                    counts[eidx[(int(i), j)]] += 1
+    return counts
+
+
+def _edge_counts_from_trainer(graph, num_steps: int, seed: int) -> np.ndarray:
+    """Count per-edge events drawn exactly the way ``StackedGossipTrainer``'s
+    step does: ``categorical(log(bank_edge_rates))`` over the static
+    matching bank, each drawn matching contributing all its edges."""
+    from repro.core.gossip import bank_edge_rates, matching_bank
+    bank = np.asarray(matching_bank(graph))                  # (M, n) partner
+    probs = jnp.asarray(bank_edge_rates(graph, bank), jnp.float32)
+    E = _comms_per_step(World(topology=graph))
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, num_steps)
+    idxs = np.asarray(jax.vmap(
+        lambda k: jax.random.categorical(k, jnp.log(probs), shape=(E,))
+    )(keys)).ravel()
+    eidx = {tuple(sorted(e)): i for i, e in enumerate(graph.edges)}
+    counts = np.zeros(len(graph.edges), np.int64)
+    arange = np.arange(graph.n)
+    for m in idxs:
+        p = bank[int(m)]
+        for i in arange[p != arange]:
+            j = int(p[i])
+            if i < j:
+                counts[eidx[(int(i), j)]] += 1
+    return counts
+
+
+def _two_sample_chi2(a: np.ndarray, b: np.ndarray) -> float:
+    """Two-sample chi-squared homogeneity statistic over categories."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    tot = a + b
+    pa, pb = a.sum(), b.sum()
+    ea = tot * pa / (pa + pb)
+    eb = tot * pb / (pa + pb)
+    return float((((a - ea) ** 2) / ea).sum() + (((b - eb) ** 2) / eb).sum())
+
+
+# =================================================== sampler distributions
+
+class TestSamplerDistribution:
+    """Satellite: the laws behind the trainers' in-step sampler and the
+    compiled Schedule — and exactly which of them agree."""
+
+    def test_schedule_comm_counts_poisson(self):
+        """Per-round comm event counts of a compiled coupled-clock schedule
+        are Poisson(comms_per_grad): chi-squared GOF over pooled bins.
+
+        Variance source: multinomial sampling of 4000 per-round counts.
+        Critical value: chi-squared df=len(bins)-1 at alpha=1e-3
+        (Wilson-Hilferty).  Audit (20 seeds): stat in [1.5, 11.1] vs
+        crit 22.7 — worst margin 11.6.
+        """
+        g = ring_graph(8)
+        rounds, cpg = 4000, 1.5
+        sched = World(topology=g, comms_per_grad=cpg).compile(rounds, seed=7)
+        # matching EVENTS per round (event_mask), not pairwise exchanges —
+        # comm_events_per_round() counts edges and a ring-8 maximal
+        # matching carries 3-4 of them
+        counts = np.asarray(sched.event_mask).sum(axis=1)
+        # pool the tail so every expected bin count >= 5
+        kmax = 6
+        bins = np.arange(kmax + 1)
+        pmf = _poisson_pmf(bins, cpg)
+        pmf[-1] = 1.0 - pmf[:-1].sum()          # >= kmax tail
+        obs = np.array([(counts == k).sum() for k in range(kmax)]
+                       + [(counts >= kmax).sum()], np.float64)
+        exp = pmf * rounds
+        assert exp.min() >= 5.0
+        stat = float((((obs - exp) ** 2) / exp).sum())
+        assert stat < _chi2_crit(kmax, 1e-3), (stat, obs, exp)
+
+    def test_schedule_event_gaps_exponential(self):
+        """Inter-event gaps of the compiled comm process are Exp(cpg): the
+        per-round construction (Poisson count + sorted uniforms) IS a
+        Poisson process on [0, rounds], so consecutive gaps — including
+        across round boundaries — are iid Exp(cpg).  One-sample KS.
+
+        Variance source: ~6000 event gaps at seed 3.  Critical value:
+        Kolmogorov asymptotic at alpha=1e-3.  Audit (20 seeds): D/crit in
+        [0.27, 0.67] — worst margin 0.33 of the critical value.
+        """
+        g = ring_graph(8)
+        rounds, cpg = 4000, 1.5
+        sched = World(topology=g, comms_per_grad=cpg).compile(rounds, seed=3)
+        times = np.asarray(sched.event_times, np.float64)
+        mask = np.asarray(sched.event_mask)
+        gaps = np.diff(np.sort(times[mask]))
+        d = _ks_stat(gaps, lambda t: 1.0 - np.exp(-cpg * t))
+        assert d < _ks_crit(len(gaps), 1e-3), (d, len(gaps))
+
+    def test_trainer_gossip_gaps_convention(self):
+        """The trainer's per-event mixing gaps follow the documented
+        convention: ``exponential((E, n)) / E`` — iid Exp(E) per worker, so
+        E events add up to one expected round of mixing time.  One-sample
+        KS on the gaps drawn exactly as the step draws them, plus a CLT
+        band on the per-step total.
+
+        Variance source: 1000 steps x E=2 x n=8 = 16000 Exp draws, seed 5.
+        Audit (20 seeds): KS D/crit in [0.24, 0.80]; total-mean |z| in
+        [0.07, 2.03] vs band 3.09.
+        """
+        g = ring_graph(8)
+        E = _comms_per_step(World(topology=g, comms_per_grad=2.0))
+        assert E == 2
+        steps, n = 1000, g.n
+        keys = jax.random.split(jax.random.PRNGKey(5), steps)
+        gaps = np.asarray(jax.vmap(
+            lambda k: jax.random.exponential(k, (E, n)) / max(E, 1))(keys))
+        d = _ks_stat(gaps.ravel(), lambda t: 1.0 - np.exp(-E * t))
+        assert d < _ks_crit(gaps.size, 1e-3), d
+        # per-step per-worker total mixing time: sum of E Exp(E) draws,
+        # mean 1, var 1/E; CLT over steps*n totals
+        totals = gaps.sum(axis=1)                # (steps, n)
+        z = (totals.mean() - 1.0) / np.sqrt(1.0 / E / totals.size)
+        assert abs(z) < _Z[1e-3], z
+
+    def test_grad_clock_rates_agree(self):
+        """The gradient-clock RATE process is the law the two samplers
+        share: the schedule thins unit ticks with Bernoulli(rate_i), the
+        trainer dilates inter-event times by 1/rate_i (Exp(1)/rate_i) — the
+        same per-worker event rate.  Pins (a) schedule per-worker tick
+        counts ~ Binomial(rounds, rate_i) per worker, (b) trainer mean gap
+        = 1/rate_i per worker, (c) the two empirical rates agree within a
+        joint CLT band.
+
+        Variance sources: Binomial(3000, r) per worker; mean of 3000 Exp
+        gaps per worker.  Bands: z at alpha=1e-3 Bonferroni over 2n=12
+        per-worker checks (z(1e-4)=3.72) and the cross-sampler delta at
+        the same level.  Audit (20 seeds): worst |z| 2.92 (schedule),
+        2.71 (trainer), 2.34 (cross-sampler) vs 3.72.
+        """
+        g = ring_graph(6)
+        rates = np.array([1.0, 0.8, 0.6, 0.4, 0.8, 0.5])
+        rounds = 3000
+        w = World(topology=g, workers=WorkerModel(grad_rates=tuple(rates)))
+        sched = w.compile(rounds, seed=11)
+        gs = np.asarray(sched.grad_scale())       # (rounds, n) 0/1
+        counts = gs.sum(axis=0)
+        # (a) schedule side: Binomial(rounds, r) per worker
+        z_sched = (counts - rounds * rates) / np.sqrt(
+            rounds * rates * (1 - rates) + 1e-12)
+        assert np.abs(z_sched).max() < _Z[1e-4], z_sched
+        # (b) trainer side: dts = Exp(1)/rate_i, mean 1/r, var 1/r^2
+        graph, _, grad_rates = _world_dynamics(w, None)
+        rvec = np.asarray(grad_rates)
+        np.testing.assert_allclose(rvec, rates)
+        keys = jax.random.split(jax.random.PRNGKey(11), rounds)
+        dts = np.asarray(jax.vmap(
+            lambda k: jax.random.exponential(k, (g.n,)))(keys)) / rvec
+        mean_gap = dts.mean(axis=0)
+        z_tr = (mean_gap - 1.0 / rvec) / (1.0 / rvec / np.sqrt(rounds))
+        assert np.abs(z_tr).max() < _Z[1e-4], z_tr
+        # (c) cross-sampler: empirical rates (ticks/round vs 1/mean-gap)
+        delta = counts / rounds - 1.0 / mean_gap
+        # var of difference ~ r(1-r)/R + r^2/R per worker
+        sd = np.sqrt(rates * (1 - rates) / rounds
+                     + rates ** 2 / rounds)
+        assert np.abs(delta / sd).max() < _Z[1e-4], delta / sd
+
+    def test_edge_rate_composition_ring(self):
+        """Per-edge event-rate COMPOSITION agrees between the schedule's
+        greedy-maximal matcher and the trainer's bank-categorical sampler:
+        on the edge-transitive ring both are uniform over edges.  Two-sample
+        chi-squared homogeneity over the 8 edges (the joint matching law
+        differs — this pins the shared marginal composition only).
+
+        Variance source: ~6000 schedule edge events vs ~12000 trainer edge
+        events, seeds 13/17.  Critical value: chi-squared df=7 at
+        alpha=1e-3.  Audit (20 seeds): stat in [0.30, 18.5] vs crit 24.5.
+        """
+        g = ring_graph(8)
+        sched = World(topology=g, comms_per_grad=1.5).compile(2000, seed=13)
+        a = _edge_counts_from_schedule(g, sched)
+        b = _edge_counts_from_trainer(g, num_steps=1500, seed=17)
+        stat = _two_sample_chi2(a, b)
+        assert stat < _chi2_crit(len(g.edges) - 1, 1e-3), (stat, a, b)
+
+    def test_edge_rate_composition_star_exact_per_event(self):
+        """On the star graph every maximal matching is a SINGLE edge, so the
+        bank-categorical and greedy-maximal samplers coincide per event —
+        the case where the trainers' law matches the schedule exactly, not
+        just in composition.  Asserts one-edge-per-event structurally on
+        both sides, then two-sample chi-squared over edges.
+
+        Variance source: ~3000 events per side, seeds 19/23.  Critical
+        value: chi-squared df=6 at alpha=1e-3.  Audit (20 seeds): stat in
+        [0.46, 12.1] vs crit 22.7.
+        """
+        g = star_graph(7)
+        sched = World(topology=g, comms_per_grad=1.5).compile(2000, seed=19)
+        partners = np.asarray(sched.partners)
+        mask = np.asarray(sched.event_mask)
+        idx = np.arange(g.n)
+        for r, e in zip(*np.nonzero(mask)):
+            assert (partners[r, e] != idx).sum() == 2  # one edge = 2 movers
+        a = _edge_counts_from_schedule(g, sched)
+        from repro.core.gossip import matching_bank
+        bank = np.asarray(matching_bank(g))
+        assert all((row != np.arange(g.n)).sum() == 2 for row in bank)
+        b = _edge_counts_from_trainer(g, num_steps=3000, seed=23)
+        stat = _two_sample_chi2(a, b)
+        assert stat < _chi2_crit(len(g.edges) - 1, 1e-3), (stat, a, b)
+
+    def test_dadao_gate_composes_with_straggler_thinning(self):
+        """DADAO's decoupled gradient clock (Bernoulli(grad_rate) from the
+        0xDADA0 stream) ANDs with straggler thinning: per-worker tick
+        counts ~ Binomial(rounds, grad_rate * rate_i).  Also pins stream
+        independence: the straggler draws are bitwise unchanged by the
+        algorithm gate.
+
+        Variance source: Binomial(3000, 0.48) per worker, seed 29.  Band:
+        z at alpha=1e-4 (Bonferroni over n=6 workers).  Audit (20 seeds):
+        worst |z| 3.29 vs 3.72 — the tightest margin in the suite.
+        """
+        g = ring_graph(6)
+        rounds, gr, sr = 3000, 0.6, 0.8
+        w = World(topology=g,
+                  workers=WorkerModel(grad_rates=(sr,) * g.n),
+                  algorithm=Algorithm("dadao", grad_rate=gr))
+        sched = w.compile(rounds, seed=29)
+        counts = np.asarray(sched.grad_scale()).sum(axis=0)
+        p = gr * sr
+        z = (counts - rounds * p) / np.sqrt(rounds * p * (1 - p))
+        assert np.abs(z).max() < _Z[1e-4], z
+        # stream independence: straggler-only mask == gated mask OR'd back
+        # through an independent gate draw (the gate stream is 0xDADA0)
+        w0 = dataclasses.replace(w, algorithm=None)
+        m0 = np.asarray(w0.compile(rounds, seed=29).grad_scale())
+        rng = np.random.default_rng(np.random.SeedSequence([29, _ALGO_TAG]))
+        gate = rng.uniform(size=(rounds, g.n)) < gr
+        np.testing.assert_array_equal(
+            np.asarray(sched.grad_scale()), m0 * gate)
+
+
+# ===================================================== closed-form rates
+
+def _zero_grad_fn(x, key, wid):
+    g = jnp.zeros_like(x)
+    return jnp.asarray(0.0, x.dtype), g
+
+
+def _spread_state(sim, n, d, seed):
+    st = sim.init(jnp.zeros(d), n, jax.random.PRNGKey(100 + seed))
+    x = jax.random.normal(jax.random.PRNGKey(200 + seed), (n, d))
+    return st._replace(x=x, x_tilde=jnp.array(x))
+
+
+def _consensus_slope(curve, floor=1e-9):
+    """Least-squares slope of log(consensus) over the prefix where the
+    curve is still far above the float32 noise floor."""
+    c = np.asarray(curve, np.float64)
+    keep = c > floor
+    last = int(np.argmin(keep)) if not keep.all() else len(c)
+    last = max(last, 4)
+    y = np.log(c[:last])
+    t = np.arange(last, dtype=np.float64)
+    return float(np.polyfit(t, y, 1)[0])
+
+
+class TestClosedFormRates:
+    """Satellite: the zoo against theory (Prop 3.6 and the DADAO/adpsgd
+    reductions)."""
+
+    def test_adpsgd_is_bitwise_eta0_baseline(self):
+        """``Algorithm("adpsgd")`` lowers to bitwise ``baseline_params``
+        (eta=0, alpha=alpha_tilde=1/2, chi=chi1) — and so does the
+        ``Algorithm("a2cid2", accelerated=False)`` counterfactual arm."""
+        g = ring_graph(8)
+        base = baseline_params(g.chi1())
+        assert Algorithm("adpsgd").params_for(g) == base
+        assert Algorithm("a2cid2", accelerated=False).params_for(g) == base
+        assert base.eta == 0.0 and base.alpha == 0.5
+        assert Algorithm("adpsgd", accelerated=True).params_for(g) == \
+            params_from_graph(g, True)
+
+    def test_adpsgd_replay_bitwise_equals_explicit_baseline(self):
+        """An ``Algorithm("adpsgd")`` world replayed through
+        ``run_worlds(worlds=...)`` is bit-for-bit the legacy replay with
+        explicit ``baseline_params`` — same schedule, same dynamics."""
+        g = ring_graph(8)
+        n, d, rounds = 8, 12, 10
+        sim = Simulator(_zero_grad_fn, params_from_graph(g, True), gamma=0.0)
+        w = World(topology=g, algorithm=Algorithm("adpsgd"))
+        sched = w.compile(rounds, seed=1)
+        st = _spread_state(sim, n, d, 0)
+        fin, tr = sim.run_worlds([st], [sched], worlds=[w])
+        legacy = dataclasses.replace(sim, params=baseline_params(g.chi1()))
+        sched0 = dataclasses.replace(w, algorithm=None).compile(rounds, seed=1)
+        np.testing.assert_array_equal(np.asarray(sched.partners),
+                                      np.asarray(sched0.partners))
+        fin0, tr0 = legacy.run_schedule(st, sched0)
+        np.testing.assert_array_equal(np.asarray(fin.x[0]),
+                                      np.asarray(fin0.x))
+        np.testing.assert_array_equal(np.asarray(tr.consensus[0]),
+                                      np.asarray(tr0.consensus))
+
+    def test_dadao_coupled_settings_are_bitwise_noops(self):
+        """DADAO with grad_rate=1 and gossip_rate None (or == the world's
+        comms_per_grad) compiles the bitwise-identical schedule: coupled
+        settings touch neither the main rng stream nor the masks."""
+        g = ring_graph(8)
+        w0 = World(topology=g, comms_per_grad=1.5)
+        for algo in (Algorithm("dadao"),
+                     Algorithm("dadao", gossip_rate=1.5)):
+            w = dataclasses.replace(w0, algorithm=algo)
+            s0 = w0.compile(12, seed=5)
+            s1 = w.compile(12, seed=5)
+            np.testing.assert_array_equal(np.asarray(s0.partners),
+                                          np.asarray(s1.partners))
+            np.testing.assert_array_equal(np.asarray(s0.event_times),
+                                          np.asarray(s1.event_times))
+            np.testing.assert_array_equal(np.asarray(s0.event_mask),
+                                          np.asarray(s1.event_mask))
+            np.testing.assert_array_equal(s0.grad_scale(), s1.grad_scale())
+
+    def test_dadao_decoupled_rates_change_the_right_axis(self):
+        """Decoupling moves exactly one axis per knob: gossip_rate scales
+        the comm event intensity (CLT band on total events), grad_rate
+        thins ONLY the gradient masks (comm stream bitwise unchanged).
+
+        Variance source: Poisson(rounds * rate) total event count, seed 7.
+        Audit (20 seeds): gossip-total worst |z| 1.45, thinned-fraction
+        worst |z| 2.01 vs band 3.09.
+        """
+        g = ring_graph(8)
+        rounds = 1000
+        w_fast = World(topology=g,
+                       algorithm=Algorithm("dadao", gossip_rate=2.0))
+        s_fast = w_fast.compile(rounds, seed=7)
+        tot = int(np.asarray(s_fast.event_mask).sum())
+        z = (tot - rounds * 2.0) / np.sqrt(rounds * 2.0)
+        assert abs(z) < _Z[1e-3], (tot, z)
+        w_thin = World(topology=g,
+                       algorithm=Algorithm("dadao", grad_rate=0.5))
+        s_thin = w_thin.compile(rounds, seed=7)
+        s_ref = World(topology=g).compile(rounds, seed=7)
+        np.testing.assert_array_equal(np.asarray(s_thin.partners),
+                                      np.asarray(s_ref.partners))
+        np.testing.assert_array_equal(np.asarray(s_thin.event_times),
+                                      np.asarray(s_ref.event_times))
+        frac = float(np.asarray(s_thin.grad_scale()).mean())
+        zf = (frac - 0.5) / np.sqrt(0.25 / (rounds * g.n))
+        assert abs(zf) < _Z[1e-3], frac
+
+    def test_ring_consensus_rate_ratio_tracks_chi(self):
+        """Prop 3.6 on the ring: pure-gossip (gamma=0) consensus decays at
+        rate ~ 1/chi1 for the baseline and ~ 1/sqrt(chi1 chi2) accelerated,
+        so the slope ratio of log-consensus tracks sqrt(chi1/chi2)
+        (~3.74 on the n=16 ring).  Both arms replay the SAME schedules in
+        ONE batched dispatch (worlds=...), 4 seeds.
+
+        comms_per_grad MUST be 1.0 here: eta is tuned for the unit-rate
+        event model the chi's are computed from.  Scaling gossip intensity
+        without rescaling eta breaks the tuning — at cpg=2 the baseline
+        rate doubles but the accelerated rate only grows ~sqrt(2), and the
+        measured ratio drops to ~2.3 (observed while calibrating).
+
+        Variance source: schedule realization (matching sequence + event
+        times) — gradient noise is off; the baseline per-event slope
+        matches 1/(2 chi1) almost exactly, the accelerated slope carries
+        the seed variance.  Tolerance: the prediction is an asymptotic
+        bound (the measured ratio sits systematically ~10-15% BELOW it),
+        so the band is max(4 * seed-std, 40% systematic).  The systematic
+        floor matters: a low-variance seed block can't shrink the band
+        below the known asymptotic slack.  Audit (20 disjoint 4-seed
+        blocks): block means in [2.54, 3.41] (prediction 3.743), stds in
+        [0.10, 0.71], worst deviation/band 0.81 with the 40% floor (1.28
+        with a 25% floor — that floor FAILS).  The null hypothesis (ratio
+        1.0, no acceleration) sits 1.8 bands away — still rejected.
+        """
+        g = ring_graph(16)
+        n, d, rounds = 16, 8, 300
+        pred = float(np.sqrt(g.chi1() / g.chi2()))
+        sim = Simulator(_zero_grad_fn, params_from_graph(g, True), gamma=0.0)
+        seeds = [0, 1, 2, 3]
+        w_acc = World(topology=g, comms_per_grad=1.0,
+                      algorithm=Algorithm("a2cid2"))
+        w_bas = World(topology=g, comms_per_grad=1.0,
+                      algorithm=Algorithm("adpsgd"))
+        worlds, scheds, states = [], [], []
+        for s in seeds:
+            sched = w_acc.compile(rounds, seed=s)   # shared by both arms
+            for w in (w_acc, w_bas):
+                worlds.append(w)
+                scheds.append(sched)
+                states.append(_spread_state(sim, n, d, s))
+        fin, tr = sim.run_worlds(states, scheds, worlds=worlds)
+        cons = np.asarray(tr.consensus)            # (2*seeds, rounds)
+        ratios = []
+        for k in range(len(seeds)):
+            sl_acc = _consensus_slope(cons[2 * k])
+            sl_bas = _consensus_slope(cons[2 * k + 1])
+            ratios.append(sl_acc / sl_bas)
+        ratios = np.asarray(ratios)
+        band = max(4.0 * float(ratios.std()), 0.40 * pred)
+        assert abs(float(ratios.mean()) - pred) < band, (ratios, pred, band)
+
+
+# ====================================== equivalence + serialization
+
+ALGOS = [Algorithm("a2cid2"), Algorithm("adpsgd"),
+         Algorithm("dadao", grad_rate=0.7, gossip_rate=2.0)]
+
+
+def _noise_grad_fn(x, key, wid):
+    g = 0.1 * jax.random.normal(key, x.shape)
+    return jnp.sum(g * x), g
+
+
+class TestEquivalenceSerialization:
+    """Satellite: algorithm worlds replay identically on every path and
+    survive the JSON wire."""
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+    @pytest.mark.parametrize("algo", ALGOS, ids=lambda a: a.kind)
+    def test_engine_matches_reference_on_algorithm_worlds(self, backend,
+                                                          algo):
+        """FlatGossipEngine == per-event reference on each zoo arm, both
+        kernel backends, hostile channel + defense composed in (float
+        tolerance 1e-5: same numerics, different reduction order)."""
+        g = ring_graph(8)
+        n, d = 8, 12
+        rounds = 6 if backend == "pallas_interpret" else 15
+        w = World(topology=g, algorithm=algo,
+                  channel=ChannelModel(
+                      adversary=ByzantineEdges(g.edges[:1], "sign_flip")),
+                  defense=AdaptiveDefense())
+        sim = Simulator(_noise_grad_fn, w.algorithm_params(), gamma=0.05,
+                        backend=backend, robust_clip=5.0)
+        sched = w.compile(rounds, seed=2)
+        st = _spread_state(sim, n, d, 0)
+        fin_r, tr_r = sim.run_worlds([st], [sched], worlds=[w], engine=False)
+        fin_e, tr_e = sim.run_worlds([st], [sched], worlds=[w], engine=True)
+        np.testing.assert_allclose(fin_e.x, fin_r.x, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(fin_e.x_tilde, fin_r.x_tilde,
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(tr_e.consensus, tr_r.consensus,
+                                   atol=1e-5, rtol=1e-4)
+
+    @pytest.mark.parametrize("algo", ALGOS + [Algorithm("adpsgd",
+                                                        accelerated=True)],
+                             ids=lambda a: f"{a.kind}-{a.accelerated}")
+    def test_algorithm_json_roundtrip(self, algo):
+        """Algorithm -> JSON -> Algorithm is identity; a World carrying it
+        round-trips and recompiles the bitwise-identical schedule."""
+        back = Algorithm.from_json(algo.to_json())
+        assert back == algo
+        w = World(topology=ring_graph(8), algorithm=algo)
+        w2 = World.from_json(w.to_json())
+        assert w2.algorithm == algo
+        s1, s2 = w.compile(8, seed=4), w2.compile(8, seed=4)
+        np.testing.assert_array_equal(np.asarray(s1.partners),
+                                      np.asarray(s2.partners))
+        np.testing.assert_array_equal(np.asarray(s1.event_times),
+                                      np.asarray(s2.event_times))
+        np.testing.assert_array_equal(s1.grad_scale(), s2.grad_scale())
+        # the wire format is plain JSON with the documented keys
+        d = json.loads(algo.to_json())
+        assert set(d) == {"kind", "accelerated", "grad_rate", "gossip_rate"}
+
+    def test_world_algorithm_none_is_bitwise_legacy(self):
+        """``World(algorithm=None)`` compiles and replays bit-for-bit the
+        pre-zoo schedule: the zoo axis is strictly additive."""
+        g = ring_graph(8)
+        w = World(topology=g, comms_per_grad=1.5)
+        sched = w.compile(10, seed=9)
+        from repro.core import make_schedule
+        legacy = make_schedule(g, 10, comms_per_grad=1.5, seed=9)
+        np.testing.assert_array_equal(np.asarray(sched.partners),
+                                      np.asarray(legacy.partners))
+        np.testing.assert_array_equal(np.asarray(sched.event_times),
+                                      np.asarray(legacy.event_times))
+        np.testing.assert_array_equal(np.asarray(sched.grad_times),
+                                      np.asarray(legacy.grad_times))
+        assert "algorithm" in w.to_dict() and w.to_dict()["algorithm"] is None
+        assert World.from_json(w.to_json()).algorithm is None
+
+    def test_mixed_algorithm_sweep_single_trace(self):
+        """A mixed-algorithm WorldSweep (None + all three kinds) replays as
+        ONE batched dispatch: exactly one new jit trace across both the
+        engine and reference caches (the test_batched_replay idiom)."""
+        g = ring_graph(8)
+        n, d, rounds = 8, 10, 6
+        sweep = WorldSweep.over(
+            World(topology=g), seeds=(0,),
+            algorithm=[None] + list(ALGOS))
+        scheds = sweep.compile(rounds)
+        worlds = [w for w, _ in sweep.points()]
+        sim = Simulator(_noise_grad_fn, params_from_graph(g, True),
+                        gamma=0.05)
+        states = [_spread_state(sim, n, d, i) for i in range(len(scheds))]
+        before = (Simulator._run_worlds_jit._cache_size()
+                  + Simulator._run_worlds_reference_jit._cache_size())
+        fin, tr = sim.run_worlds(states, scheds, worlds=worlds)
+        after = (Simulator._run_worlds_jit._cache_size()
+                 + Simulator._run_worlds_reference_jit._cache_size())
+        assert after - before == 1, (before, after)
+        assert tr.consensus.shape == (len(scheds), rounds)
+        # the sweep grid serializes with the algorithm column intact
+        got = [w.algorithm for w in worlds]
+        assert got[0] is None and [a.kind for a in got[1:]] == \
+            [a.kind for a in ALGOS]
