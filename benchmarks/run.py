@@ -1431,6 +1431,157 @@ def bench_train(seed: int = 0) -> list[str]:
     return rows
 
 
+# --------------------------------------------------------------------- serve
+# Gossip-serving fleet (DESIGN.md §14): {no-gossip, base async, A²CiD²} x
+# {clean ring, lossy ring, churn} fleets serving ONE shared request trace.
+
+_SERVE_BENCH = {
+    "replicas": 8, "rounds": 120, "max_batch": 4, "max_len": 24,
+    "rate": 1.2, "prompt_len": (3, 6), "gen_len": (4, 10),
+    "arrive_frac": 0.55,
+    # drift/stall physics: every replica random-walks by drift_scale per
+    # round (online fine-tuning stand-in); each gossip event costs its
+    # replica stall_per_event decode-rounds of debt (communication steals
+    # compute) — what makes the p95-retention gate a real claim
+    "drift_scale": 0.02, "stall_per_event": 0.03,
+    "delay_horizon": 2, "delay_prob": 0.3, "drop_prob": 0.1,
+    "kill_round_frac": 0.33,   # churn scenario: one replica dies here
+    "tail_frac": 0.25,
+    "p95_retention_max": 1.15,
+}
+
+
+def bench_serve(seed: int = 0) -> list[str]:
+    """The millions-of-users scenario: a continuous-batching inference
+    fleet whose replicas never stop averaging.  Every fleet admits the
+    IDENTICAL request trace (``ServeLoad``'s dedicated rng stream) and
+    reports throughput, p50/p95/p99 latency, request loss, and consensus
+    distance — the latency cost and consensus benefit of gossip, measured
+    under one workload.
+
+    Arms: {none (comms_per_grad=0), adpsgd, a2cid2} x {clean ring, lossy
+    ring (stale reads + drops), churn (one replica killed mid-serve)}.
+    CI gates (ci.yml): the A²CiD² clean-ring fleet holds p95 latency
+    within ``p95_retention_max`` of the no-gossip fleet while its final
+    consensus distance stays a small fraction of the no-gossip drift; the
+    churn fleets complete EVERY request (re-admission, zero loss).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.nano_lm import train_bench
+    from repro.core import (Algorithm, ChannelModel, DelayProcess,
+                            PhaseSwitch, ServeLoad, World, ring_graph)
+    from repro.core.flatbuf import FlatLayout
+    from repro.launch.fleet import GossipFleet, make_fleet_step
+    from repro.models import Model
+
+    c = _SERVE_BENCH
+    W, rounds = c["replicas"], c["rounds"]
+    cfg = train_bench()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    load = ServeLoad(rate=c["rate"], prompt_len=tuple(c["prompt_len"]),
+                     gen_len=tuple(c["gen_len"]),
+                     arrive_frac=c["arrive_frac"])
+    base = World(topology=ring_graph(W), serve=load)
+    lossy = ChannelModel(delay=DelayProcess(horizon=c["delay_horizon"],
+                                            prob=c["delay_prob"]),
+                         drop_prob=c["drop_prob"])
+    kill_round = max(1, int(c["kill_round_frac"] * rounds))
+    kill_mask = tuple(i != W - 1 for i in range(W))
+    algos = {
+        "none": dict(algorithm=Algorithm("adpsgd"), comms_per_grad=0.0),
+        "adpsgd": dict(algorithm=Algorithm("adpsgd")),
+        "a2cid2": dict(algorithm=Algorithm("a2cid2")),
+    }
+    scenarios = {
+        "clean": dict(),
+        "lossy": dict(channel=lossy),
+        "churn": dict(faults=(PhaseSwitch(kill_round, active=kill_mask),)),
+    }
+
+    # one decode executable for all 9 arms (they differ only in schedule
+    # data), packed over the shared (W, D) layout
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (W,) + a.shape),
+                           params)
+    layout = FlatLayout.from_pytree(stacked, stacked=True)
+    step_fn = jax.jit(make_fleet_step(model, layout))
+
+    rows: list[str] = []
+    fleets: dict = {}
+    for aname, akw in algos.items():
+        for sname, skw in scenarios.items():
+            world = dataclasses.replace(base, **akw, **skw)
+            fleet = GossipFleet(model, params, world,
+                                max_batch=c["max_batch"],
+                                max_len=c["max_len"], drift="perturb",
+                                drift_scale=c["drift_scale"],
+                                stall_per_event=c["stall_per_event"],
+                                decode_step_fn=step_fn)
+            rep = fleet.run(rounds, seed=seed)
+            summ = rep.summary()
+            idxs = _curve_indices(len(rep.consensus))
+            fleets[f"{aname}/{sname}"] = {
+                "world": world.to_dict(),
+                **summ,
+                "round_axis": [int(i) for i in idxs],
+                "consensus": [float(rep.consensus[i]) for i in idxs],
+            }
+            rows.append(
+                f"serve_{aname}_{sname},"
+                f"{1e6 * rep.wall_seconds / max(rounds, 1):.0f},"
+                f"p95={summ['latency_p95']:.1f};lost={summ['lost']};"
+                f"tok_per_round={summ['throughput_tokens_per_round']:.2f}")
+
+    trace = load.sample_trace(rounds, seed)
+
+    def tail_ratio(entry):
+        cur = np.asarray(entry["consensus"])
+        k = max(1, int(len(cur) * c["tail_frac"]))
+        mid = np.mean(cur[len(cur) // 2: len(cur) // 2 + k])
+        return float(np.mean(cur[-k:]) / max(mid, 1e-12))
+
+    acid, nog = fleets["a2cid2/clean"], fleets["none/clean"]
+    churn_arms = {k: v for k, v in fleets.items() if k.endswith("/churn")}
+    gates = {
+        "p95_retention": acid["latency_p95"] / max(nog["latency_p95"], 1e-9),
+        "p95_retention_max": c["p95_retention_max"],
+        "consensus_ratio_vs_nogossip":
+            acid["consensus_final"] / max(nog["consensus_final"], 1e-12),
+        "consensus_tail_over_mid": tail_ratio(acid),
+        "churn_lost": {k: v["lost"] for k, v in churn_arms.items()},
+        "churn_restarted": {k: v["restarted"]
+                            for k, v in churn_arms.items()},
+    }
+    gates["p95_retention_ok"] = \
+        gates["p95_retention"] <= c["p95_retention_max"]
+    # bounded consensus: gossip holds the fleet at a small fraction of the
+    # unmixed random-walk drift AND its own tail has stopped growing the
+    # way the no-gossip walk does (linear => tail/mid ~ 2 at these sizes)
+    gates["consensus_bounded_ok"] = (
+        gates["consensus_ratio_vs_nogossip"] <= 0.25
+        and gates["consensus_tail_over_mid"] <= 1.75)
+    gates["churn_zero_loss_ok"] = all(
+        v["lost"] == 0 for v in churn_arms.values())
+
+    report = {
+        "config": {k: list(v) if isinstance(v, tuple) else v
+                   for k, v in c.items()},
+        "model": {"config": cfg.name, "params": model.param_count(params),
+                  "flat_dim": int(layout.d)},
+        "trace": {"requests": trace.num_requests, "rounds": rounds,
+                  "kill_round": kill_round},
+        "fleets": fleets,
+        "gates": gates,
+    }
+    _dump_json(__file__, "BENCH_serve.json", report)
+    rows.append(f"serve_gates,0,p95_retention="
+                f"{gates['p95_retention']:.3f};zero_loss="
+                f"{gates['churn_zero_loss_ok']}")
+    return rows
+
+
 BENCHES = {
     "table2": bench_table2_comm_rates,
     "table3": bench_table3_training_time,
@@ -1445,6 +1596,7 @@ BENCHES = {
     "defense": bench_defense,
     "sweep": bench_batched_sweep,
     "train": bench_train,
+    "serve": bench_serve,
     "roofline": bench_roofline_summary,
 }
 
@@ -1488,6 +1640,9 @@ def main() -> None:
             "nano_lm_bench": {"rounds": 60, "batch_size": 1,
                               "seq_len": 16},
         }
+        # serve smoke: 4 replicas, fewer rounds — the retention and
+        # zero-loss gates still bind (the trace shrinks with the rounds)
+        _SERVE_BENCH.update(replicas=4, rounds=60, max_batch=2)
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

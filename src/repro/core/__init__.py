@@ -18,14 +18,14 @@ from .graphs import (Graph, TopologyPhase, TopologySchedule, build_graph,
                      complete_graph, exponential_graph, hypercube_graph,
                      ring_graph, star_graph, torus_graph)
 from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
-from .world import (ChurnProcess, LinkModel, PhaseSwitch, WorkerModel,
-                    World, WorldSweep)
+from .world import (SERVE_ARRIVE_KEY, ChurnProcess, LinkModel, PhaseSwitch,
+                    RequestTrace, ServeLoad, WorkerModel, World, WorldSweep)
 
 __all__ = [
     "ByzantineEdges", "ChannelModel", "DelayProcess", "degradation_profile",
     "AdaptiveDefense", "DefenseTrace",
-    "ChurnProcess", "LinkModel", "PhaseSwitch", "WorkerModel", "World",
-    "WorldSweep",
+    "ChurnProcess", "LinkModel", "PhaseSwitch", "RequestTrace",
+    "SERVE_ARRIVE_KEY", "ServeLoad", "WorkerModel", "World", "WorldSweep",
     "A2CiD2Params", "Algorithm", "acid_params", "apply_mixing",
     "baseline_params",
     "consensus_distance", "gradient_event", "matched_p2p_update",

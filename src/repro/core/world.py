@@ -56,6 +56,12 @@ from .graphs import Graph, TopologyPhase, TopologySchedule
 # rng-stream tag for churn draws — independent of the schedule's main stream
 # (events.py uses 0x48455 for straggler thinning)
 _CHURN_TAG = 0xC50C4
+# rng-stream tag for serving-load draws (arrival trace): independent of BOTH
+# the schedule and churn streams, so every world sharing a ServeLoad spec +
+# seed sees the identical request trace regardless of topology/channel/faults
+_SERVE_TAG = 0x5E17E
+# reserved extras key: per-round request-arrival counts at event slot 0
+SERVE_ARRIVE_KEY = "arrive"
 
 
 def _as_float_tuple(x, field: str) -> tuple[float, ...] | None:
@@ -379,6 +385,128 @@ def _fault_from_dict(d: dict):
                      "(expected 'churn' or 'phase_switch')")
 
 
+# --------------------------------------------------------------- serving load
+
+@dataclasses.dataclass(frozen=True)
+class RequestTrace:
+    """A materialized arrival trace: one row per request, sorted by arrival
+    round.  Derived data (``ServeLoad.sample_trace``), not serialized — the
+    (spec, rounds, seed) triple regenerates it bit-for-bit."""
+
+    arrival_round: np.ndarray  # (N,) int32
+    prompt_len: np.ndarray     # (N,) int32
+    gen_len: np.ndarray        # (N,) int32
+
+    @property
+    def num_requests(self) -> int:
+        return int(self.arrival_round.shape[0])
+
+    def counts(self, rounds: int) -> np.ndarray:
+        """(rounds,) arrivals per round."""
+        return np.bincount(self.arrival_round,
+                           minlength=rounds).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeLoad:
+    """The serving-workload axis of a World (DESIGN.md §14): a shared
+    request arrival trace the gossip-serving fleet admits from while its
+    replicas keep averaging.
+
+    rate — mean fleet-wide request arrivals per round (Poisson), ignored
+      when explicit ``arrivals`` are given.
+    prompt_len / gen_len — inclusive (lo, hi) ranges sampled uniformly per
+      request (heterogeneous work, the continuous-batching stressor).
+    arrive_frac — arrivals land in rounds ``[0, ceil(arrive_frac * R))``;
+      the remaining tail is drain headroom.
+    arrivals — optional explicit per-round counts (a replayed trace);
+      padded/truncated to the compiled horizon.
+
+    Draws come from a dedicated rng stream (seed x ``_SERVE_TAG``), so two
+    worlds differing in topology/channel/faults but sharing a ServeLoad and
+    seed see the IDENTICAL trace — the "one request trace across fleets"
+    contract ``BENCH_serve.json`` relies on.
+    """
+
+    rate: float = 1.0
+    prompt_len: tuple[int, int] = (4, 8)
+    gen_len: tuple[int, int] = (4, 16)
+    arrive_frac: float = 0.6
+    arrivals: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if not (np.isfinite(self.rate) and self.rate >= 0):
+            raise ValueError(f"ServeLoad.rate must be >= 0, got {self.rate}")
+        for name in ("prompt_len", "gen_len"):
+            rng_ = getattr(self, name)
+            rng_ = tuple(int(v) for v in rng_)
+            object.__setattr__(self, name, rng_)
+            if len(rng_) != 2 or not 1 <= rng_[0] <= rng_[1]:
+                raise ValueError(f"ServeLoad.{name} must be (lo, hi) with "
+                                 f"1 <= lo <= hi, got {rng_}")
+        if not 0.0 < self.arrive_frac <= 1.0:
+            raise ValueError(f"ServeLoad.arrive_frac must lie in (0, 1], "
+                             f"got {self.arrive_frac}")
+        if self.arrivals is not None:
+            arr = tuple(int(a) for a in self.arrivals)
+            if any(a < 0 for a in arr):
+                raise ValueError(f"ServeLoad.arrivals must be >= 0, got "
+                                 f"{[a for a in arr if a < 0]}")
+            object.__setattr__(self, "arrivals", arr)
+
+    def _rng(self, seed: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([int(seed), _SERVE_TAG]))
+
+    def sample_counts(self, rounds: int, seed: int = 0) -> np.ndarray:
+        """(rounds,) arrivals per round — explicit trace or Poisson draws
+        over the arrival window."""
+        if self.arrivals is not None:
+            out = np.zeros(rounds, np.int32)
+            k = min(rounds, len(self.arrivals))
+            out[:k] = self.arrivals[:k]
+            return out
+        window = int(np.ceil(self.arrive_frac * rounds))
+        out = np.zeros(rounds, np.int32)
+        out[:window] = self._rng(seed).poisson(self.rate, size=window)
+        return out
+
+    def sample_trace(self, rounds: int, seed: int = 0) -> RequestTrace:
+        """The full per-request trace.  Length draws come AFTER the count
+        draws from the same stream, so counts alone (``sample_counts``,
+        what ``compile`` embeds in extras) are a prefix-consistent view."""
+        counts = self.sample_counts(rounds, seed)
+        n = int(counts.sum())
+        rng = self._rng(seed)
+        if self.arrivals is None:
+            window = int(np.ceil(self.arrive_frac * rounds))
+            rng.poisson(self.rate, size=window)  # replay the count draws
+        plen = rng.integers(self.prompt_len[0], self.prompt_len[1] + 1,
+                            size=n).astype(np.int32)
+        glen = rng.integers(self.gen_len[0], self.gen_len[1] + 1,
+                            size=n).astype(np.int32)
+        return RequestTrace(
+            arrival_round=np.repeat(np.arange(rounds, dtype=np.int32),
+                                    counts),
+            prompt_len=plen, gen_len=glen)
+
+    def to_dict(self) -> dict:
+        return {"rate": self.rate, "prompt_len": list(self.prompt_len),
+                "gen_len": list(self.gen_len),
+                "arrive_frac": self.arrive_frac,
+                "arrivals": None if self.arrivals is None
+                else list(self.arrivals)}
+
+    @staticmethod
+    def from_dict(d: dict) -> "ServeLoad":
+        return ServeLoad(rate=d.get("rate", 1.0),
+                         prompt_len=tuple(d.get("prompt_len", (4, 8))),
+                         gen_len=tuple(d.get("gen_len", (4, 16))),
+                         arrive_frac=d.get("arrive_frac", 0.6),
+                         arrivals=None if d.get("arrivals") is None
+                         else tuple(d["arrivals"]))
+
+
 # ---------------------------------------------------- topology serialization
 
 def _topology_to_dict(t: Graph | TopologySchedule) -> dict:
@@ -430,6 +558,10 @@ class World:
     # otherwise — its clock structure lowers into the schedule here, its
     # dynamics column via ``algorithm_params()``
     algorithm: Algorithm | None = None
+    # serving workload (DESIGN.md §14): None = training-only world (bitwise
+    # PR 7 compile); a ServeLoad attaches per-round request-arrival counts
+    # as ``extras[SERVE_ARRIVE_KEY]`` for the gossip-serving fleet driver
+    serve: "ServeLoad | None" = None
 
     def __post_init__(self):
         if not isinstance(self.topology, (Graph, TopologySchedule)):
@@ -518,6 +650,9 @@ class World:
                                                          Algorithm):
             raise ValueError("algorithm must be an Algorithm, "
                              f"got {type(self.algorithm).__name__}")
+        if self.serve is not None and not isinstance(self.serve, ServeLoad):
+            raise ValueError("serve must be a ServeLoad, "
+                             f"got {type(self.serve).__name__}")
 
     # ------------------------------------------------------------ structure
     @property
@@ -709,6 +844,14 @@ class World:
             # the controller thins AFTER the channel: its degradation
             # score reads the channel extras, and gated slots zero them
             sched = self.defense.apply_comm_control(sched)
+        if self.serve is not None:
+            # arrivals ride LAST so comm-control thinning (which zeroes
+            # gated slots' extras) can't erase workload data; counts sit
+            # at event slot 0 (kmax >= 1 always) of every round
+            counts = self.serve.sample_counts(sched.rounds, seed)
+            arrive = np.zeros(sched.partners.shape[:2], np.float32)
+            arrive[:, 0] = counts
+            sched = sched.with_extras(**{SERVE_ARRIVE_KEY: arrive})
         return sched
 
     def round_seconds(self, schedule) -> np.ndarray:
@@ -741,7 +884,9 @@ class World:
                 "defense": None if self.defense is None
                 else self.defense.to_dict(),
                 "algorithm": None if self.algorithm is None
-                else self.algorithm.to_dict()}
+                else self.algorithm.to_dict(),
+                "serve": None if self.serve is None
+                else self.serve.to_dict()}
 
     @staticmethod
     def from_dict(d: dict) -> "World":
@@ -758,7 +903,9 @@ class World:
                      defense=None if d.get("defense") is None
                      else AdaptiveDefense.from_dict(d["defense"]),
                      algorithm=None if d.get("algorithm") is None
-                     else Algorithm.from_dict(d["algorithm"]))
+                     else Algorithm.from_dict(d["algorithm"]),
+                     serve=None if d.get("serve") is None
+                     else ServeLoad.from_dict(d["serve"]))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

@@ -1,21 +1,29 @@
 """Continuous-batching request scheduler for the serving path.
 
-A minimal production-shaped serving loop: requests arrive with different
-prompt lengths and generation budgets; the scheduler packs up to
-``max_batch`` active sequences into one fixed-shape decode batch (padded
-slots), admits new requests as slots free up, and steps them together
-through ``Model.decode_step``.  Fixed shapes keep a single compiled
-executable; per-slot positions index into per-slot cache segments of a
-shared slot-batched cache.
+A production-shaped serving loop: requests arrive with different prompt
+lengths and generation budgets; the scheduler packs up to ``max_batch``
+active sequences into one fixed-shape decode batch (padded slots), admits
+new requests as slots free up, and steps them together through
+``Model.decode_step`` — each slot at its OWN position.  Fixed shapes keep a
+single compiled executable; per-slot positions enter the model as a (B,)
+vector (batched RoPE, per-slot cache row, per-slot visibility mask), so a
+freshly-admitted request streams its prompt while its neighbors generate,
+and every slot's token stream is bitwise the one sequential ``generate``
+would produce (tests/test_batching.py pins this).
+
+The host-side slot state machine lives in ``SlotScheduler`` so the fleet
+driver (``launch/fleet.py``) can run one scheduler per replica while all
+replicas share ONE jitted step function (``make_batched_step``).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models.transformer import Model
 
@@ -23,60 +31,53 @@ from ..models.transformer import Model
 @dataclasses.dataclass
 class Request:
     uid: int
-    prompt: jax.Array          # (P,) int32
+    prompt: jax.Array          # (P,) int32 (numpy or jax; host-indexed)
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # serving-trace bookkeeping (filled by the fleet driver)
+    arrive_round: int = 0
+    done_round: int = -1
+    restarts: int = 0          # times re-admitted after a churn kill
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    pos: int = 0               # next cache position for this slot
+    pos: int = 0               # tokens fed so far == next cache position
     prompt_cursor: int = 0     # how much of the prompt has been fed
     generated: int = 0
 
 
-class ContinuousBatcher:
-    """Slot-based continuous batching over the decode path."""
+class SlotScheduler:
+    """Host-side slot state machine: admission, token staging, absorption.
 
-    def __init__(self, model: Model, params, max_batch: int = 4,
-                 max_len: int = 512):
-        self.model = model
-        self.params = params
+    Device-free — ``prepare()`` emits plain Python lists the driver turns
+    into one fixed-shape batch, ``absorb()`` folds the decoded tokens back.
+    Invariants (tests/test_batching.py): every submitted request finishes
+    exactly once with exactly ``max_new`` tokens (unless evicted), under
+    any interleaving of submissions and steps.
+    """
+
+    def __init__(self, max_batch: int, max_len: int):
         self.max_batch = max_batch
         self.max_len = max_len
-        self.caches = model.init_cache(max_batch, max_len)
         self.slots = [_Slot() for _ in range(max_batch)]
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
-        self._step = jax.jit(self._batched_step)
 
-    # ------------------------------------------------------------- batching
-    def _batched_step(self, params, caches, tokens, positions, active):
-        """tokens (B,1) int32; positions (B,) int32; active (B,) bool.
-
-        Each slot decodes at its own position.  decode_step takes a scalar
-        pos; we vmap-like emulate per-slot positions by running the model
-        once per unique... instead the cache update uses per-slot pos via a
-        batched wrapper: here we exploit that init_cache/decode_step already
-        carry a batch dim, and positions enter only via (a) RoPE and (b) the
-        cache slot index.  For simplicity and full-shape stability this
-        reference scheduler synchronizes slots to a common position by
-        padding fresh slots' caches from position 0; inactive slots decode
-        garbage that is masked out.
-        """
-        logits, caches = self.model.decode_step(params, tokens,
-                                                positions[0], caches)
-        next_tok = jnp.argmax(
-            logits[:, 0, : self.model.cfg.vocab_size], axis=-1)
-        next_tok = jnp.where(active, next_tok, 0).astype(jnp.int32)
-        return next_tok, caches
-
-    # ------------------------------------------------------------- frontend
+    # ------------------------------------------------------------ frontend
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def load(self) -> int:
+        """Queued + in-flight requests (the fleet router's balance key)."""
+        return len(self.queue) + sum(s.req is not None for s in self.slots)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s.req is not None for s in self.slots)
+
+    # ------------------------------------------------------------ stepping
     def _admit(self) -> None:
         for slot in self.slots:
             if slot.req is None and self.queue:
@@ -85,59 +86,133 @@ class ContinuousBatcher:
                 slot.prompt_cursor = 0
                 slot.generated = 0
 
-    def step(self) -> int:
-        """Advance every active slot by one token; returns #active slots.
+    def prepare(self) -> tuple[list[int], list[int], list[bool]]:
+        """Admit waiting requests, then stage one token per active slot.
 
-        A common position is used per step (slots joined at pos 0), so a
-        newly-admitted request replays its prompt while others generate —
-        the fixed-shape trade-off of this reference scheduler.
+        Returns (tokens, positions, active) as length-``max_batch`` lists:
+        slot i feeds ``tokens[i]`` at cache position ``positions[i]``.
+        A slot still streaming its prompt feeds the next prompt token; a
+        generating slot feeds its last output token.
         """
         self._admit()
-        active = [s for s in self.slots if s.req is not None]
-        if not active:
-            return 0
-        pos = max(s.pos for s in active)
-        toks = []
-        act = []
+        toks, pos, act = [], [], []
         for s in self.slots:
             r = s.req
             if r is None:
                 toks.append(0)
+                pos.append(0)
                 act.append(False)
                 continue
             if s.prompt_cursor < len(r.prompt):
-                toks.append(int(r.prompt[min(s.prompt_cursor, len(r.prompt) - 1)]))
+                toks.append(int(r.prompt[s.prompt_cursor]))
             else:
                 toks.append(int(r.out[-1]) if r.out else 0)
+            pos.append(s.pos)
             act.append(True)
-        tokens = jnp.asarray(toks, jnp.int32)[:, None]
-        positions = jnp.full((self.max_batch,), pos, jnp.int32)
-        nxt, self.caches = self._step(self.params, self.caches, tokens,
-                                      positions,
-                                      jnp.asarray(act))
-        nxt = jax.device_get(nxt)
-        n_active = 0
+        return toks, pos, act
+
+    def absorb(self, next_tokens: np.ndarray, round_idx: int = 0
+               ) -> list[Request]:
+        """Fold one decode step's outputs back into the slots; returns the
+        requests that completed this step.  The token produced when the
+        LAST prompt token is fed is the first generated token — exactly
+        ``generate``'s sampling point."""
+        done: list[Request] = []
         for i, s in enumerate(self.slots):
             r = s.req
             if r is None:
                 continue
-            n_active += 1
-            s.pos = pos + 1
+            s.pos += 1
             if s.prompt_cursor < len(r.prompt) - 1:
-                s.prompt_cursor += 1
+                s.prompt_cursor += 1          # still streaming the prompt
             else:
                 if s.prompt_cursor == len(r.prompt) - 1:
-                    s.prompt_cursor += 1  # prompt consumed this step
-                r.out.append(int(nxt[i]))
+                    s.prompt_cursor += 1      # prompt consumed this step
+                r.out.append(int(next_tokens[i]))
                 s.generated += 1
             if s.generated >= r.max_new or s.pos >= self.max_len - 1:
                 r.done = True
+                r.done_round = round_idx
                 self.finished.append(r)
+                done.append(r)
                 s.req = None
+        return done
+
+    # --------------------------------------------------------------- churn
+    def evict_all(self) -> list[Request]:
+        """Kill this replica: return every queued AND in-flight request for
+        re-admission elsewhere.  In-flight requests restart from scratch
+        (their cache rows die with the replica): outputs are cleared and
+        ``restarts`` is bumped — degradation, not loss."""
+        out: list[Request] = []
+        for s in self.slots:
+            if s.req is not None:
+                s.req.out = []
+                s.req.restarts += 1
+                out.append(s.req)
+                s.req = None
+        out.extend(self.queue)
+        self.queue.clear()
+        return out
+
+
+def make_batched_step(model: Model) -> Callable:
+    """One jit-able greedy decode step over a slot batch.
+
+    (params, caches, tokens (B,1) i32, positions (B,) i32, active (B,) bool)
+    -> (next_tokens (B,) i32, new caches).  Shared across replicas in the
+    fleet driver so W schedulers ride one compiled executable.
+    """
+    V = model.cfg.vocab_size
+
+    def step(params, caches, tokens, positions, active):
+        logits, caches = model.decode_step(params, tokens, positions, caches)
+        nxt = jnp.argmax(logits[:, 0, :V], axis=-1)
+        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+
+    return step
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over the decode path (one replica).
+
+    ``step_fn`` lets callers share one jitted step across batchers; by
+    default each batcher compiles its own.
+    """
+
+    def __init__(self, model: Model, params, max_batch: int = 4,
+                 max_len: int = 512, step_fn: Callable | None = None):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.caches = model.init_cache(max_batch, max_len)
+        self.scheduler = SlotScheduler(max_batch, max_len)
+        self._step = step_fn if step_fn is not None \
+            else jax.jit(make_batched_step(model))
+
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    @property
+    def finished(self) -> list[Request]:
+        return self.scheduler.finished
+
+    def step(self) -> int:
+        """Advance every active slot by one token; returns #active slots."""
+        toks, pos, act = self.scheduler.prepare()
+        n_active = sum(act)
+        if not n_active:
+            return 0
+        nxt, self.caches = self._step(
+            self.params, self.caches,
+            jnp.asarray(toks, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32), jnp.asarray(act))
+        self.scheduler.absorb(jax.device_get(nxt))
         return n_active
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
-            if self.step() == 0 and not self.queue:
+            if self.step() == 0 and not self.scheduler.queue:
                 break
-        return self.finished
+        return self.scheduler.finished

@@ -1,0 +1,364 @@
+"""Gossip-serving fleet: continuous-batching replicas that never stop
+averaging (DESIGN.md §14).
+
+The paper's core property — workers continuously process work while a p2p
+averaging routine runs in parallel — applied to INFERENCE: every replica of
+a ``GossipFleet`` is simultaneously
+
+  (a) a continuous-batching decode server (one ``SlotScheduler`` per
+      replica, all replicas stepped by ONE vmapped jitted decode over the
+      fleet's (W, D) flat parameter bank), and
+  (b) a gossip worker in a declarative ``World``: its parameters drift
+      (online fine-tuning ticks or injected perturbations) and re-contract
+      via the compiled A²CiD²/ADPSGD event schedule.
+
+The fleet's parameter bank is ``FlatLayout``-packed, so the gossip side IS
+``Simulator._round_channel`` — the per-event channel replay the whole test
+pyramid pins — run one compiled round at a time on the single-leaf flat
+buffer.  Stale partner reads, drops, Byzantine edges, and robust
+aggregation (the PR 4/PR 6 channel machinery) therefore apply to the
+serving fleet unchanged, and ``tests/test_fleet.py`` pins the fleet's bank
+trajectory to ``Simulator.run_schedule`` on the identical schedule.
+
+Timeline semantics: round r = [gossip events of schedule round r] -> [one
+decode step on every alive, un-stalled replica] -> [drift tick folded into
+the same gossip round].  Churn kills (``ChurnProcess`` / ``PhaseSwitch``
+aliveness) evict the dead replica's queued AND in-flight requests for
+re-admission on the least-loaded survivor — in-flight work restarts from
+scratch (the KV rows died with the replica): graceful degradation counted
+as ``restarts``, never loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.flatbuf import FlatLayout
+from ..core.simulator import Simulator
+from ..core.world import World
+from ..models.transformer import Model
+from .batching import Request, SlotScheduler
+
+# rng-stream tag for prompt-token draws — like the trace itself, identical
+# across every fleet sharing a seed
+_PROMPT_TAG = 0x9A0527
+
+
+def make_fleet_step(model: Model, layout: FlatLayout) -> Callable:
+    """One greedy decode step for ALL replicas: unpack the (W, D) bank and
+    vmap the per-replica slot-batch step over the worker axis.
+
+    (bank (W, D), caches [leaves (W, ...)], tokens (W, B, 1) i32,
+     positions (W, B) i32, active (W, B) bool)
+    -> (next_tokens (W, B) i32, new caches).
+    """
+    V = model.cfg.vocab_size
+
+    def one(params, caches, tokens, positions, active):
+        logits, caches = model.decode_step(params, tokens, positions, caches)
+        nxt = jnp.argmax(logits[:, 0, :V], axis=-1)
+        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+
+    def step(bank, caches, tokens, positions, active):
+        return jax.vmap(one)(layout.unpack(bank), caches, tokens,
+                             positions, active)
+
+    return step
+
+
+def flat_grad_fn(layout: FlatLayout, tree_grad_fn: Callable) -> Callable:
+    """Lift a pytree-level grad_fn (the Simulator signature) onto flat
+    (D,) rows — the online fine-tuning drift model."""
+
+    def fn(xrow, key, wid):
+        loss, grads = tree_grad_fn(layout.unpack_local(xrow), key, wid)
+        return loss, layout.pack_local(grads)
+
+    return fn
+
+
+def _perturb_grad(xrow, key, wid):
+    """Injected-perturbation drift: a unit Gaussian "gradient" per round —
+    replicas perform independent random walks (scaled by the fleet's
+    ``drift_scale`` via the simulator's gamma), which is what pulls their
+    consensus apart unless gossip pulls it back."""
+    return jnp.zeros((), jnp.float32), jax.random.normal(
+        key, xrow.shape, xrow.dtype)
+
+
+def _zero_grad(xrow, key, wid):
+    return jnp.zeros((), jnp.float32), jnp.zeros_like(xrow)
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """What one ``GossipFleet.run`` produced."""
+
+    requests_total: int
+    completed: list                  # finished Requests (out/rounds filled)
+    lost: int                        # never completed (drain cap / no fleet)
+    restarted: int                   # churn re-admissions (degradation)
+    latencies: np.ndarray            # (C,) decode-round latency per request
+    consensus: np.ndarray            # (R,) fleet consensus distance per round
+    rounds: int                      # scheduled (gossip-active) rounds
+    drain_rounds: int                # extra decode-only rounds to drain
+    tokens_generated: int
+    stall_skips: int                 # decode rounds skipped to pay comm debt
+    wall_seconds: float
+    final_bank: jax.Array            # (W, D) parameter bank after the run
+
+    def percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies, p)) \
+            if self.latencies.size else float("nan")
+
+    @property
+    def tokens_per_round(self) -> float:
+        total = self.rounds + self.drain_rounds
+        return self.tokens_generated / max(total, 1)
+
+    def summary(self, hist_bins: int = 12) -> dict:
+        """JSON-able digest for ``BENCH_serve.json``."""
+        lat = self.latencies
+        if lat.size:
+            hist, edges = np.histogram(lat, bins=hist_bins)
+        else:
+            hist, edges = np.zeros(hist_bins, int), np.arange(hist_bins + 1)
+        return {
+            "requests_total": self.requests_total,
+            "completed": len(self.completed),
+            "lost": self.lost,
+            "restarted": self.restarted,
+            "tokens_generated": self.tokens_generated,
+            "throughput_tokens_per_round": self.tokens_per_round,
+            "tokens_per_second": self.tokens_generated
+            / max(self.wall_seconds, 1e-9),
+            "latency_mean": float(lat.mean()) if lat.size else None,
+            "latency_p50": self.percentile(50),
+            "latency_p95": self.percentile(95),
+            "latency_p99": self.percentile(99),
+            "latency_hist": {"counts": [int(c) for c in hist],
+                             "edges": [float(e) for e in edges]},
+            "stall_skips": self.stall_skips,
+            "rounds": self.rounds,
+            "drain_rounds": self.drain_rounds,
+            "consensus_final": float(self.consensus[-1])
+            if self.consensus.size else 0.0,
+        }
+
+
+class GossipFleet:
+    """W model replicas that serve a shared request trace while gossiping.
+
+    world — a ``World`` with ``serve=ServeLoad(...)``; its topology size is
+      the fleet width W.  Channel/defense/algorithm/fault axes all apply.
+    drift — "perturb" (Gaussian random walk, scale ``drift_scale`` per
+      round), "none" (frozen params), or pass ``grad_fn`` (pytree-level
+      Simulator signature) for real online fine-tuning ticks with learning
+      rate ``drift_scale``.
+    stall_per_event — decode-rounds of debt one gossip event costs its
+      replica (communication steals compute); debt >= 1 skips that
+      replica's next decode step.  0 = free communication.
+    decode_step_fn — share one jitted ``make_fleet_step`` across fleets
+      (the benchmark's 9 arms differ only in schedule data).
+    """
+
+    def __init__(self, model: Model, params, world: World, *,
+                 max_batch: int = 4, max_len: int = 64,
+                 drift: str = "perturb", drift_scale: float = 0.01,
+                 grad_fn: Callable | None = None,
+                 stall_per_event: float = 0.0,
+                 accelerated: bool | None = None,
+                 robust_clip: float | None = None,
+                 robust_rule: str = "trim",
+                 decode_step_fn: Callable | None = None):
+        if world.serve is None:
+            raise ValueError("GossipFleet needs a World with serve="
+                             "ServeLoad(...) — the arrival trace axis")
+        lo_p, hi_p = world.serve.prompt_len
+        lo_g, hi_g = world.serve.gen_len
+        if max_len < hi_p + hi_g + 1:
+            raise ValueError(
+                f"max_len={max_len} cannot hold a worst-case request "
+                f"(prompt {hi_p} + gen {hi_g}); raise max_len or shrink "
+                "the ServeLoad ranges")
+        self.model = model
+        self.world = world
+        self.n = world.n
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.stall_per_event = float(stall_per_event)
+
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n,) + a.shape), params)
+        self.layout = FlatLayout.from_pytree(stacked, stacked=True)
+        self._bank0 = self.layout.pack(stacked)
+        self._caches0 = model.init_cache(max_batch, max_len)
+
+        # gossip dynamics come from the fault-free twin: chi of a churned
+        # world is only defined per phase, but the fleet's mixing dynamic
+        # is a design-time constant of the NOMINAL topology
+        nominal = dataclasses.replace(
+            world, faults=(),
+            workers=dataclasses.replace(world.workers, active=None))
+        algo_params = nominal.algorithm_params(accelerated)
+
+        if grad_fn is not None:
+            drift_fn = flat_grad_fn(self.layout, grad_fn)
+        elif drift == "perturb":
+            drift_fn = _perturb_grad
+        elif drift == "none":
+            drift_fn = _zero_grad
+        else:
+            raise ValueError(f"drift must be 'perturb'/'none' or pass "
+                             f"grad_fn, got {drift!r}")
+        gamma = float(drift_scale) if (grad_fn is not None
+                                       or drift == "perturb") else 0.0
+        self.sim = Simulator(grad_fn=drift_fn, params=algo_params,
+                             gamma=gamma, robust_clip=robust_clip,
+                             robust_rule=robust_rule)
+        self._decode_step = decode_step_fn if decode_step_fn is not None \
+            else jax.jit(make_fleet_step(model, self.layout))
+
+    # ----------------------------------------------------------------- run
+    def _route(self, scheds: list[SlotScheduler], alive: np.ndarray,
+               reqs: list[Request], unrouted: list[Request]) -> None:
+        """Assign each request to the least-loaded alive replica (ties to
+        the lowest id); park it in ``unrouted`` when nobody is alive."""
+        for req in reqs:
+            cand = [w for w in range(self.n) if alive[w]]
+            if not cand:
+                unrouted.append(req)
+                continue
+            w = min(cand, key=lambda i: (scheds[i].load(), i))
+            scheds[w].submit(req)
+
+    def run(self, rounds: int, seed: int = 0,
+            max_drain_rounds: int = 2000) -> FleetReport:
+        world, model = self.world, self.model
+        sched = world.compile(rounds, seed)
+        R = sched.rounds
+        trace = world.serve.sample_trace(R, seed)
+        vocab = model.cfg.vocab_size
+        prng = np.random.default_rng(
+            np.random.SeedSequence([int(seed), _PROMPT_TAG]))
+        requests = [
+            Request(uid=i,
+                    prompt=prng.integers(0, vocab, size=int(pl)
+                                         ).astype(np.int32),
+                    max_new=int(gl), arrive_round=int(ar))
+            for i, (ar, pl, gl) in enumerate(zip(
+                trace.arrival_round, trace.prompt_len, trace.gen_len))]
+
+        arrays, horizon = self.sim.channel_reference_arrays(sched)
+        arrays = [np.asarray(a) for a in arrays]
+        alive = np.asarray(sched.alive_arr())
+        idx = np.arange(self.n)
+        events = ((sched.partners != idx[None, None, :])
+                  & sched.event_mask[:, :, None]).sum(axis=1)  # (R, n)
+
+        bank = self._bank0
+        ring = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), bank) \
+            if horizon else None
+        carry = (bank, jnp.array(bank), jnp.zeros((self.n,)), ring,
+                 jax.random.PRNGKey(seed))
+        round_fn = jax.jit(partial(self.sim._round_channel, horizon))
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.n,) + a.shape),
+            self._caches0)
+
+        scheds = [SlotScheduler(self.max_batch, self.max_len)
+                  for _ in range(self.n)]
+        unrouted: list[Request] = []
+        completed: list[Request] = []
+        consensus: list = []
+        debt = np.zeros(self.n)
+        stall_skips = 0
+        cursor = 0
+        prev_alive = np.ones(self.n, bool)
+        t0 = time.time()
+
+        def decode_round(decode_mask: np.ndarray, r: int):
+            nonlocal caches
+            toks = np.zeros((self.n, self.max_batch), np.int32)
+            pos = np.zeros((self.n, self.max_batch), np.int32)
+            act = np.zeros((self.n, self.max_batch), bool)
+            for w in range(self.n):
+                if not decode_mask[w]:
+                    continue
+                tw, pw, aw = scheds[w].prepare()
+                toks[w], pos[w], act[w] = tw, pw, aw
+            if not act.any():
+                return False
+            nxt, caches = self._decode_step(
+                carry[0], caches, jnp.asarray(toks)[:, :, None],
+                jnp.asarray(pos), jnp.asarray(act))
+            nxt = np.asarray(jax.device_get(nxt))
+            for w in range(self.n):
+                if decode_mask[w]:
+                    completed.extend(scheds[w].absorb(nxt[w], r))
+            return True
+
+        for r in range(R):
+            al = alive[r]
+            # churn: evict the newly-dead replicas' work to survivors
+            evicted: list[Request] = []
+            for w in range(self.n):
+                if prev_alive[w] and not al[w]:
+                    evicted.extend(scheds[w].evict_all())
+                    debt[w] = 0.0
+            # arrivals of round r, then re-admissions (and anything parked
+            # while the whole fleet was down)
+            arrivals = []
+            while cursor < len(requests) \
+                    and requests[cursor].arrive_round <= r:
+                arrivals.append(requests[cursor])
+                cursor += 1
+            parked, unrouted = unrouted, []
+            self._route(scheds, al, arrivals + evicted + parked, unrouted)
+
+            # gossip events + drift tick of round r on the flat bank
+            carry, metrics = round_fn(carry, tuple(a[r] for a in arrays))
+            consensus.append(metrics["consensus"])
+
+            # decode: alive replicas that aren't paying communication debt
+            debt[al] += self.stall_per_event * events[r][al]
+            decode_mask = al & (debt < 1.0)
+            stalled = al & ~decode_mask
+            debt[stalled] -= 1.0
+            stall_skips += int(stalled.sum())
+            decode_round(decode_mask, r)
+            prev_alive = al
+
+        # drain: gossip stopped, decode-only rounds until every queue and
+        # slot is empty (aliveness frozen at the last scheduled round)
+        drain = 0
+        al = alive[-1] if R else np.ones(self.n, bool)
+        while drain < max_drain_rounds:
+            if not unrouted and not any(
+                    scheds[w].pending() for w in range(self.n) if al[w]):
+                break
+            parked, unrouted = unrouted, []
+            self._route(scheds, al, parked, unrouted)
+            if not decode_round(al, R + drain) and not unrouted:
+                break
+            drain += 1
+
+        wall = time.time() - t0
+        lost = len(requests) - len(completed)
+        restarted = sum(q.restarts for q in requests)
+        lat = np.asarray([q.done_round - q.arrive_round + 1
+                          for q in completed], np.float64)
+        return FleetReport(
+            requests_total=len(requests), completed=completed, lost=lost,
+            restarted=restarted, latencies=lat,
+            consensus=np.asarray(jax.device_get(consensus), np.float64),
+            rounds=R, drain_rounds=drain,
+            tokens_generated=sum(len(q.out) for q in completed),
+            stall_skips=stall_skips, wall_seconds=wall, final_bank=carry[0])

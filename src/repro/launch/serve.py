@@ -24,10 +24,11 @@ def generate(model: Model, params, prompts: jax.Array, gen: int,
     caches = model.init_cache(B, total)
     dec = jax.jit(model.decode_step)
 
+    # chunked prefill: ONE dispatch for the whole prompt instead of P
+    # device round-trips, exact to the old token-by-token loop (the scan
+    # body IS decode_step; tests/test_serve.py pins the ids)
     toks = prompts
-    logits = None
-    for t in range(P):  # prefill token-by-token through the decode path
-        logits, caches = dec(params, toks[:, t:t + 1], jnp.int32(t), caches)
+    logits, caches = jax.jit(model.prefill)(params, toks, caches)
     key = key if key is not None else jax.random.PRNGKey(0)
     out = [toks]
     cur = None

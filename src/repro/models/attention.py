@@ -185,6 +185,37 @@ def apply_attention(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
 
 # ------------------------------------------------------------- GQA decoding
 
+def decode_positions(pos: jax.Array, batch: int) -> jax.Array:
+    """(B,) per-slot positions from a scalar or already-(B,) ``pos``."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
+def _cache_slots(pos_vec: jax.Array, size: int, window: int | None
+                 ) -> jax.Array:
+    """(B,) ring/dense cache slot per sequence.  The dense slot is clamped
+    to the last entry past capacity — the same semantics the old scalar
+    ``dynamic_update_slice`` start-index clamping gave."""
+    return pos_vec % size if window else jnp.minimum(pos_vec, size - 1)
+
+
+def _update_slot(cache: jax.Array, update: jax.Array, slot: jax.Array
+                 ) -> jax.Array:
+    """Write ``update[b]`` at row ``slot[b]`` of every sequence's cache:
+    cache (B, size, ...), update (B, 1, ...), slot (B,)."""
+    def one(c, u, s):
+        return jax.lax.dynamic_update_slice(c, u, (s,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache, update, slot)
+
+
+def _slot_mask(spos: jax.Array, pos_vec: jax.Array, window: int | None
+               ) -> jax.Array:
+    """(B, 1, size) visibility mask from per-sequence slot positions."""
+    mask = (spos >= 0) & (spos <= pos_vec[:, None])
+    if window:
+        mask &= spos > pos_vec[:, None] - window
+    return mask[:, None, :]
+
+
 def init_attn_cache(cfg: ModelConfig, batch: int, length: int,
                     window: int | None, dtype) -> dict:
     """length = full context for dense cache; ring of size window if windowed."""
@@ -193,29 +224,26 @@ def init_attn_cache(cfg: ModelConfig, batch: int, length: int,
     return {
         "k": jnp.zeros((batch, size, KV, hd), dtype),
         "v": jnp.zeros((batch, size, KV, hd), dtype),
-        # absolute position held by each slot (-1 = empty)
-        "slot_pos": jnp.full((size,), -1, jnp.int32),
+        # absolute position held by each sequence's slots (-1 = empty);
+        # per-sequence so continuous-batching slots decode at their own pos
+        "slot_pos": jnp.full((batch, size), -1, jnp.int32),
     }
 
 
 def decode_attention(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                      cache: dict, window: int | None = None
                      ) -> tuple[jax.Array, dict]:
-    """x (B, 1, D), pos scalar int32 — returns (out (B,1,D), new cache)."""
+    """x (B, 1, D), pos scalar int32 or (B,) per-slot positions —
+    returns (out (B,1,D), new cache)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, k, v = _qkv(p, cfg, x, positions)            # k rope'd at absolute pos
+    pos_vec = decode_positions(pos, B)
+    q, k, v = _qkv(p, cfg, x, pos_vec[:, None])     # k rope'd at absolute pos
     size = cache["k"].shape[1]
-    slot = (pos % size) if window else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    spos = jax.lax.dynamic_update_slice(
-        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
-    mask = (spos >= 0) & (spos <= pos)
-    if window:
-        mask &= spos > pos - window
-    out = _sdpa(q, ck, cv, jnp.broadcast_to(mask[None, None, :],
-                                            (B, 1, mask.shape[0])), cfg)
+    slot = _cache_slots(pos_vec, size, window)
+    ck = _update_slot(cache["k"], k, slot)
+    cv = _update_slot(cache["v"], v, slot)
+    spos = _update_slot(cache["slot_pos"], pos_vec[:, None], slot)
+    out = _sdpa(q, ck, cv, _slot_mask(spos, pos_vec, window), cfg)
     out = sharding.hint(out @ p["wo"], "batch", None, None)
     return out, {"k": ck, "v": cv, "slot_pos": spos}
 
@@ -292,7 +320,7 @@ def init_mla_cache(cfg: ModelConfig, batch: int, length: int,
     return {
         "c": jnp.zeros((batch, size, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, size, m.qk_rope_head_dim), dtype),
-        "slot_pos": jnp.full((size,), -1, jnp.int32),
+        "slot_pos": jnp.full((batch, size), -1, jnp.int32),
     }
 
 
@@ -300,19 +328,14 @@ def decode_mla(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
                cache: dict, window: int | None = None
                ) -> tuple[jax.Array, dict]:
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, c, k_rope = _mla_qkv(p, cfg, x, positions)
+    pos_vec = decode_positions(pos, B)
+    q, c, k_rope = _mla_qkv(p, cfg, x, pos_vec[:, None])
     size = cache["c"].shape[1]
-    slot = (pos % size) if window else pos
-    cc = jax.lax.dynamic_update_slice(cache["c"], c, (0, slot, 0))
-    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, slot, 0))
-    spos = jax.lax.dynamic_update_slice(
-        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+    slot = _cache_slots(pos_vec, size, window)
+    cc = _update_slot(cache["c"], c, slot)
+    cr = _update_slot(cache["k_rope"], k_rope, slot)
+    spos = _update_slot(cache["slot_pos"], pos_vec[:, None], slot)
     k, v = _mla_expand_kv(p, cfg, cc, cr)
-    mask = (spos >= 0) & (spos <= pos)
-    if window:
-        mask &= spos > pos - window
-    out = _sdpa(q, k, v, jnp.broadcast_to(mask[None, None, :],
-                                          (B, 1, mask.shape[0])), cfg)
+    out = _sdpa(q, k, v, _slot_mask(spos, pos_vec, window), cfg)
     out = sharding.hint(out @ p["wo"], "batch", None, None)
     return out, {"c": cc, "k_rope": cr, "slot_pos": spos}

@@ -255,7 +255,10 @@ class Model:
 
     def decode_step(self, params: dict, inputs: jax.Array, pos: jax.Array,
                     caches: list) -> tuple[jax.Array, list]:
-        """inputs: tokens (B,1) or embeddings (B,1,D); pos scalar int32.
+        """inputs: tokens (B,1) or embeddings (B,1,D); pos scalar int32 or
+        (B,) per-sequence positions (continuous batching: each slot decodes
+        at its own offset — RoPE, cache index, and visibility mask are all
+        per-sequence).
 
         Returns (logits (B,1,V*C), new caches)."""
         cfg = self.cfg
@@ -278,6 +281,33 @@ class Model:
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = apply_lm_head(params["head"], params["embed"], cfg, x)
         return logits, new_caches
+
+    def prefill(self, params: dict, inputs: jax.Array, caches: list,
+                pos0: jax.Array = 0) -> tuple[jax.Array, list]:
+        """Chunked prefill: feed a whole (B, P) prompt through the decode
+        path in ONE dispatch — a ``lax.scan`` over ``decode_step`` instead
+        of P separate device round-trips.  Scanning the decode path (rather
+        than running ``forward`` and scattering K/V) keeps prefill exact for
+        every mixer family: ssd/rglru carry recurrent caches whose decode
+        recurrence IS the definition the full-sequence kernels re-derive.
+
+        inputs: tokens (B, P) or embeddings (B, P, D); positions are
+        ``pos0 .. pos0 + P - 1``.  Returns (logits (B,1,V*C) at the LAST
+        position, filled caches) — exactly what step ``P - 1`` of the
+        token-by-token loop returned.
+        """
+        P = inputs.shape[1]
+
+        def body(c, t):
+            tok = jax.lax.dynamic_slice_in_dim(inputs, t, 1, axis=1)
+            _, c = self.decode_step(params, tok, pos0 + t, c)
+            return c, None
+
+        if P > 1:
+            caches, _ = jax.lax.scan(body, caches,
+                                     jnp.arange(P - 1, dtype=jnp.int32))
+        return self.decode_step(params, inputs[:, P - 1:P],
+                                pos0 + jnp.int32(P - 1), caches)
 
     # ------------------------------------------------------------------ misc
     def param_count(self, params: dict) -> int:

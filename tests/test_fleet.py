@@ -1,0 +1,112 @@
+"""Gossip-serving fleet (launch/fleet.py, DESIGN.md §14).
+
+Pins the subsystem's three contracts: the fleet's gossip side IS the
+simulator's channel replay (bitwise bank equality on a lossy world), a
+mid-serve churn kill degrades but never loses requests, and with gossip
+and drift off every replica's token streams are exactly the sequential
+``generate`` ones.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.nano_lm import train_bench
+from repro.core import (Algorithm, ChannelModel, DelayProcess, PhaseSwitch,
+                        SERVE_ARRIVE_KEY, ServeLoad, SimState, World,
+                        ring_graph)
+from repro.launch.fleet import GossipFleet
+from repro.launch.serve import generate
+from repro.models import Model
+
+LOAD = ServeLoad(rate=0.8, prompt_len=(2, 4), gen_len=(2, 5))
+
+
+def _model_params(seed=0):
+    model = Model(train_bench())
+    return model, model.init(jax.random.PRNGKey(seed))
+
+
+def test_fleet_bank_is_the_channel_replay_bitwise():
+    """Round-by-round fleet gossip == one run_schedule scan on the same
+    lossy schedule: identical final (W, D) bank and consensus trace."""
+    model, params = _model_params()
+    world = World(topology=ring_graph(4), algorithm=Algorithm("a2cid2"),
+                  channel=ChannelModel(delay=DelayProcess(horizon=2,
+                                                          prob=0.4),
+                                       drop_prob=0.1),
+                  serve=LOAD)
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="perturb", drift_scale=0.02)
+    rep = fleet.run(rounds=12, seed=3)
+
+    sched = world.compile(12, seed=3)
+    state = SimState(x=fleet._bank0, x_tilde=jnp.array(fleet._bank0),
+                     t_last=jnp.zeros((4,)), key=jax.random.PRNGKey(3))
+    out, trace = fleet.sim.run_schedule(state, sched, engine=False)
+    assert np.array_equal(np.asarray(rep.final_bank), np.asarray(out.x))
+    assert np.array_equal(rep.consensus,
+                          np.asarray(trace.consensus, np.float64))
+
+
+def test_churn_kill_readmits_without_loss():
+    """Killing a replica mid-serve evicts its queued + in-flight requests
+    to survivors: every request still completes (restarts, not loss)."""
+    model, params = _model_params()
+    world = World(topology=ring_graph(3),
+                  faults=(PhaseSwitch(6, active=(True, True, False)),),
+                  serve=ServeLoad(rate=1.5, prompt_len=(3, 5),
+                                  gen_len=(4, 8), arrive_frac=0.8))
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="perturb", drift_scale=0.02)
+    rep = fleet.run(rounds=14, seed=0)
+    assert rep.requests_total > 0
+    assert rep.lost == 0
+    assert len(rep.completed) == rep.requests_total
+    assert rep.restarted >= 1  # the kill caught work in flight
+    assert all(q.done and len(q.out) == q.max_new for q in rep.completed)
+
+
+def test_gossip_off_fleet_matches_sequential_generate():
+    """comms_per_grad=0 + drift='none' freezes the bank, so each replica
+    is a plain decode server: every request's tokens must be bitwise the
+    single-model ``generate`` stream."""
+    model, params = _model_params()
+    world = World(topology=ring_graph(3), algorithm=Algorithm("adpsgd"),
+                  comms_per_grad=0.0, serve=LOAD)
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="none")
+    rep = fleet.run(rounds=10, seed=1)
+    assert np.array_equal(np.asarray(rep.final_bank),
+                          np.asarray(fleet._bank0))
+    assert rep.lost == 0 and rep.requests_total > 0
+    for q in rep.completed:
+        ref = generate(model, params, jnp.asarray(q.prompt)[None, :],
+                       q.max_new)
+        assert q.out == jax.device_get(
+            ref[0, len(q.prompt):]).tolist(), q.uid
+
+
+def test_serveload_trace_is_shared_and_serializes():
+    """Every world built from the same ServeLoad + seed compiles the
+    identical arrival extras (the one-trace comparison contract), and the
+    serve axis rides World JSON round-trips."""
+    load = ServeLoad(rate=1.2, prompt_len=(3, 6), gen_len=(4, 10))
+    clean = World(topology=ring_graph(4), serve=load)
+    lossy = dataclasses.replace(
+        clean, channel=ChannelModel(delay=DelayProcess(horizon=2, prob=0.3),
+                                    drop_prob=0.1))
+    a = clean.compile(20, seed=5).extras_dict()[SERVE_ARRIVE_KEY]
+    b = lossy.compile(20, seed=5).extras_dict()[SERVE_ARRIVE_KEY]
+    assert np.array_equal(a, b)
+    t1, t2 = load.sample_trace(20, 5), load.sample_trace(20, 5)
+    assert np.array_equal(t1.arrival_round, t2.arrival_round)
+    assert np.array_equal(t1.prompt_len, t2.prompt_len)
+    assert np.array_equal(t1.gen_len, t2.gen_len)
+    assert t1.num_requests == int(a[:, 0, 0].sum())
+
+    w2 = World.from_json(lossy.to_json())
+    assert w2 == lossy and w2.to_dict() == lossy.to_dict()
+    c = w2.compile(20, seed=5).extras_dict()[SERVE_ARRIVE_KEY]
+    assert np.array_equal(a, c)
