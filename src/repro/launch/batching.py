@@ -68,6 +68,14 @@ class SlotScheduler:
 
     # ------------------------------------------------------------ frontend
     def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new + 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} needs {need} cache rows but max_len="
+                f"{self.max_len} — the slot would silently truncate below "
+                "the guaranteed max_new tokens (mirrors the GossipFleet "
+                "ServeLoad range check)")
         self.queue.append(req)
 
     def load(self) -> int:
@@ -156,6 +164,22 @@ class SlotScheduler:
         return out
 
 
+def gate_caches(active, old, new):
+    """Keep inactive slots' cache state untouched after a decode step.
+
+    ``decode_step`` writes every slot's cache unconditionally, so a slot
+    fed padding (token 0 at position 0) would overwrite cache position 0 —
+    exactly where an in-flight request's first K/V row lives — and advance
+    the recurrent ssd/rglru states.  The fleet driver feeds WHOLE replicas
+    as padding while they stall on communication debt, so this gating is
+    load-bearing.  Cache leaves are (repeat, B, ...): batch is axis 1.
+    """
+    def sel(o, n):
+        return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o)
+
+    return jax.tree.map(sel, old, new)
+
+
 def make_batched_step(model: Model) -> Callable:
     """One jit-able greedy decode step over a slot batch.
 
@@ -166,9 +190,11 @@ def make_batched_step(model: Model) -> Callable:
     V = model.cfg.vocab_size
 
     def step(params, caches, tokens, positions, active):
-        logits, caches = model.decode_step(params, tokens, positions, caches)
+        logits, new_caches = model.decode_step(params, tokens, positions,
+                                               caches)
         nxt = jnp.argmax(logits[:, 0, :V], axis=-1)
-        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+        return (jnp.where(active, nxt, 0).astype(jnp.int32),
+                gate_caches(active, caches, new_caches))
 
     return step
 

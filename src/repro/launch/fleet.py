@@ -43,7 +43,7 @@ from ..core.flatbuf import FlatLayout
 from ..core.simulator import Simulator
 from ..core.world import World
 from ..models.transformer import Model
-from .batching import Request, SlotScheduler
+from .batching import Request, SlotScheduler, gate_caches
 
 # rng-stream tag for prompt-token draws — like the trace itself, identical
 # across every fleet sharing a seed
@@ -61,9 +61,14 @@ def make_fleet_step(model: Model, layout: FlatLayout) -> Callable:
     V = model.cfg.vocab_size
 
     def one(params, caches, tokens, positions, active):
-        logits, caches = model.decode_step(params, tokens, positions, caches)
+        logits, new_caches = model.decode_step(params, tokens, positions,
+                                               caches)
         nxt = jnp.argmax(logits[:, 0, :V], axis=-1)
-        return jnp.where(active, nxt, 0).astype(jnp.int32), caches
+        # inactive slots fed padding must not touch their cache state —
+        # a stalled replica's whole batch goes through as padding while
+        # its slots hold in-flight KV rows and recurrent states
+        return (jnp.where(active, nxt, 0).astype(jnp.int32),
+                gate_caches(active, caches, new_caches))
 
     def step(bank, caches, tokens, positions, active):
         return jax.vmap(one)(layout.unpack(bank), caches, tokens,
@@ -344,6 +349,8 @@ class GossipFleet:
             if not unrouted and not any(
                     scheds[w].pending() for w in range(self.n) if al[w]):
                 break
+            if not al.any():
+                break  # nobody alive: parked requests are unrecoverable
             parked, unrouted = unrouted, []
             self._route(scheds, al, parked, unrouted)
             if not decode_round(al, R + drain) and not unrouted:

@@ -59,6 +59,16 @@ def test_staggered_admission_matches_sequential_generate():
             ref[0, len(r.prompt):]).tolist(), r.uid
 
 
+def test_submit_rejects_request_exceeding_max_len():
+    """A request that cannot finish with its full max_new inside max_len
+    is rejected at submit() instead of silently truncated (mirrors the
+    GossipFleet ServeLoad range check)."""
+    s = SlotScheduler(max_batch=2, max_len=8)
+    s.submit(Request(0, np.arange(3, dtype=np.int32), 4))  # 3+4+1 == 8: ok
+    with pytest.raises(ValueError, match="max_len"):
+        s.submit(Request(1, np.arange(4, dtype=np.int32), 4))  # 4+4+1 > 8
+
+
 def test_slot_scheduler_invariants():
     """Under ANY interleaving of submissions and steps, every request
     finishes exactly once with exactly max_new tokens — no loss, no

@@ -88,6 +88,46 @@ def test_gossip_off_fleet_matches_sequential_generate():
             ref[0, len(q.prompt):]).tolist(), q.uid
 
 
+def test_stalled_replicas_keep_inflight_caches_intact():
+    """A replica paying comm debt is fed through the vmapped step as
+    all-padding (tokens 0, pos 0, active False); its in-flight slots' KV
+    rows and recurrent states must survive the stall.  Identical initial
+    banks + drift='none' make gossip a no-op on the parameters, so every
+    completed stream must still be bitwise ``generate``'s."""
+    model, params = _model_params()
+    world = World(topology=ring_graph(3), algorithm=Algorithm("adpsgd"),
+                  serve=LOAD)
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="none", stall_per_event=1.0)
+    rep = fleet.run(rounds=12, seed=1)
+    assert rep.stall_skips > 0  # stalls actually happened mid-serve
+    assert rep.lost == 0 and rep.requests_total > 0
+    assert np.array_equal(np.asarray(rep.final_bank),
+                          np.asarray(fleet._bank0))
+    for q in rep.completed:
+        ref = generate(model, params, jnp.asarray(q.prompt)[None, :],
+                       q.max_new)
+        assert q.out == jax.device_get(
+            ref[0, len(q.prompt):]).tolist(), q.uid
+
+
+def test_whole_fleet_dead_reports_loss_without_drain_spin():
+    """When every replica is dead at the end of the schedule, parked
+    requests are unrecoverable: the drain loop must report them lost
+    immediately instead of spinning max_drain_rounds no-op iterations."""
+    model, params = _model_params()
+    world = World(topology=ring_graph(2),
+                  faults=(PhaseSwitch(2, active=(False, False)),),
+                  serve=ServeLoad(rate=1.0, prompt_len=(2, 3),
+                                  gen_len=(2, 3)))
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="none")
+    rep = fleet.run(rounds=8, seed=0)
+    assert rep.requests_total > 0
+    assert rep.lost > 0           # honest accounting, not silent hang
+    assert rep.drain_rounds == 0  # no no-op spin
+
+
 def test_serveload_trace_is_shared_and_serializes():
     """Every world built from the same ServeLoad + seed compiles the
     identical arrival extras (the one-trace comparison contract), and the
