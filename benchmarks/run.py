@@ -98,17 +98,78 @@ def _sanitize_json(obj):
     return obj
 
 
+def _artifact_path(name: str) -> str:
+    """Repo-root path of a BENCH_*/TRACE_* artifact."""
+    import os
+    return os.path.join(os.path.dirname(__file__), "..", name)
+
+
 def _dump_json(path_base: str, name: str, report: dict) -> None:
     """Compact-writer for every BENCH_*.json artifact: no indentation
     whitespace (the topology artifact was ~17k lines indented) and
     NaN/Inf-free (``_sanitize_json``)."""
     import json
-    import os
-    path = os.path.join(os.path.dirname(path_base), "..", name)
-    with open(path, "w") as f:
+    with open(_artifact_path(name), "w") as f:
         json.dump(_sanitize_json(report), f, separators=(",", ":"),
                   allow_nan=False)
         f.write("\n")
+
+
+# ------------------------------------------------- flight recorder (host)
+# One SpanTracer per --only family (set by main()): every bench family
+# writes TRACE_<name>.json beside its BENCH_<name>.json (DESIGN.md §15).
+_TRACER = None
+
+
+def _exec_cost(tag: str, jitted, *args) -> dict:
+    """Per-executable cost row: FLOPs, HBM write bytes, collective bytes
+    and the roofline bottleneck of ONE jitted callable, derived AOT from
+    its compiled HLO (``lower -> compile -> as_text``; never executed).
+
+    Degrades to an ``{"executable", "error"}`` row instead of failing the
+    bench — cost accounting must never take down an artifact.  When a
+    family tracer is live, the compile is recorded as a ``jit.compile``
+    span annotated with the cost row.
+    """
+    try:
+        from repro.analysis import cost_from_hlo
+        from repro.analysis.roofline import (HBM_BW, ICI_BW,
+                                             PEAK_FLOPS_BF16)
+        t0 = _TRACER.now_us() if _TRACER is not None else 0.0
+        compiled = jitted.lower(*args).compile()
+        cost = cost_from_hlo(compiled.as_text())
+        ca = {}
+        try:
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+        except Exception:
+            ca = {}
+        terms = {"compute": cost.flops / PEAK_FLOPS_BF16,
+                 "memory": cost.write_bytes / HBM_BW,
+                 "collective": cost.collective_bytes / ICI_BW}
+        row = {
+            "executable": tag, "method": "hlo",
+            "flops": cost.flops,
+            "write_bytes": cost.write_bytes,
+            "collective_bytes": cost.collective_bytes,
+            "collective_detail": cost.collective_detail,
+            "xla_flops": float(ca.get("flops", 0.0)),
+            "xla_bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "compute_s": terms["compute"], "memory_s": terms["memory"],
+            "collective_s": terms["collective"],
+            "bottleneck": max(terms, key=terms.get),
+        }
+        if _TRACER is not None:
+            _TRACER.complete(
+                f"jit.compile.{tag}", t0, _TRACER.now_us() - t0,
+                lane="compile",
+                args={k: row[k] for k in ("flops", "write_bytes",
+                                          "collective_bytes",
+                                          "bottleneck")})
+        return row
+    except Exception as e:  # pragma: no cover - platform-dependent paths
+        return {"executable": tag, "method": "hlo", "error": str(e)}
 
 
 def _schedule_compiler(rounds):
@@ -362,6 +423,10 @@ def bench_gossip_engine(seed: int = 0) -> list[str]:
             "reference_reads_writes": ref_rw,
             "fused_reads_writes": fused_rw,
         },
+        "executables": [
+            _exec_cost("gossip_engine_replay", jax.jit(eng)),
+            _exec_cost("gossip_reference_replay", jax.jit(ref)),
+        ],
     }
     _dump_json(__file__, "BENCH_gossip.json", report)
     return [
@@ -556,6 +621,9 @@ def bench_topology_sweep(seed: int = 0) -> list[str]:
             entry["slow_links"] = int((bw < ICI_BW).sum())
         report["scenarios"][sname] = entry
 
+    cost_fn, cost_args = sim.worlds_executable(states, scheds, params=plist)
+    report["executables"] = [_exec_cost("topology_grid_replay",
+                                        cost_fn, *cost_args)]
     _dump_json(__file__, "BENCH_topology.json", report)
     rows.append(f"topology_batched_dispatch,{warm_us:.0f},"
                 f"worlds={len(points)};traces={traces};"
@@ -623,16 +691,23 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
 
     compiled = _schedule_compiler(rounds)
 
-    def run_family(worlds_accels_seeds, clips=None):
+    cost_fns = {}
+
+    def run_family(worlds_accels_seeds, clips=None, cost_tag=None):
         """Replay a family grid in ONE batched dispatch; ``clips`` lifts
         the robust tau to per-world data (None = non-robust arm).
-        Returns the (B, rounds) consensus curves + dispatch wall time."""
+        Returns the (B, rounds) consensus curves + dispatch wall time.
+        ``cost_tag`` stashes the replay closure for the per-executable
+        cost rows embedded in the artifact."""
         sim = Simulator(grad_fn, p_acid, gamma=cfg["gamma"],
                         robust_rule=cfg["robust_rule"])
         scheds = [compiled(w, s) for w, _, s in worlds_accels_seeds]
         plist = [p_acid if a else p_base for _, a, _ in worlds_accels_seeds]
         states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))
                   for _ in scheds]
+        if cost_tag is not None:
+            cost_fns[cost_tag] = sim.worlds_executable(
+                states, scheds, params=plist, robust_clips=clips)
         t0 = time.perf_counter()
         _, trace = sim.run_worlds(states, scheds, params=plist,
                                   robust_clips=clips)
@@ -699,7 +774,7 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
                                 else ChannelModel(delay=delay))
     grid = [(w, a, seed) for w in stale_worlds.values()
             for a in (False, True)]
-    cons, us_stale = run_family(grid)
+    cons, us_stale = run_family(grid, cost_tag="channel_stale_family")
     for i, h in enumerate(cfg["horizons"]):
         entry = curve_entry(stale_worlds[h], False,
                             cons[2 * i:2 * i + 1], cons[2 * i + 1:2 * i + 2],
@@ -776,6 +851,8 @@ def bench_channel_sweep(seed: int = 0) -> list[str]:
         summary[f"nonrobust_diverged_at_{frac:g}"] = \
             cell["nonrobust"]["diverged"]
     report["summary"] = summary
+    report["executables"] = [_exec_cost(tag, fn, *fargs)
+                             for tag, (fn, fargs) in cost_fns.items()]
     _dump_json(__file__, "BENCH_channel.json", report)
     nonzero = [f for f in cfg["byz_fracs"] if f > 0]
     headline = min(nonzero, key=lambda f: abs(f - 0.1)) if nonzero else None
@@ -894,6 +971,7 @@ def bench_batched_sweep(seed: int = 0) -> list[str]:
     batched_traces = (Simulator._run_worlds_channel_jit._cache_size()
                       - batched_traces)
 
+    cost_fn, cost_args = sim.worlds_executable(states, scheds)
     report = {
         "config": dict(cfg), "seed": seed,
         "family": "channel_grid_horizons_x_byz_fracs",
@@ -912,6 +990,8 @@ def bench_batched_sweep(seed: int = 0) -> list[str]:
         },
         "speedup_cold": round(serial_cold / batched_cold, 3),
         "speedup_warm": round(serial_warm / batched_warm, 3),
+        "executables": [_exec_cost("sweep_batched_replay",
+                                   cost_fn, *cost_args)],
     }
     _dump_json(__file__, "BENCH_sweep.json", report)
     return [
@@ -970,8 +1050,8 @@ def bench_defense(seed: int = 0) -> list[str]:
     consensus cost of communicating less.
     """
     from repro.core import (AdaptiveDefense, ByzantineEdges, ChannelModel,
-                            DelayProcess, Simulator, World, build_graph,
-                            params_from_graph)
+                            DelayProcess, Simulator, Telemetry, World,
+                            build_graph, params_from_graph, trace_summary)
 
     cfg = _DEF_BENCH
     n, d, rounds = cfg["n"], cfg["d"], cfg["rounds"]
@@ -1019,13 +1099,23 @@ def bench_defense(seed: int = 0) -> list[str]:
                 clips.append(clip)
                 defs.append(dfn)
 
+    # flight recorder: the compiled per-round telemetry columns ride the
+    # SAME batched scan (one trace, one dispatch — asserted below)
+    tel = Telemetry()
     before = Simulator._run_worlds_defense_jit._cache_size()
+    t_span = _TRACER.now_us() if _TRACER is not None else 0.0
     t0 = time.perf_counter()
     _, trace = sim.run_worlds(states, scheds, params=plist,
-                              robust_clips=clips, defenses=defs)
+                              robust_clips=clips, defenses=defs,
+                              telemetry=tel)
     jax.block_until_ready(trace)
     us_grid = (time.perf_counter() - t0) * 1e6
     traces = Simulator._run_worlds_defense_jit._cache_size() - before
+    if _TRACER is not None:
+        _TRACER.complete("dispatch.defense_grid", t_span, us_grid,
+                         lane="dispatch",
+                         args={"worlds": len(worlds),
+                               "jit_traces": int(traces)})
     cons = np.asarray(trace.consensus, np.float64)
     rejn = np.asarray(trace.defense.rejections, np.float64)
     quarn = np.asarray(trace.defense.quarantined, np.float64)
@@ -1143,9 +1233,23 @@ def bench_defense(seed: int = 0) -> list[str]:
                 f"kept_fraction={kept:.3f};"
                 f"cost_ratio={report_cc['consensus_cost_ratio']:.3f}")
 
+    tel_digest = trace_summary(trace.telemetry)
+    rows.append(
+        f"defense_telemetry,0.0,"
+        f"applied={tel_digest['applied_total']:.0f};"
+        f"rejected={tel_digest['rejected_total']:.0f};"
+        f"dropped={tel_digest['dropped_total']:.0f};"
+        f"bytes={tel_digest['bytes_moved_total']:.3e}")
+    cost_fn, cost_args = sim.worlds_executable(
+        states, scheds, params=plist, robust_clips=clips, defenses=defs,
+        telemetry=tel)
     report = {"config": _sanitize_json(dict(cfg)), "seed": seed,
               "arms": entries, "comm_control": report_cc,
-              "summary": summary}
+              "summary": summary,
+              "telemetry": {"spec": tel.to_dict(),
+                            "summary": tel_digest},
+              "executables": [_exec_cost("defense_grid_replay",
+                                         cost_fn, *cost_args)]}
     _dump_json(__file__, "BENCH_defense.json", report)
     fmt = lambda v: "None" if v is None else f"{v:.3f}"  # noqa: E731
     rows.append(
@@ -1418,6 +1522,33 @@ def bench_train(seed: int = 0) -> list[str]:
                 f"tail_loss="
                 f"{topo_entry['arms']['a2cid2_accel']['tail_loss']:.4f}")
 
+        # cost row: analytic, not HLO — AOT-lowering a real-model grid a
+        # second time would double a minutes-long compile for one number.
+        # 6ND train FLOPs over the grid, parameter-row read+write traffic
+        # per round, gossip bytes from the compiled schedules' event count
+        from repro.analysis.roofline import (HBM_BW, ICI_BW,
+                                             PEAK_FLOPS_BF16)
+        from repro.analysis import model_flops
+        conf = _TRAIN_BENCH["families"][fam]
+        tokens = (rounds * n * conf.get("batch_size", 1)
+                  * conf.get("seq_len", 1))
+        grid_flops = (model_flops(num_params, 0, tokens, "train")
+                      * len(points))
+        total_events = sum(int(np.asarray(s.event_mask).sum())
+                           for s in scheds)
+        coll_bytes = 2.0 * total_events * num_params * 4
+        write_bytes = float(len(points)) * rounds * n * num_params * 4 * 2
+        terms = {"compute": grid_flops / PEAK_FLOPS_BF16,
+                 "memory": write_bytes / HBM_BW,
+                 "collective": coll_bytes / ICI_BW}
+        fam_entry["executables"] = [{
+            "executable": f"train_{fam}_grid", "method": "analytic",
+            "flops": grid_flops, "write_bytes": write_bytes,
+            "collective_bytes": coll_bytes,
+            "compute_s": terms["compute"], "memory_s": terms["memory"],
+            "collective_s": terms["collective"],
+            "bottleneck": max(terms, key=terms.get)}]
+
         report["families"][fam] = fam_entry
         rows.append(f"train_{fam}_dispatch,{cold_us:.0f},"
                     f"worlds={len(points)};traces={traces};"
@@ -1508,6 +1639,19 @@ def bench_serve(seed: int = 0) -> list[str]:
     layout = FlatLayout.from_pytree(stacked, stacked=True)
     step_fn = jax.jit(make_fleet_step(model, layout))
 
+    # roofline-annotated cost of the one decode executable all arms share
+    bank0 = layout.pack(stacked)
+    caches0 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (W,) + a.shape),
+        model.init_cache(c["max_batch"], c["max_len"]))
+    executables = [_exec_cost(
+        "fleet_decode_step", step_fn, bank0, caches0,
+        jnp.zeros((W, c["max_batch"], 1), jnp.int32),
+        jnp.zeros((W, c["max_batch"]), jnp.int32),
+        jnp.zeros((W, c["max_batch"]), bool))]
+
+    from repro.analysis import MetricsRegistry
+    registry = MetricsRegistry()
     rows: list[str] = []
     fleets: dict = {}
     for aname, akw in algos.items():
@@ -1519,25 +1663,51 @@ def bench_serve(seed: int = 0) -> list[str]:
                                 drift_scale=c["drift_scale"],
                                 stall_per_event=c["stall_per_event"],
                                 decode_step_fn=step_fn)
-            rep = fleet.run(rounds, seed=seed)
+            if aname == "a2cid2" and sname == "clean":
+                # cost the compiled gossip round once, on the arm whose
+                # schedule actually communicates
+                from functools import partial as _partial
+                arrays, horizon = fleet.sim.channel_reference_arrays(
+                    world.compile(rounds, seed))
+                ring0 = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (horizon,) + a.shape),
+                    fleet._bank0) if horizon else None
+                executables.append(_exec_cost(
+                    "fleet_gossip_round",
+                    jax.jit(_partial(fleet.sim._round_channel, horizon)),
+                    (fleet._bank0, jnp.array(fleet._bank0),
+                     jnp.zeros((W,)), ring0, jax.random.PRNGKey(0)),
+                    tuple(jnp.asarray(np.asarray(a)[0]) for a in arrays)))
+            rep = fleet.run(rounds, seed=seed, tracer=_TRACER,
+                            metrics=registry)
             summ = rep.summary()
             idxs = _curve_indices(len(rep.consensus))
+            # gossip stops at rep.rounds: gates read the scheduled prefix
+            # so the constant drain tail can't dilute tail statistics
+            prefix = rep.consensus[:rep.rounds]
+            pidx = _curve_indices(len(prefix))
             fleets[f"{aname}/{sname}"] = {
                 "world": world.to_dict(),
                 **summ,
                 "round_axis": [int(i) for i in idxs],
                 "consensus": [float(rep.consensus[i]) for i in idxs],
+                "consensus_scheduled": [float(prefix[i]) for i in pidx],
+                "consensus_final_scheduled":
+                    float(prefix[-1]) if prefix.size else 0.0,
             }
             rows.append(
                 f"serve_{aname}_{sname},"
                 f"{1e6 * rep.wall_seconds / max(rounds, 1):.0f},"
                 f"p95={summ['latency_p95']:.1f};lost={summ['lost']};"
+                f"ttft_p50={summ['ttft_p50']:.1f};"
                 f"tok_per_round={summ['throughput_tokens_per_round']:.2f}")
 
     trace = load.sample_trace(rounds, seed)
 
     def tail_ratio(entry):
-        cur = np.asarray(entry["consensus"])
+        # scheduled prefix only: the drain tail is constant by
+        # construction (gossip stopped) and would flatten the statistic
+        cur = np.asarray(entry["consensus_scheduled"])
         k = max(1, int(len(cur) * c["tail_frac"]))
         mid = np.mean(cur[len(cur) // 2: len(cur) // 2 + k])
         return float(np.mean(cur[-k:]) / max(mid, 1e-12))
@@ -1548,7 +1718,8 @@ def bench_serve(seed: int = 0) -> list[str]:
         "p95_retention": acid["latency_p95"] / max(nog["latency_p95"], 1e-9),
         "p95_retention_max": c["p95_retention_max"],
         "consensus_ratio_vs_nogossip":
-            acid["consensus_final"] / max(nog["consensus_final"], 1e-12),
+            acid["consensus_final_scheduled"]
+            / max(nog["consensus_final_scheduled"], 1e-12),
         "consensus_tail_over_mid": tail_ratio(acid),
         "churn_lost": {k: v["lost"] for k, v in churn_arms.items()},
         "churn_restarted": {k: v["restarted"]
@@ -1574,6 +1745,8 @@ def bench_serve(seed: int = 0) -> list[str]:
                   "kill_round": kill_round},
         "fleets": fleets,
         "gates": gates,
+        "executables": executables,
+        "metrics": registry.snapshot(),
     }
     _dump_json(__file__, "BENCH_serve.json", report)
     rows.append(f"serve_gates,0,p95_retention="
@@ -1647,9 +1820,22 @@ def main() -> None:
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
+    from repro.analysis import SpanTracer
+    global _TRACER
     print("name,us_per_call,derived")
     for name in names:
-        for row in BENCHES[name](seed=args.seed):
+        # one trace file per family: TRACE_<name>.json beside the
+        # BENCH_<name>.json it narrates (Perfetto-loadable)
+        _TRACER = SpanTracer("bench", metadata={
+            "family": name, "seed": args.seed, "small": bool(args.small)})
+        try:
+            with _TRACER.span(f"bench.{name}", lane="bench",
+                              args={"seed": args.seed}):
+                rows = BENCHES[name](seed=args.seed)
+            _TRACER.write(_artifact_path(f"TRACE_{name}.json"))
+        finally:
+            _TRACER = None
+        for row in rows:
             print(row)
 
 

@@ -1,5 +1,10 @@
+from .hlo_cost import HloCost, cost_from_hlo
+from .metrics import MetricsRegistry, parse_exposition
 from .roofline import (RooflineReport, collective_bytes_from_hlo,
                        model_flops, roofline_terms)
+from .tracing import SpanTracer, load_trace, validate_trace
 
-__all__ = ["RooflineReport", "collective_bytes_from_hlo", "model_flops",
-           "roofline_terms"]
+__all__ = ["HloCost", "cost_from_hlo", "MetricsRegistry",
+           "parse_exposition", "RooflineReport",
+           "collective_bytes_from_hlo", "model_flops", "roofline_terms",
+           "SpanTracer", "load_trace", "validate_trace"]

@@ -18,6 +18,8 @@ from .graphs import (Graph, TopologyPhase, TopologySchedule, build_graph,
                      complete_graph, exponential_graph, hypercube_graph,
                      ring_graph, star_graph, torus_graph)
 from .simulator import SimState, SimTrace, Simulator, allreduce_sgd
+from .telemetry import (Telemetry, TelemetryTrace, row_bytes_of,
+                        trace_summary)
 from .world import (SERVE_ARRIVE_KEY, ChurnProcess, LinkModel, PhaseSwitch,
                     RequestTrace, ServeLoad, WorkerModel, World, WorldSweep)
 
@@ -40,4 +42,5 @@ __all__ = [
     "complete_graph", "exponential_graph", "hypercube_graph",
     "ring_graph", "star_graph", "torus_graph",
     "SimState", "SimTrace", "Simulator", "allreduce_sgd",
+    "Telemetry", "TelemetryTrace", "row_bytes_of", "trace_summary",
 ]

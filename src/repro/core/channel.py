@@ -55,6 +55,14 @@ _CHANNEL_TAG = 0xC4A77
 # ROADMAP since PR 3; both replay paths key on exactly these names)
 STALE_KEY = "stale"
 CORRUPT_KEY = "corrupt"
+# telemetry marker (DESIGN.md §15): a drop rewrites the partner involution
+# to identity, which is indistinguishable from "never scheduled" in the
+# surviving arrays — this extras key records WHERE the erasures happened so
+# the flight recorder can report dropped-read counts.  Host-only data: the
+# replay engines never lower it into scan inputs (dispatch and
+# ``_channel_extras`` key on stale/corrupt alone), so attaching it leaves
+# every compiled replay bit-for-bit unchanged.
+DROP_KEY = "drop"
 
 # corrupt-value multipliers per adversary mode: the receiver sees
 # multiplier * x_partner instead of x_partner
@@ -289,6 +297,7 @@ class ChannelModel:
             endpoints share one draw by construction."""
             return (p > idx) & schedule.event_mask[:, :, None]
 
+        extras = {}
         if self.drop_prob > 0.0:
             rng = np.random.default_rng(
                 np.random.SeedSequence([int(seed), _CHANNEL_TAG, 0]))
@@ -299,9 +308,13 @@ class ChannelModel:
             jj = partners[rr, kk, ii]
             partners[rr, kk, ii] = ii
             partners[rr, kk, jj.astype(np.intp)] = jj
+            # telemetry marker at BOTH erased endpoints (see DROP_KEY)
+            dropped = np.zeros((R, K, n), np.int32)
+            dropped[rr, kk, ii] = 1
+            dropped[rr, kk, jj.astype(np.intp)] = 1
+            extras[DROP_KEY] = dropped
 
         involved = (partners != idx) & schedule.event_mask[:, :, None]
-        extras = {}
         if self.delay is not None and not self.delay.is_trivial:
             rng = np.random.default_rng(
                 np.random.SeedSequence([int(seed), _CHANNEL_TAG, 1]))

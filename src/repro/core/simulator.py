@@ -66,6 +66,8 @@ from .defense import (DefenseTrace, defense_absorb, defense_comm,
 from .engine import FlatGossipEngine
 from .events import Schedule, coalesce_schedule
 from .flatbuf import FlatLayout
+from .telemetry import (Telemetry, batch_schedule_columns, finalize_trace,
+                        row_bytes_of, schedule_columns)
 
 
 def _jit_pair(impl, *, static=(0,), donate=(1,)):
@@ -98,6 +100,11 @@ class SimTrace(NamedTuple):
     # replays, None elsewhere — a defaulted tail field so every existing
     # 3-tuple construction/unpacking site stays valid
     defense: Any = None
+    # flight-recorder columns (telemetry.TelemetryTrace) when a Telemetry
+    # spec was passed, None elsewhere — same defaulted-tail mechanism.
+    # Inside the jitted impls this briefly holds the raw in-scan runtime
+    # tuple; the public entry points replace it with the finalized trace.
+    telemetry: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,6 +139,64 @@ class Simulator:
         x_tilde = jax.tree.map(jnp.copy, stack) if self.donate else stack
         return SimState(x=stack, x_tilde=x_tilde, t_last=jnp.zeros((n,)),
                         key=key)
+
+    # ----------------------------------------------- telemetry accumulation
+    # (DESIGN.md §15) When a Telemetry spec is active, the channel/defense
+    # flavors thread a tiny f32 accumulator — (applied, rejected,
+    # norm_sum, norm_sq_sum), scalars serially / (B,) world-batched —
+    # through their comm steps and emit + reset it at every gradient
+    # tick, exactly the DefenseTrace mechanism.  The spec is a STATIC jit
+    # argument, so ``tel=None`` traces contain none of this machinery:
+    # the None jaxpr is the pre-telemetry jaxpr, bit for bit.
+
+    @staticmethod
+    def _tel_zeros(shape=()):
+        z = jnp.zeros(shape, jnp.float32)
+        return (z, z, z, z)
+
+    def _tel_rej(self, nrm, tau=None):
+        """Rejected-read mask under the replay's robust rule.  Only the
+        trim rule REJECTS a read; 'clip'/'coord' attenuate but still
+        apply it.  ``tau`` (traced scalar or (B,) array) overrides the
+        static threshold — the lifted ``robust_clips`` axis; tau = inf
+        rejects nothing, matching its bitwise-plain degeneration."""
+        tval = tau if tau is not None else self.robust_clip
+        if tval is None or self.robust_rule != "trim":
+            return jnp.zeros_like(nrm)
+        t = jnp.asarray(tval, jnp.float32)
+        t = jnp.reshape(t, t.shape + (1,) * (nrm.ndim - t.ndim))
+        return (nrm > t).astype(jnp.float32)
+
+    @staticmethod
+    def _tel_step(acc, involved, rej, nrm, batched: bool = False):
+        """Fold one comm step into the accumulator.  ``involved`` is the
+        directed-read mask ((n,) or (B, n)), ``rej`` the rejected subset,
+        ``nrm`` the per-read channel-delta norms (the moments are taken
+        over ADMITTED reads only — rejected garbage would swamp them)."""
+        a_cnt, r_cnt, s1, s2 = acc
+        inv = involved.astype(jnp.float32)
+        rj = jnp.asarray(rej, jnp.float32) * inv
+        adm = inv - rj
+        ax = 1 if batched else 0
+        a_cnt = a_cnt + adm.sum(axis=ax)
+        r_cnt = r_cnt + rj.sum(axis=ax)
+        nf = nrm.astype(jnp.float32)
+        s1 = s1 + (nf * adm).sum(axis=ax)
+        s2 = s2 + (nf * nf * adm).sum(axis=ax)
+        return (a_cnt, r_cnt, s1, s2)
+
+    def _row_bytes(self, state: SimState, worlds: bool = False) -> int:
+        """Flat-row transfer size for the bytes-moved column.  Falls back
+        to summing leaf widths when no exact buffer dtype exists (the
+        same pytrees that reject the engine path)."""
+        try:
+            return row_bytes_of(FlatLayout.from_pytree(
+                state.x, stacked=True, worlds=worlds))
+        except TypeError:
+            lead = 2 if worlds else 1
+            return sum(int(np.prod(leaf.shape[lead:], dtype=np.int64))
+                       * int(np.dtype(leaf.dtype).itemsize)
+                       for leaf in jax.tree.leaves(state.x))
 
     # ------------------------------------------------------------- one round
     def _comm_event(self, carry, event):
@@ -244,8 +309,12 @@ class Simulator:
                                      jnp.asarray(self.params.alpha),
                                      jnp.asarray(self.params.alpha_tilde))
 
-    def _comm_event_channel(self, horizon: int, ring, carry, event):
-        x, x_tilde, t_last = carry
+    def _comm_event_channel(self, horizon: int, ring, carry, event,
+                            tel=None):
+        if tel is None:
+            x, x_tilde, t_last = carry
+        else:
+            x, x_tilde, t_last, acc = carry
         partner, time, mask, src_slot, corrupt = event
         involved = (partner != jnp.arange(partner.shape[0])) & mask
         dt = jnp.where(involved, time - t_last, 0.0)
@@ -257,18 +326,33 @@ class Simulator:
         xp = treedef.unflatten([
             self._partner_leaf(a, ra, partner, src_slot, horizon)
             for a, ra in zip(flat_x, ring_leaves)])
+        if tel is not None:
+            nrm = self._delta_norms_tree(x, xp, corrupt)
+            acc = self._tel_step(acc, involved, self._tel_rej(nrm), nrm)
         # idle/masked rows read themselves fresh with corrupt 0 => m = 0
         x, x_tilde = self._channel_p2p(x, x_tilde, xp, corrupt)
-        return (x, x_tilde, t_last), None
+        if tel is None:
+            return (x, x_tilde, t_last), None
+        return (x, x_tilde, t_last, acc), None
 
-    def _round_channel(self, horizon: int, carry, round_sched):
+    def _round_channel(self, horizon: int, carry, round_sched, tel=None):
         x, x_tilde, t_last, ring, key = carry
         (partners, times, mask, src_slots, corrupts, grad_times, grad_scale,
          alive, ring_pos) = round_sched
-        inner = partial(self._comm_event_channel, horizon, ring)
-        (x, x_tilde, t_last), _ = jax.lax.scan(
-            inner, (x, x_tilde, t_last),
+        inner = partial(self._comm_event_channel, horizon, ring, tel=tel)
+        # the telemetry accumulator is LOCAL to the round's event scan —
+        # zeroed here, emitted through the metrics dict below — so the
+        # round-level carry keeps its public shape (the fleet jits this
+        # round body directly)
+        inner_carry = (x, x_tilde, t_last) if tel is None else \
+            (x, x_tilde, t_last, self._tel_zeros())
+        inner_carry, _ = jax.lax.scan(
+            inner, inner_carry,
             (partners, times, mask, src_slots, corrupts))
+        if tel is None:
+            x, x_tilde, t_last = inner_carry
+        else:
+            x, x_tilde, t_last, acc = inner_carry
 
         dt = jnp.where(alive, grad_times - t_last, 0.0)
         x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
@@ -296,26 +380,34 @@ class Simulator:
             "mean_param_norm": sum(jnp.sum(m ** 2) for m in
                                    jax.tree.leaves(worker_mean(x))),
         }
+        if tel is not None:
+            metrics.update(tel_applied=acc[0], tel_rejected=acc[1],
+                           tel_norm_sum=acc[2], tel_norm_sq=acc[3])
         return (x, x_tilde, t_last, ring, key), metrics
 
     def _run_channel_reference_impl(self, state: SimState, schedule_arrays,
-                                    horizon: int
+                                    horizon: int, tel=None
                                     ) -> tuple[SimState, SimTrace]:
         ring = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), state.x) \
             if horizon else None
         carry = (state.x, state.x_tilde, state.t_last, ring, state.key)
         carry, metrics = jax.lax.scan(
-            partial(self._round_channel, horizon), carry, schedule_arrays)
+            partial(self._round_channel, horizon, tel=tel), carry,
+            schedule_arrays)
         x, x_tilde, t_last, _, key = carry
         return SimState(x, x_tilde, t_last, key), \
             SimTrace(metrics["loss"], metrics["consensus"],
-                     metrics["mean_param_norm"])
+                     metrics["mean_param_norm"],
+                     telemetry=None if tel is None else
+                     (metrics["tel_applied"], metrics["tel_rejected"],
+                      metrics["tel_norm_sum"], metrics["tel_norm_sq"]))
 
     _run_channel_reference_jit, _run_channel_reference_dnt = _jit_pair(
-        _run_channel_reference_impl, static=(0, 3))
+        _run_channel_reference_impl, static=(0, 3, 4))
 
-    def _round_defense(self, horizon: int, dk, carry, round_sched):
+    def _round_defense(self, horizon: int, dk, carry, round_sched,
+                       tel=None):
         """Defense twin of ``_round_channel``: defense_comm runs per EVENT
         here where the engine path runs it per fused batch — equivalent
         because a batch merges only disjoint matchings (each reader row
@@ -329,7 +421,10 @@ class Simulator:
         idx = jnp.arange(t_last.shape[0])
 
         def comm_event(carry, event):
-            x, xt, tl, ds = carry
+            if tel is None:
+                x, xt, tl, ds = carry
+            else:
+                x, xt, tl, ds, acc = carry
             partner, time, msk, src_slot, corrupt = event
             involved = (partner != idx) & msk
             dt = jnp.where(involved, time - tl, 0.0)
@@ -347,13 +442,22 @@ class Simulator:
                                              alpha, alpha_t)
             # the kernel's rejection output IS (mscale == 0) — provably,
             # so the reference folds the same mask into the counters
-            ds = defense_absorb(ds, (mscale == 0.0).astype(jnp.float32),
-                                quar, involved)
-            return (x, xt, tl, ds), None
+            rej = (mscale == 0.0).astype(jnp.float32)
+            ds = defense_absorb(ds, rej, quar, involved)
+            if tel is None:
+                return (x, xt, tl, ds), None
+            acc = self._tel_step(acc, involved, rej, nrm)
+            return (x, xt, tl, ds, acc), None
 
-        (x, x_tilde, t_last, ds), _ = jax.lax.scan(
-            comm_event, (x, x_tilde, t_last, ds),
+        inner_carry = (x, x_tilde, t_last, ds) if tel is None else \
+            (x, x_tilde, t_last, ds, self._tel_zeros())
+        inner_carry, _ = jax.lax.scan(
+            comm_event, inner_carry,
             (partners, times, mask, src_slots, corrupts))
+        if tel is None:
+            x, x_tilde, t_last, ds = inner_carry
+        else:
+            x, x_tilde, t_last, ds, acc = inner_carry
 
         dt = jnp.where(alive, grad_times - t_last, 0.0)
         x, x_tilde = apply_mixing(x, x_tilde, self.params.eta, dt)
@@ -381,10 +485,13 @@ class Simulator:
                                    jax.tree.leaves(worker_mean(x))),
             "tau": tau, "rejections": rejn, "quarantined": quarn,
         }
+        if tel is not None:
+            metrics.update(tel_applied=acc[0], tel_rejected=acc[1],
+                           tel_norm_sum=acc[2], tel_norm_sq=acc[3])
         return (x, x_tilde, t_last, ring, key, ds), metrics
 
     def _run_defense_reference_impl(self, state: SimState, dk,
-                                    schedule_arrays, horizon: int
+                                    schedule_arrays, horizon: int, tel=None
                                     ) -> tuple[SimState, SimTrace]:
         ring = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (horizon,) + a.shape), state.x) \
@@ -393,36 +500,54 @@ class Simulator:
         carry = (state.x, state.x_tilde, state.t_last, ring, state.key,
                  defense_init(n))
         carry, metrics = jax.lax.scan(
-            partial(self._round_defense, horizon, dk), carry,
+            partial(self._round_defense, horizon, dk, tel=tel), carry,
             schedule_arrays)
         x, x_tilde, t_last, _, key, _ = carry
         return SimState(x, x_tilde, t_last, key), \
             SimTrace(metrics["loss"], metrics["consensus"],
                      metrics["mean_param_norm"],
                      DefenseTrace(metrics["tau"], metrics["rejections"],
-                                  metrics["quarantined"]))
+                                  metrics["quarantined"]),
+                     telemetry=None if tel is None else
+                     (metrics["tel_applied"], metrics["tel_rejected"],
+                      metrics["tel_norm_sum"], metrics["tel_norm_sq"]))
 
     _run_defense_reference_jit, _run_defense_reference_dnt = _jit_pair(
-        _run_defense_reference_impl, static=(0, 4))
+        _run_defense_reference_impl, static=(0, 4, 5))
 
     def _channel_step(self, engine: FlatGossipEngine, n: int, horizon: int,
-                      carry, xs):
+                      carry, xs, tel=None):
         """Channel twin of ``_engine_step``: fused channel batches with
-        ring-buffer stale reads, ring rotation at gradient ticks."""
+        ring-buffer stale reads, ring rotation at gradient ticks.  With a
+        telemetry spec the carry tail holds the round accumulator —
+        emitted + reset at each gradient tick, DefenseTrace-style."""
         partner, dt_nxt, is_grad, gscale, corrupt, src_slot, ring_pos = xs
 
         def comm(args):
-            bx, bxt, ring, key = args
+            if tel is None:
+                bx, bxt, ring, key = args
+            else:
+                bx, bxt, ring, key, acc = args
             if horizon:
                 xp = engine.partner_values(ring, bx, partner, src_slot)
             else:
                 xp = jnp.take(bx, partner, axis=0)
+            if tel is not None:
+                nrm = engine.delta_norms(bx, xp, corrupt, axes=1)
+                involved = partner != jnp.arange(n)
+                acc = self._tel_step(acc, involved, self._tel_rej(nrm),
+                                     nrm)
             bx, bxt = engine.channel_batch(bx, bxt, xp, corrupt, dt_nxt)
             z = jnp.zeros((), jnp.float32)
-            return (bx, bxt, ring, key), (z, z, z)
+            if tel is None:
+                return (bx, bxt, ring, key), (z, z, z)
+            return (bx, bxt, ring, key, acc), (z,) * 7
 
         def grad(args):
-            bx, bxt, ring, key = args
+            if tel is None:
+                bx, bxt, ring, key = args
+            else:
+                bx, bxt, ring, key, acc = args
             key, sub = jax.random.split(key)
             keys = jax.random.split(sub, n)
             losses, grads = jax.vmap(self.grad_fn)(engine.unpack(bx), keys,
@@ -438,12 +563,15 @@ class Simulator:
             if horizon:
                 ring = engine.ring_push(ring, bx, ring_pos)
             bx, bxt = engine.mix(bx, bxt, dt_nxt)
-            return (bx, bxt, ring, key), (loss, consensus, mean_norm)
+            if tel is None:
+                return (bx, bxt, ring, key), (loss, consensus, mean_norm)
+            return (bx, bxt, ring, key, self._tel_zeros()), \
+                (loss, consensus, mean_norm) + acc
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
-    def _run_channel_impl(self, state: SimState, stream_arrays, horizon: int
-                          ) -> tuple[SimState, SimTrace]:
+    def _run_channel_impl(self, state: SimState, stream_arrays, horizon: int,
+                          tel=None) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final, corrupt, src_slot, ring_pos) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
@@ -456,18 +584,26 @@ class Simulator:
         bx, bxt = engine.mix(bx, bxt, prologue)
         n = prologue.shape[0]
         ring = engine.ring_init(bx, horizon) if horizon else None
-        (bx, bxt, ring, key), ys = jax.lax.scan(
-            partial(self._channel_step, engine, n, horizon),
-            (bx, bxt, ring, state.key),
+        init = (bx, bxt, ring, state.key) if tel is None else \
+            (bx, bxt, ring, state.key, self._tel_zeros())
+        carry, ys = jax.lax.scan(
+            partial(self._channel_step, engine, n, horizon, tel=tel),
+            init,
             (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
              ring_pos))
-        loss, consensus, mean_norm = ys
+        bx, bxt, _, key = carry[:4]
         final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
+        if tel is None:
+            loss, consensus, mean_norm = ys
+            tcols = None
+        else:
+            loss, consensus, mean_norm = ys[:3]
+            tcols = tuple(c[grad_pos] for c in ys[3:])
         return final, SimTrace(loss[grad_pos], consensus[grad_pos],
-                               mean_norm[grad_pos])
+                               mean_norm[grad_pos], telemetry=tcols)
 
     _run_channel_jit, _run_channel_dnt = _jit_pair(
-        _run_channel_impl, static=(0, 3))
+        _run_channel_impl, static=(0, 3, 4))
 
     # ------------------------------------------- self-healing replays
     # (DESIGN.md §12) The defense flavors are the channel flavors with the
@@ -480,13 +616,16 @@ class Simulator:
     # none-vs-static-vs-adaptive grid.
 
     def _defense_step(self, engine: FlatGossipEngine, n: int, horizon: int,
-                      dk, carry, xs):
+                      dk, carry, xs, tel=None):
         """Defense twin of ``_channel_step``: the control loop rides the
         carry as a ``defense.DefenseState``."""
         partner, dt_nxt, is_grad, gscale, corrupt, src_slot, ring_pos = xs
 
         def comm(args):
-            bx, bxt, ring, key, ds = args
+            if tel is None:
+                bx, bxt, ring, key, ds = args
+            else:
+                bx, bxt, ring, key, ds, acc = args
             if horizon:
                 xp = engine.partner_values(ring, bx, partner, src_slot)
             else:
@@ -498,10 +637,16 @@ class Simulator:
                                                        mscale, dt_nxt)
             ds = defense_absorb(ds, rej, quar, involved)
             z = jnp.zeros((), jnp.float32)
-            return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
+            if tel is None:
+                return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
+            acc = self._tel_step(acc, involved, rej, nrm)
+            return (bx, bxt, ring, key, ds, acc), (z,) * 10
 
         def grad(args):
-            bx, bxt, ring, key, ds = args
+            if tel is None:
+                bx, bxt, ring, key, ds = args
+            else:
+                bx, bxt, ring, key, ds, acc = args
             key, sub = jax.random.split(key)
             keys = jax.random.split(sub, n)
             losses, grads = jax.vmap(self.grad_fn)(engine.unpack(bx), keys,
@@ -518,13 +663,18 @@ class Simulator:
             if horizon:
                 ring = engine.ring_push(ring, bx, ring_pos)
             bx, bxt = engine.mix(bx, bxt, dt_nxt)
-            return (bx, bxt, ring, key, ds), (loss, consensus, mean_norm,
-                                              tau, rejn, quarn)
+            if tel is None:
+                return (bx, bxt, ring, key, ds), (loss, consensus,
+                                                  mean_norm, tau, rejn,
+                                                  quarn)
+            return (bx, bxt, ring, key, ds, self._tel_zeros()), \
+                (loss, consensus, mean_norm, tau, rejn, quarn) + acc
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
     def _run_defense_impl(self, state: SimState, dk, stream_arrays,
-                          horizon: int) -> tuple[SimState, SimTrace]:
+                          horizon: int, tel=None
+                          ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final, corrupt, src_slot, ring_pos) = stream_arrays
         engine = FlatGossipEngine.for_pytree(state.x, self.params,
@@ -537,19 +687,25 @@ class Simulator:
         bx, bxt = engine.mix(bx, bxt, prologue)
         n = prologue.shape[0]
         ring = engine.ring_init(bx, horizon) if horizon else None
-        (bx, bxt, ring, key, _), ys = jax.lax.scan(
-            partial(self._defense_step, engine, n, horizon, dk),
-            (bx, bxt, ring, state.key, defense_init(n)),
+        init = (bx, bxt, ring, state.key, defense_init(n))
+        if tel is not None:
+            init = init + (self._tel_zeros(),)
+        carry, ys = jax.lax.scan(
+            partial(self._defense_step, engine, n, horizon, dk, tel=tel),
+            init,
             (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
              ring_pos))
-        loss, consensus, mean_norm, tau, rejn, quarn = ys
+        bx, bxt, _, key = carry[:4]
+        loss, consensus, mean_norm, tau, rejn, quarn = ys[:6]
+        tcols = None if tel is None else tuple(c[grad_pos] for c in ys[6:])
         final = SimState(engine.unpack(bx), engine.unpack(bxt), t_final, key)
         return final, SimTrace(
             loss[grad_pos], consensus[grad_pos], mean_norm[grad_pos],
-            DefenseTrace(tau[grad_pos], rejn[grad_pos], quarn[grad_pos]))
+            DefenseTrace(tau[grad_pos], rejn[grad_pos], quarn[grad_pos]),
+            telemetry=tcols)
 
     _run_defense_jit, _run_defense_dnt = _jit_pair(
-        _run_defense_impl, static=(0, 4))
+        _run_defense_impl, static=(0, 4, 5))
 
     @staticmethod
     def _channel_extras(extras: dict, shape, horizon_from: str = STALE_KEY):
@@ -688,10 +844,12 @@ class Simulator:
         """
         return self.run_schedule(state, world.compile(rounds, seed=seed),
                                  engine=engine,
-                                 defense=getattr(world, "defense", None))
+                                 defense=getattr(world, "defense", None),
+                                 telemetry=getattr(world, "telemetry", None))
 
     def run_schedule(self, state: SimState, sched: Schedule, *,
-                     engine: bool = True, defense=None):
+                     engine: bool = True, defense=None, telemetry=None):
+        tel = telemetry
         active = defense is not None and defense.is_active
         if active and self.robust_rule != "trim":
             raise ValueError("the self-healing defense needs "
@@ -708,34 +866,51 @@ class Simulator:
         # the self-healing twins; everything else stays on the original
         # replays bit-for-bit
         extras = sched.extras_dict()
+        # a telemetry spec forces the channel flavor too: plain schedules
+        # degenerate on it bitwise (horizon 0 / corrupt 0 — the pinned
+        # channel-equals-plain precedent), and the flavor carries the
+        # accumulator machinery
         channel = (STALE_KEY in extras or CORRUPT_KEY in extras
-                   or self.robust_clip is not None)
+                   or self.robust_clip is not None or tel is not None)
+        # schedule columns + row bytes BEFORE dispatch: under donation the
+        # replay consumes ``state``, and only shapes survive it
+        rb = self._row_bytes(state) if tel is not None and tel.bytes_moved \
+            else 0
+        cols = schedule_columns(tel, sched) if tel is not None else None
         if engine:
             if active:
                 arrays, horizon = self.channel_coalesced_arrays(state, sched)
                 dk = knobs_single(defense, self.robust_clip)
                 fn = self._run_defense_dnt if self.donate \
                     else self._run_defense_jit
-                return fn(state, dk, arrays, horizon)
-            if channel:
+                out = fn(state, dk, arrays, horizon, tel)
+            elif channel:
                 arrays, horizon = self.channel_coalesced_arrays(state, sched)
                 fn = self._run_channel_dnt if self.donate \
                     else self._run_channel_jit
-                return fn(state, arrays, horizon)
-            return self.run_coalesced(state, self.coalesced_arrays(state,
-                                                                   sched))
-        if active:
+                out = fn(state, arrays, horizon, tel)
+            else:
+                return self.run_coalesced(state,
+                                          self.coalesced_arrays(state,
+                                                                sched))
+        elif active:
             arrays, horizon = self.channel_reference_arrays(sched)
             dk = knobs_single(defense, self.robust_clip)
             fn = self._run_defense_reference_dnt if self.donate \
                 else self._run_defense_reference_jit
-            return fn(state, dk, arrays, horizon)
-        if channel:
+            out = fn(state, dk, arrays, horizon, tel)
+        elif channel:
             arrays, horizon = self.channel_reference_arrays(sched)
             fn = self._run_channel_reference_dnt if self.donate \
                 else self._run_channel_reference_jit
-            return fn(state, arrays, horizon)
-        return self.run(state, self.reference_arrays(sched))
+            out = fn(state, arrays, horizon, tel)
+        else:
+            return self.run(state, self.reference_arrays(sched))
+        if tel is None:
+            return out
+        final, tr = out
+        return final, tr._replace(
+            telemetry=finalize_trace(tel, tr.telemetry, cols, rb))
 
     # ---------------------------------------- batched many-worlds replay
     # (DESIGN.md §11) B independent worlds in ONE compiled scan: (B, W, D)
@@ -852,7 +1027,8 @@ class Simulator:
     _run_worlds_jit, _run_worlds_dnt = _jit_pair(_run_worlds_impl)
 
     def _worlds_channel_step(self, engine: FlatGossipEngine, n: int,
-                             horizon: int, pw, gammas, taus, carry, xs):
+                             horizon: int, pw, gammas, taus, carry, xs,
+                             tel=None):
         """Batched twin of ``_channel_step``: per-world ring reads, one
         shared ring rotation slot per gradient tick.  ``taus`` (None or a
         traced (B,) array) is the lifted per-world robust threshold."""
@@ -860,98 +1036,48 @@ class Simulator:
          ring_pos) = xs
 
         def comm(args):
-            bx, bxt, ring, key = args
+            if tel is None:
+                bx, bxt, ring, key = args
+            else:
+                bx, bxt, ring, key, acc = args
             if horizon:
                 xp = engine.partner_values_worlds(ring, bx, partner,
                                                   src_slot)
             else:
                 xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
+            if tel is not None:
+                nrm = engine.delta_norms(bx, xp, corrupt, axes=2)
+                involved = partner != jnp.arange(n)[None, :]
+                acc = self._tel_step(acc, involved,
+                                     self._tel_rej(nrm, taus), nrm,
+                                     batched=True)
             bx, bxt = engine.channel_batch_worlds(bx, bxt, xp, corrupt,
                                                   dt_nxt, pw, taus)
             z = jnp.zeros((partner.shape[0],), jnp.float32)
-            return (bx, bxt, ring, key), (z, z, z)
+            if tel is None:
+                return (bx, bxt, ring, key), (z, z, z)
+            return (bx, bxt, ring, key, acc), (z,) * 7
 
         def grad(args):
-            bx, bxt, ring, key = args
+            if tel is None:
+                bx, bxt, ring, key = args
+            else:
+                bx, bxt, ring, key, acc = args
             bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
                                                       key, gscale, gammas)
             if horizon:
                 ring = engine.ring_push_worlds(ring, bx, ring_pos)
             bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
-            return (bx, bxt, ring, key), metrics
+            if tel is None:
+                return (bx, bxt, ring, key), metrics
+            B = partner.shape[0]
+            return (bx, bxt, ring, key, self._tel_zeros((B,))), \
+                metrics + acc
 
         return jax.lax.cond(is_grad, grad, comm, carry)
 
     def _run_worlds_channel_impl(self, state: SimState, pw, gammas, taus,
-                                 stream_arrays, horizon: int
-                                 ) -> tuple[SimState, SimTrace]:
-        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
-         t_final, corrupt, src_slot, ring_pos) = stream_arrays
-        engine = FlatGossipEngine.for_pytree(state.x, self.params,
-                                             stacked=True, worlds=True,
-                                             backend=self.backend,
-                                             robust_clip=self.robust_clip,
-                                             robust_rule=self.robust_rule)
-        bx = engine.pack_worlds(state.x)
-        bxt = engine.pack_worlds(state.x_tilde)
-        bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
-        n = prologue.shape[1]
-        ring = engine.ring_init_worlds(bx, horizon) if horizon else None
-        (bx, bxt, ring, key), ys = jax.lax.scan(
-            partial(self._worlds_channel_step, engine, n, horizon, pw,
-                    gammas, taus),
-            (bx, bxt, ring, state.key),
-            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
-             ring_pos))
-        loss, consensus, mean_norm = ys
-        final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
-                         t_final, key)
-        return final, SimTrace(loss[grad_pos].T, consensus[grad_pos].T,
-                               mean_norm[grad_pos].T)
-
-    _run_worlds_channel_jit, _run_worlds_channel_dnt = _jit_pair(
-        _run_worlds_channel_impl, static=(0, 6))
-
-    def _worlds_defense_step(self, engine: FlatGossipEngine, n: int,
-                             horizon: int, pw, gammas, dk, carry, xs):
-        """Batched twin of ``_defense_step``: the control loop vmaps over
-        the world axis (``dk`` a DefenseKnobs of (B,) arrays — every arm,
-        including 'no defense' lowered to the neutral knobs, shares this
-        one trace)."""
-        (partner, dt_nxt, is_grad, gscale, corrupt, src_slot,
-         ring_pos) = xs
-
-        def comm(args):
-            bx, bxt, ring, key, ds = args
-            if horizon:
-                xp = engine.partner_values_worlds(ring, bx, partner,
-                                                  src_slot)
-            else:
-                xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
-            nrm = engine.delta_norms(bx, xp, corrupt, axes=2)
-            involved = partner != jnp.arange(n)[None, :]
-            mscale, quar, ds = jax.vmap(defense_comm)(dk, ds, partner,
-                                                      involved, nrm)
-            bx, bxt, rej = engine.channel_batch_worlds_scaled(
-                bx, bxt, xp, corrupt, mscale, dt_nxt, pw)
-            ds = jax.vmap(defense_absorb)(ds, rej, quar, involved)
-            z = jnp.zeros((partner.shape[0],), jnp.float32)
-            return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
-
-        def grad(args):
-            bx, bxt, ring, key, ds = args
-            bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
-                                                      key, gscale, gammas)
-            ds, (tau, rejn, quarn) = jax.vmap(defense_grad)(dk, ds)
-            if horizon:
-                ring = engine.ring_push_worlds(ring, bx, ring_pos)
-            bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
-            return (bx, bxt, ring, key, ds), metrics + (tau, rejn, quarn)
-
-        return jax.lax.cond(is_grad, grad, comm, carry)
-
-    def _run_worlds_defense_impl(self, state: SimState, pw, gammas, dk,
-                                 stream_arrays, horizon: int
+                                 stream_arrays, horizon: int, tel=None
                                  ) -> tuple[SimState, SimTrace]:
         (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
          t_final, corrupt, src_slot, ring_pos) = stream_arrays
@@ -965,22 +1091,117 @@ class Simulator:
         bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
         B, n = prologue.shape
         ring = engine.ring_init_worlds(bx, horizon) if horizon else None
-        (bx, bxt, ring, key, _), ys = jax.lax.scan(
-            partial(self._worlds_defense_step, engine, n, horizon, pw,
-                    gammas, dk),
-            (bx, bxt, ring, state.key, defense_init(n, batch=B)),
+        init = (bx, bxt, ring, state.key) if tel is None else \
+            (bx, bxt, ring, state.key, self._tel_zeros((B,)))
+        carry, ys = jax.lax.scan(
+            partial(self._worlds_channel_step, engine, n, horizon, pw,
+                    gammas, taus, tel=tel),
+            init,
             (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
              ring_pos))
-        loss, consensus, mean_norm, tau, rejn, quarn = ys
+        bx, bxt, _, key = carry[:4]
+        final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
+                         t_final, key)
+        loss, consensus, mean_norm = ys[:3]
+        tcols = None if tel is None else \
+            tuple(c[grad_pos].T for c in ys[3:])
+        return final, SimTrace(loss[grad_pos].T, consensus[grad_pos].T,
+                               mean_norm[grad_pos].T, telemetry=tcols)
+
+    _run_worlds_channel_jit, _run_worlds_channel_dnt = _jit_pair(
+        _run_worlds_channel_impl, static=(0, 6, 7))
+
+    def _worlds_defense_step(self, engine: FlatGossipEngine, n: int,
+                             horizon: int, pw, gammas, dk, carry, xs,
+                             tel=None):
+        """Batched twin of ``_defense_step``: the control loop vmaps over
+        the world axis (``dk`` a DefenseKnobs of (B,) arrays — every arm,
+        including 'no defense' lowered to the neutral knobs, shares this
+        one trace)."""
+        (partner, dt_nxt, is_grad, gscale, corrupt, src_slot,
+         ring_pos) = xs
+
+        def comm(args):
+            if tel is None:
+                bx, bxt, ring, key, ds = args
+            else:
+                bx, bxt, ring, key, ds, acc = args
+            if horizon:
+                xp = engine.partner_values_worlds(ring, bx, partner,
+                                                  src_slot)
+            else:
+                xp = jnp.take_along_axis(bx, partner[:, :, None], axis=1)
+            nrm = engine.delta_norms(bx, xp, corrupt, axes=2)
+            involved = partner != jnp.arange(n)[None, :]
+            mscale, quar, ds = jax.vmap(defense_comm)(dk, ds, partner,
+                                                      involved, nrm)
+            bx, bxt, rej = engine.channel_batch_worlds_scaled(
+                bx, bxt, xp, corrupt, mscale, dt_nxt, pw)
+            ds = jax.vmap(defense_absorb)(ds, rej, quar, involved)
+            z = jnp.zeros((partner.shape[0],), jnp.float32)
+            if tel is None:
+                return (bx, bxt, ring, key, ds), (z, z, z, z, z, z)
+            acc = self._tel_step(acc, involved, rej, nrm, batched=True)
+            return (bx, bxt, ring, key, ds, acc), (z,) * 10
+
+        def grad(args):
+            if tel is None:
+                bx, bxt, ring, key, ds = args
+            else:
+                bx, bxt, ring, key, ds, acc = args
+            bx, bxt, key, metrics = self._grad_worlds(engine, n, bx, bxt,
+                                                      key, gscale, gammas)
+            ds, (tau, rejn, quarn) = jax.vmap(defense_grad)(dk, ds)
+            if horizon:
+                ring = engine.ring_push_worlds(ring, bx, ring_pos)
+            bx, bxt = engine.mix_batch(bx, bxt, dt_nxt, pw[0])
+            if tel is None:
+                return (bx, bxt, ring, key, ds), metrics + (tau, rejn,
+                                                            quarn)
+            B = partner.shape[0]
+            return (bx, bxt, ring, key, ds, self._tel_zeros((B,))), \
+                metrics + (tau, rejn, quarn) + acc
+
+        return jax.lax.cond(is_grad, grad, comm, carry)
+
+    def _run_worlds_defense_impl(self, state: SimState, pw, gammas, dk,
+                                 stream_arrays, horizon: int, tel=None
+                                 ) -> tuple[SimState, SimTrace]:
+        (prologue, partners, dt_next, is_grad, grad_scale, grad_pos,
+         t_final, corrupt, src_slot, ring_pos) = stream_arrays
+        engine = FlatGossipEngine.for_pytree(state.x, self.params,
+                                             stacked=True, worlds=True,
+                                             backend=self.backend,
+                                             robust_clip=self.robust_clip,
+                                             robust_rule=self.robust_rule)
+        bx = engine.pack_worlds(state.x)
+        bxt = engine.pack_worlds(state.x_tilde)
+        bx, bxt = engine.mix_batch(bx, bxt, prologue, pw[0])
+        B, n = prologue.shape
+        ring = engine.ring_init_worlds(bx, horizon) if horizon else None
+        init = (bx, bxt, ring, state.key, defense_init(n, batch=B))
+        if tel is not None:
+            init = init + (self._tel_zeros((B,)),)
+        carry, ys = jax.lax.scan(
+            partial(self._worlds_defense_step, engine, n, horizon, pw,
+                    gammas, dk, tel=tel),
+            init,
+            (partners, dt_next, is_grad, grad_scale, corrupt, src_slot,
+             ring_pos))
+        bx, bxt, _, key = carry[:4]
+        loss, consensus, mean_norm, tau, rejn, quarn = ys[:6]
+        tcols = None if tel is None else \
+            tuple(c[grad_pos].T for c in ys[6:])
         final = SimState(engine.unpack_worlds(bx), engine.unpack_worlds(bxt),
                          t_final, key)
         return final, SimTrace(
             loss[grad_pos].T, consensus[grad_pos].T, mean_norm[grad_pos].T,
             DefenseTrace(tau[grad_pos].T, rejn[grad_pos].T,
-                         quarn[grad_pos].T))
+                         quarn[grad_pos].T),
+            telemetry=tcols)
 
     _run_worlds_defense_jit, _run_worlds_defense_dnt = _jit_pair(
-        _run_worlds_defense_impl, static=(0, 6))
+        _run_worlds_defense_impl, static=(0, 6, 7))
 
     # --- batched per-event reference flavor: the serial round body with
     # dynamic per-world params, vmapped over the world axis inside the
@@ -1179,7 +1400,7 @@ class Simulator:
 
     def _run_worlds_channel_reference_impl(self, state: SimState, pw,
                                            gammas, taus, sched_arrays,
-                                           horizon: int
+                                           horizon: int, tel=None
                                            ) -> tuple[SimState, SimTrace]:
         def per_world(x, xt, tl, ring, key, eta, alpha, alphat, gamma, tau,
                       partners, times, mask, src_slots, corrupts,
@@ -1187,7 +1408,10 @@ class Simulator:
             idx = jnp.arange(tl.shape[0])
 
             def comm_event(carry, event):
-                x, xt, tl = carry
+                if tel is None:
+                    x, xt, tl = carry
+                else:
+                    x, xt, tl, acc = carry
                 partner, time, msk, src_slot, corrupt = event
                 involved = (partner != idx) & msk
                 dt = jnp.where(involved, time - tl, 0.0)
@@ -1199,15 +1423,31 @@ class Simulator:
                 xp = treedef.unflatten([
                     self._partner_leaf(a, ra, partner, src_slot, horizon)
                     for a, ra in zip(flat_x, ring_leaves)])
+                if tel is not None:
+                    nrm = self._delta_norms_tree(x, xp, corrupt)
+                    acc = self._tel_step(acc, involved,
+                                         self._tel_rej(nrm, tau), nrm)
                 x, xt = self._channel_p2p_dyn(x, xt, xp, corrupt, alpha,
                                               alphat, tau)
-                return (x, xt, tl), None
+                if tel is None:
+                    return (x, xt, tl), None
+                return (x, xt, tl, acc), None
 
-            (x, xt, tl), _ = jax.lax.scan(
-                comm_event, (x, xt, tl),
+            inner = (x, xt, tl) if tel is None else \
+                (x, xt, tl, self._tel_zeros())
+            inner, _ = jax.lax.scan(
+                comm_event, inner,
                 (partners, times, mask, src_slots, corrupts))
+            if tel is None:
+                x, xt, tl = inner
+            else:
+                x, xt, tl, acc = inner
             x, xt, key, metrics = self._grad_world_ref(
                 x, xt, tl, key, eta, gamma, grad_times, grad_scale, alive)
+            if tel is not None:
+                metrics = {**metrics, "tel_applied": acc[0],
+                           "tel_rejected": acc[1], "tel_norm_sum": acc[2],
+                           "tel_norm_sq": acc[3]}
             if horizon:
                 ring = jax.tree.map(lambda ra, a: ra.at[ring_pos].set(a),
                                     ring, x)
@@ -1236,14 +1476,17 @@ class Simulator:
                                                     sched_arrays)
         return SimState(x, xt, tl, key), \
             SimTrace(metrics["loss"].T, metrics["consensus"].T,
-                     metrics["mean_param_norm"].T)
+                     metrics["mean_param_norm"].T,
+                     telemetry=None if tel is None else
+                     (metrics["tel_applied"].T, metrics["tel_rejected"].T,
+                      metrics["tel_norm_sum"].T, metrics["tel_norm_sq"].T))
 
     _run_worlds_channel_reference_jit, _run_worlds_channel_reference_dnt = \
-        _jit_pair(_run_worlds_channel_reference_impl, static=(0, 6))
+        _jit_pair(_run_worlds_channel_reference_impl, static=(0, 6, 7))
 
     def _run_worlds_defense_reference_impl(self, state: SimState, pw,
                                            gammas, dk, sched_arrays,
-                                           horizon: int
+                                           horizon: int, tel=None
                                            ) -> tuple[SimState, SimTrace]:
         def per_world(x, xt, tl, ring, key, ds, eta, alpha, alphat, gamma,
                       dkr, partners, times, mask, src_slots, corrupts,
@@ -1251,7 +1494,10 @@ class Simulator:
             idx = jnp.arange(tl.shape[0])
 
             def comm_event(carry, event):
-                x, xt, tl, ds = carry
+                if tel is None:
+                    x, xt, tl, ds = carry
+                else:
+                    x, xt, tl, ds, acc = carry
                 partner, time, msk, src_slot, corrupt = event
                 involved = (partner != idx) & msk
                 dt = jnp.where(involved, time - tl, 0.0)
@@ -1268,14 +1514,22 @@ class Simulator:
                                                 nrm)
                 x, xt = self._channel_p2p_scaled(x, xt, xp, corrupt,
                                                  mscale, alpha, alphat)
-                ds = defense_absorb(ds,
-                                    (mscale == 0.0).astype(jnp.float32),
-                                    quar, involved)
-                return (x, xt, tl, ds), None
+                rej = (mscale == 0.0).astype(jnp.float32)
+                ds = defense_absorb(ds, rej, quar, involved)
+                if tel is None:
+                    return (x, xt, tl, ds), None
+                acc = self._tel_step(acc, involved, rej, nrm)
+                return (x, xt, tl, ds, acc), None
 
-            (x, xt, tl, ds), _ = jax.lax.scan(
-                comm_event, (x, xt, tl, ds),
+            inner = (x, xt, tl, ds) if tel is None else \
+                (x, xt, tl, ds, self._tel_zeros())
+            inner, _ = jax.lax.scan(
+                comm_event, inner,
                 (partners, times, mask, src_slots, corrupts))
+            if tel is None:
+                x, xt, tl, ds = inner
+            else:
+                x, xt, tl, ds, acc = inner
             x, xt, key, metrics = self._grad_world_ref(
                 x, xt, tl, key, eta, gamma, grad_times, grad_scale, alive)
             ds, (tau, rejn, quarn) = defense_grad(dkr, ds)
@@ -1285,6 +1539,10 @@ class Simulator:
             tl = jnp.where(alive, grad_times, tl)
             metrics = {**metrics, "tau": tau, "rejections": rejn,
                        "quarantined": quarn}
+            if tel is not None:
+                metrics = {**metrics, "tel_applied": acc[0],
+                           "tel_rejected": acc[1], "tel_norm_sum": acc[2],
+                           "tel_norm_sq": acc[3]}
             return (x, xt, tl, ring, key, ds), metrics
 
         ring = jax.tree.map(
@@ -1314,10 +1572,13 @@ class Simulator:
                      metrics["mean_param_norm"].T,
                      DefenseTrace(metrics["tau"].T,
                                   metrics["rejections"].T,
-                                  metrics["quarantined"].T))
+                                  metrics["quarantined"].T),
+                     telemetry=None if tel is None else
+                     (metrics["tel_applied"].T, metrics["tel_rejected"].T,
+                      metrics["tel_norm_sum"].T, metrics["tel_norm_sq"].T))
 
     _run_worlds_defense_reference_jit, _run_worlds_defense_reference_dnt = \
-        _jit_pair(_run_worlds_defense_reference_impl, static=(0, 6))
+        _jit_pair(_run_worlds_defense_reference_impl, static=(0, 6, 7))
 
     # --- host-side batch compilation + the public entry point
 
@@ -1399,7 +1660,8 @@ class Simulator:
 
     def run_worlds(self, states, scheds, *, params=None, gammas=None,
                    robust_clips=None, defenses=None, worlds=None,
-                   engine: bool = True) -> tuple[SimState, SimTrace]:
+                   engine: bool = True, telemetry=None
+                   ) -> tuple[SimState, SimTrace]:
         """Replay B independent worlds in ONE compiled scan.
 
         states — a list of per-world SimStates (stacked here via
@@ -1430,6 +1692,11 @@ class Simulator:
           flavor; inactive arms lower to the neutral knobs, which
           reproduce their static trim (or plain-channel) arithmetic
           bitwise — none-vs-static-vs-adaptive is still ONE trace.
+        telemetry — optional ``telemetry.Telemetry`` spec (or declared on
+          the ``worlds``; all declaring worlds must share ONE spec — it
+          is a static jit argument).  Adds per-round flight-recorder
+          columns as ``trace.telemetry`` ((B, rounds) arrays) without
+          changing any replayed number; ``None`` is a bitwise no-op.
 
         Returns the world-batched final state and a SimTrace whose arrays
         are (B, rounds) — row b equals the serial replay of world b.
@@ -1437,6 +1704,39 @@ class Simulator:
         aggregation select the channel flavor; ``engine=False`` (or a
         layout-rejected pytree) the per-event reference flavor.
         """
+        twin, args, tel, cols, rb = self._worlds_plan(
+            states, scheds, params=params, gammas=gammas,
+            robust_clips=robust_clips, defenses=defenses, worlds=worlds,
+            engine=engine, telemetry=telemetry)
+        fn = getattr(type(self), twin + ("_dnt" if self.donate else "_jit"))
+        out = fn(*args)
+        if tel is None:
+            return out
+        final, tr = out
+        return final, tr._replace(
+            telemetry=finalize_trace(tel, tr.telemetry, cols, rb))
+
+    def worlds_executable(self, states, scheds, **kw):
+        """The exact (jitted twin, argument tuple) a ``run_worlds`` call
+        would dispatch — plain (non-donating) flavor, host-side batching
+        already done.  Callers AOT-lower the grid's ONE executable
+        (``fn.lower(*args).compile()``) for cost/roofline analysis
+        without paying a replay, and without tracing through the host
+        prep (``jax.jit(lambda: sim.run_worlds(...))`` would trip on
+        ``batch_states``'s host numpy).  ``kw`` mirrors ``run_worlds``'s
+        keywords."""
+        twin, args, _, _, _ = self._worlds_plan(states, scheds, **kw)
+        return getattr(type(self), twin + "_jit"), args
+
+    def _worlds_plan(self, states, scheds, *, params=None, gammas=None,
+                     robust_clips=None, defenses=None, worlds=None,
+                     engine: bool = True, telemetry=None):
+        """Shared host-side prep of a worlds replay: validate, derive
+        per-world knobs, build the batched device arrays, pick the scan
+        flavor.  Returns ``(twin_name, args, tel, cols, rb)`` where
+        ``twin_name + '_jit'/'_dnt'`` names the class-level jit twin and
+        ``args`` is its FULL argument tuple (``self`` included — the
+        twins hang unbound on the class with ``self`` static)."""
         scheds = list(scheds)
         if not isinstance(states, SimState):
             states = self.batch_states(states)
@@ -1456,6 +1756,16 @@ class Simulator:
             if defenses is None and any(w.defense is not None
                                         for w in wlist):
                 defenses = [w.defense for w in wlist]
+            if telemetry is None:
+                tspecs = {w.telemetry for w in wlist
+                          if getattr(w, "telemetry", None) is not None}
+                if len(tspecs) > 1:
+                    raise ValueError(
+                        "worlds declare multiple distinct Telemetry specs; "
+                        "a batch shares ONE static spec (it is a jit "
+                        "static argument)")
+                if tspecs:
+                    telemetry = next(iter(tspecs))
         plist = list(params) if params is not None else [self.params] * B
         if len(plist) != B:
             raise ValueError(f"params must have one entry per world "
@@ -1487,12 +1797,14 @@ class Simulator:
             raise ValueError("the self-healing defense needs "
                              "robust_rule='trim' (its accept/reject loop "
                              f"is binary), got {self.robust_rule!r}")
+        tel = telemetry
         if engine:
             try:
                 FlatLayout.from_pytree(states.x, stacked=True, worlds=True)
             except TypeError:
                 engine = False
         channel = (active or any_clip or self.robust_clip is not None
+                   or tel is not None
                    or any(STALE_KEY in s.extras_dict()
                           or CORRUPT_KEY in s.extras_dict()
                           for s in scheds))
@@ -1500,36 +1812,42 @@ class Simulator:
         if any_clip and not active:
             taus = jnp.asarray([float("inf") if t is None else t
                                 for t in taus_list], jnp.float32)
+        # exact schedule columns + row bytes before dispatch (donation
+        # consumes the state buffers)
+        rb = self._row_bytes(states, worlds=True) \
+            if tel is not None and tel.bytes_moved else 0
+        cols = batch_schedule_columns(tel, scheds) if tel is not None \
+            else None
         if engine:
             if active:
                 arrays, horizon = self.worlds_channel_arrays(states, scheds)
                 dk = knobs_worlds(dlist, taus_list)
-                fn = self._run_worlds_defense_dnt if self.donate \
-                    else self._run_worlds_defense_jit
-                return fn(states, pw, gw, dk, arrays, horizon)
+                return ("_run_worlds_defense",
+                        (self, states, pw, gw, dk, arrays, horizon, tel),
+                        tel, cols, rb)
             if channel:
                 arrays, horizon = self.worlds_channel_arrays(states, scheds)
-                fn = self._run_worlds_channel_dnt if self.donate \
-                    else self._run_worlds_channel_jit
-                return fn(states, pw, gw, taus, arrays, horizon)
-            fn = self._run_worlds_dnt if self.donate \
-                else self._run_worlds_jit
-            return fn(states, pw, gw,
-                      self.worlds_coalesced_arrays(states, scheds))
+                return ("_run_worlds_channel",
+                        (self, states, pw, gw, taus, arrays, horizon, tel),
+                        tel, cols, rb)
+            return ("_run_worlds",
+                    (self, states, pw, gw,
+                     self.worlds_coalesced_arrays(states, scheds)),
+                    None, None, 0)
         if active:
             arrays, horizon = self.worlds_channel_reference_arrays(scheds)
             dk = knobs_worlds(dlist, taus_list)
-            fn = self._run_worlds_defense_reference_dnt if self.donate \
-                else self._run_worlds_defense_reference_jit
-            return fn(states, pw, gw, dk, arrays, horizon)
+            return ("_run_worlds_defense_reference",
+                    (self, states, pw, gw, dk, arrays, horizon, tel),
+                    tel, cols, rb)
         if channel:
             arrays, horizon = self.worlds_channel_reference_arrays(scheds)
-            fn = self._run_worlds_channel_reference_dnt if self.donate \
-                else self._run_worlds_channel_reference_jit
-            return fn(states, pw, gw, taus, arrays, horizon)
-        fn = self._run_worlds_reference_dnt if self.donate \
-            else self._run_worlds_reference_jit
-        return fn(states, pw, gw, self.worlds_reference_arrays(scheds))
+            return ("_run_worlds_channel_reference",
+                    (self, states, pw, gw, taus, arrays, horizon, tel),
+                    tel, cols, rb)
+        return ("_run_worlds_reference",
+                (self, states, pw, gw, self.worlds_reference_arrays(scheds)),
+                None, None, 0)
 
 
 # --------------------------------------------------------------- AR-SGD ref

@@ -1,0 +1,254 @@
+"""Compiled per-round telemetry: the flight recorder's in-scan side
+(DESIGN.md §15).
+
+A ``Telemetry(...)`` spec on ``World``/``Simulator.run_schedule`` lowers to
+per-round metric COLUMNS riding the scan carry exactly the way
+``DefenseTrace`` does — metrics are data on the carry, never host
+callbacks, so a telemetry-enabled replay stays one ``lax.scan`` / one
+dispatch and a ``WorldSweep`` grid keeps its one-trace invariant (the
+spec is a static jit argument shared by every world of a batch).
+
+Two kinds of columns, split by where the information lives:
+
+  * **runtime columns** (only knowable inside the scan — they depend on
+    the evolving state): per-round counts of APPLIED vs REJECTED directed
+    reads and the first two moments of the admitted channel-delta norms.
+    These accumulate across a round's comm steps in a tiny f32 carry
+    tuple (scalars serially, (B,) world-batched) and are emitted + reset
+    at each gradient tick, exactly like the defense counters.
+  * **schedule columns** (pure schedule data — recomputing them in-scan
+    would waste carry width): scheduled/dropped read counts, the
+    staleness-bucket histogram, per-worker participation.  These are
+    derived host-side by :func:`schedule_columns` from the SAME arrays the
+    scan consumes, so they are exact, and cost nothing on device.
+
+Bytes moved are runtime x layout: each applied directed read transfers
+one flat row — ``row_bytes`` from the ``FlatLayout`` dtype widths — so
+``bytes_moved = applied * row_bytes`` (attached host-side after the
+replay returns).
+
+``telemetry=None`` is a BITWISE no-op: the spec is a static argument, so
+the ``None`` trace contains exactly the pre-telemetry jaxpr — pinned in
+tests/test_telemetry.py against both backends and both replay flavors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from .channel import CORRUPT_KEY, DROP_KEY, STALE_KEY
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Declarative, serializable per-round telemetry spec.
+
+    staleness_buckets — upper edges (inclusive) of the staleness
+      histogram; reads bucket as [fresh, <=b1, <=b2, ..., overflow].
+    norm_moments — record sum and sum-of-squares of admitted delta
+      norms per round (the closed-loop controller's input signal).
+    participation — per-worker directed-read counts per round.
+    bytes_moved — applied reads x flat-row bytes per round.
+
+    Hashable (tuple fields only): the spec doubles as a static jit
+    argument, so every distinct spec — not every world — costs a trace.
+    """
+
+    staleness_buckets: tuple[int, ...] = (1, 2, 4, 8)
+    norm_moments: bool = True
+    participation: bool = True
+    bytes_moved: bool = True
+
+    def __post_init__(self):
+        try:
+            edges = tuple(int(b) for b in self.staleness_buckets)
+        except (TypeError, ValueError):
+            raise ValueError("Telemetry.staleness_buckets must be ints, "
+                             f"got {self.staleness_buckets!r}") from None
+        if any(b <= 0 for b in edges) or list(edges) != sorted(set(edges)):
+            raise ValueError("Telemetry.staleness_buckets must be strictly "
+                             f"increasing positive ints, got {edges}")
+        object.__setattr__(self, "staleness_buckets", edges)
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"staleness_buckets": list(self.staleness_buckets),
+                "norm_moments": self.norm_moments,
+                "participation": self.participation,
+                "bytes_moved": self.bytes_moved}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Telemetry":
+        return Telemetry(
+            staleness_buckets=tuple(d.get("staleness_buckets", (1, 2, 4, 8))),
+            norm_moments=d.get("norm_moments", True),
+            participation=d.get("participation", True),
+            bytes_moved=d.get("bytes_moved", True))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "Telemetry":
+        return Telemetry.from_dict(json.loads(s))
+
+
+class TelemetryTrace(NamedTuple):
+    """Per-round telemetry columns of one replay.
+
+    Runtime columns (jax arrays, (R,) serial / (B, R) world-batched):
+    ``applied``, ``rejected``, ``norm_sum``, ``norm_sq_sum``,
+    ``bytes_moved``.  Schedule columns (numpy, exact): ``scheduled``,
+    ``dropped`` (same shapes) and ``stale_hist`` ((R, nb) /
+    (B, R, nb)), ``participation`` ((R, n) / (B, R, n)).  ``row_bytes``
+    is the flat-row transfer size the bytes column used.
+    """
+
+    applied: Any            # admitted directed reads per round
+    rejected: Any           # robust/defense-rejected directed reads
+    norm_sum: Any           # sum of admitted delta norms (None if off)
+    norm_sq_sum: Any        # sum of squared admitted delta norms
+    scheduled: Any          # directed reads the schedule asked for
+    dropped: Any            # reads erased by channel drops
+    stale_hist: Any         # staleness histogram (None if no buckets)
+    participation: Any      # (.., n) per-worker read counts (None if off)
+    bytes_moved: Any        # applied * row_bytes (None if off)
+    row_bytes: int = 0
+
+
+def row_bytes_of(layout=None, tree=None) -> int:
+    """Bytes one directed partner read moves: the REAL (unpadded) flat
+    row width times the buffer dtype — from a ``FlatLayout`` when the
+    engine path built one, else summed over the pytree's leaves."""
+    if layout is not None:
+        return int(layout.d_real) * int(np.dtype(layout.buf_dtype).itemsize)
+    if tree is not None:
+        import jax
+
+        total = 0
+        for leaf in jax.tree.leaves(tree):
+            # leaves are (n, ...) worker-stacked: one row is the per-worker
+            # slice
+            per_row = int(np.prod(leaf.shape[1:])) if leaf.ndim > 1 else 1
+            total += per_row * int(np.dtype(leaf.dtype).itemsize)
+        return total
+    return 0
+
+
+def stale_bucket_edges(tel: Telemetry) -> np.ndarray:
+    return np.asarray(tel.staleness_buckets, np.int64)
+
+
+def _involved(partners: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """(R, K, n) directed-read involvement from schedule arrays."""
+    n = partners.shape[-1]
+    return (partners != np.arange(n)) & mask[..., None]
+
+
+def schedule_columns(tel: Telemetry, sched) -> dict:
+    """Host-side exact columns from one compiled ``events.Schedule``.
+
+    Returns numpy arrays keyed ``scheduled`` (R,), ``dropped`` (R,),
+    ``stale_hist`` (R, len(buckets)+2), ``participation`` (R, n) —
+    the latter two ``None`` when the spec turns them off."""
+    partners = np.asarray(sched.partners)
+    mask = np.asarray(sched.event_mask)
+    R, K, n = partners.shape
+    inv = _involved(partners, mask)
+    extras = sched.extras_dict()
+
+    drop = extras.get(DROP_KEY)
+    dropped = (np.asarray(drop).astype(bool) & mask[..., None]) \
+        .reshape(R, -1).sum(axis=1).astype(np.int64) \
+        if drop is not None else np.zeros(R, np.int64)
+    # drops rewrite the partner involution to identity at compile time
+    # (channel.py), so ``inv`` counts only SURVIVING reads — add the
+    # erased endpoints back so ``scheduled`` means "asked for" and the
+    # budget applied + rejected + dropped == scheduled balances
+    scheduled = inv.reshape(R, -1).sum(axis=1).astype(np.int64) + dropped
+
+    stale_hist = None
+    if tel.staleness_buckets:
+        stale = extras.get(STALE_KEY)
+        s = np.asarray(stale, np.int64) if stale is not None \
+            else np.zeros((R, K, n), np.int64)
+        edges = stale_bucket_edges(tel)
+        nb = len(edges) + 2
+        # bucket 0 = fresh reads, buckets 1..k = s <= edge_k, last = beyond
+        bucket = np.searchsorted(edges, np.where(s > 0, s, 0),
+                                 side="left") + 1
+        bucket = np.where(s > 0, bucket, 0)
+        stale_hist = np.zeros((R, nb), np.int64)
+        for b in range(nb):
+            stale_hist[:, b] = (inv & (bucket == b)).reshape(R, -1) \
+                .sum(axis=1)
+
+    participation = inv.sum(axis=1).astype(np.int64) \
+        if tel.participation else None
+    return {"scheduled": scheduled, "dropped": dropped,
+            "stale_hist": stale_hist, "participation": participation}
+
+
+def batch_schedule_columns(tel: Telemetry, scheds) -> dict:
+    """Stack :func:`schedule_columns` over B worlds -> (B, R, ...)."""
+    cols = [schedule_columns(tel, s) for s in scheds]
+
+    def stack(key):
+        vals = [c[key] for c in cols]
+        return None if vals[0] is None else np.stack(vals)
+
+    return {k: stack(k) for k in ("scheduled", "dropped", "stale_hist",
+                                  "participation")}
+
+
+def finalize_trace(tel: Telemetry, runtime, sched_cols: dict,
+                   row_bytes: int) -> TelemetryTrace:
+    """Assemble the public :class:`TelemetryTrace` from the scan's raw
+    runtime tuple ``(applied, rejected, norm_sum, norm_sq_sum)`` and the
+    host-side schedule columns."""
+    applied, rejected, norm_sum, norm_sq = runtime
+    if not tel.norm_moments:
+        norm_sum = norm_sq = None
+    bytes_moved = applied * float(row_bytes) if tel.bytes_moved else None
+    return TelemetryTrace(
+        applied=applied, rejected=rejected,
+        norm_sum=norm_sum, norm_sq_sum=norm_sq,
+        scheduled=sched_cols["scheduled"], dropped=sched_cols["dropped"],
+        stale_hist=sched_cols["stale_hist"],
+        participation=sched_cols["participation"],
+        bytes_moved=bytes_moved,
+        row_bytes=int(row_bytes) if tel.bytes_moved else 0)
+
+
+def trace_summary(tt: TelemetryTrace) -> dict:
+    """JSON-able digest of a telemetry trace (benchmark artifacts)."""
+    def tot(a):
+        return None if a is None else float(np.asarray(a).sum())
+
+    applied = np.asarray(tt.applied, np.float64)
+    out = {
+        "applied_total": float(applied.sum()),
+        "rejected_total": tot(tt.rejected),
+        "scheduled_total": tot(tt.scheduled),
+        "dropped_total": tot(tt.dropped),
+        "row_bytes": tt.row_bytes,
+        "bytes_moved_total": tot(tt.bytes_moved),
+    }
+    if tt.norm_sum is not None:
+        # a diverged world (e.g. a scale-attack arm) pushes its delta
+        # norms to inf/nan; digest over the finite rounds only so one
+        # blown-up arm doesn't null the whole grid's moment
+        ns = np.asarray(tt.norm_sum, np.float64)
+        fin = np.isfinite(ns)
+        napp = float(applied[fin].sum())
+        out["admitted_norm_mean"] = float(ns[fin].sum()) / max(napp, 1.0)
+        if not fin.all():
+            out["norm_finite_frac"] = float(fin.mean())
+    if tt.stale_hist is not None:
+        h = np.asarray(tt.stale_hist)
+        out["stale_hist_total"] = [int(v) for v in
+                                   h.reshape(-1, h.shape[-1]).sum(axis=0)]
+    return out

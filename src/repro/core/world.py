@@ -52,6 +52,7 @@ from .a2cid2 import Algorithm
 from .channel import ChannelModel
 from .defense import AdaptiveDefense
 from .graphs import Graph, TopologyPhase, TopologySchedule
+from .telemetry import Telemetry
 
 # rng-stream tag for churn draws — independent of the schedule's main stream
 # (events.py uses 0x48455 for straggler thinning)
@@ -562,6 +563,10 @@ class World:
     # PR 7 compile); a ServeLoad attaches per-round request-arrival counts
     # as ``extras[SERVE_ARRIVE_KEY]`` for the gossip-serving fleet driver
     serve: "ServeLoad | None" = None
+    # flight recorder (DESIGN.md §15): None = no telemetry (bitwise PR 8
+    # replay); a telemetry.Telemetry spec makes the replay emit per-round
+    # metric columns as ``trace.telemetry`` without changing any number
+    telemetry: "Telemetry | None" = None
 
     def __post_init__(self):
         if not isinstance(self.topology, (Graph, TopologySchedule)):
@@ -653,6 +658,10 @@ class World:
         if self.serve is not None and not isinstance(self.serve, ServeLoad):
             raise ValueError("serve must be a ServeLoad, "
                              f"got {type(self.serve).__name__}")
+        if self.telemetry is not None and not isinstance(self.telemetry,
+                                                         Telemetry):
+            raise ValueError("telemetry must be a telemetry.Telemetry, "
+                             f"got {type(self.telemetry).__name__}")
 
     # ------------------------------------------------------------ structure
     @property
@@ -886,7 +895,9 @@ class World:
                 "algorithm": None if self.algorithm is None
                 else self.algorithm.to_dict(),
                 "serve": None if self.serve is None
-                else self.serve.to_dict()}
+                else self.serve.to_dict(),
+                "telemetry": None if self.telemetry is None
+                else self.telemetry.to_dict()}
 
     @staticmethod
     def from_dict(d: dict) -> "World":
@@ -905,7 +916,9 @@ class World:
                      algorithm=None if d.get("algorithm") is None
                      else Algorithm.from_dict(d["algorithm"]),
                      serve=None if d.get("serve") is None
-                     else ServeLoad.from_dict(d["serve"]))
+                     else ServeLoad.from_dict(d["serve"]),
+                     telemetry=None if d.get("telemetry") is None
+                     else Telemetry.from_dict(d["telemetry"]))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

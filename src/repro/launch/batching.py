@@ -38,6 +38,8 @@ class Request:
     # serving-trace bookkeeping (filled by the fleet driver)
     arrive_round: int = 0
     done_round: int = -1
+    admit_round: int = -1      # round a slot last accepted this request
+    first_token_round: int = -1  # round the first surviving token landed
     restarts: int = 0          # times re-admitted after a churn kill
 
 
@@ -86,23 +88,26 @@ class SlotScheduler:
         return bool(self.queue) or any(s.req is not None for s in self.slots)
 
     # ------------------------------------------------------------ stepping
-    def _admit(self) -> None:
+    def _admit(self, round_idx: int = 0) -> None:
         for slot in self.slots:
             if slot.req is None and self.queue:
                 slot.req = self.queue.popleft()
+                slot.req.admit_round = round_idx
                 slot.pos = 0
                 slot.prompt_cursor = 0
                 slot.generated = 0
 
-    def prepare(self) -> tuple[list[int], list[int], list[bool]]:
+    def prepare(self, round_idx: int = 0
+                ) -> tuple[list[int], list[int], list[bool]]:
         """Admit waiting requests, then stage one token per active slot.
 
         Returns (tokens, positions, active) as length-``max_batch`` lists:
         slot i feeds ``tokens[i]`` at cache position ``positions[i]``.
         A slot still streaming its prompt feeds the next prompt token; a
-        generating slot feeds its last output token.
+        generating slot feeds its last output token.  ``round_idx`` stamps
+        ``admit_round`` on newly-admitted requests (TTFT bookkeeping).
         """
-        self._admit()
+        self._admit(round_idx)
         toks, pos, act = [], [], []
         for s in self.slots:
             r = s.req
@@ -137,6 +142,8 @@ class SlotScheduler:
                 if s.prompt_cursor == len(r.prompt) - 1:
                     s.prompt_cursor += 1      # prompt consumed this step
                 r.out.append(int(next_tokens[i]))
+                if len(r.out) == 1:
+                    r.first_token_round = round_idx
                 s.generated += 1
             if s.generated >= r.max_new or s.pos >= self.max_len - 1:
                 r.done = True
@@ -157,6 +164,10 @@ class SlotScheduler:
             if s.req is not None:
                 s.req.out = []
                 s.req.restarts += 1
+                # TTFT restarts with the request: the first token died
+                # with the replica's KV rows
+                s.req.admit_round = -1
+                s.req.first_token_round = -1
                 out.append(s.req)
                 s.req = None
         out.extend(self.queue)

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from contextlib import nullcontext
 from functools import partial
 from typing import Callable
 
@@ -39,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.a2cid2 import consensus_distance
 from ..core.flatbuf import FlatLayout
 from ..core.simulator import Simulator
 from ..core.world import World
@@ -110,7 +112,12 @@ class FleetReport:
     lost: int                        # never completed (drain cap / no fleet)
     restarted: int                   # churn re-admissions (degradation)
     latencies: np.ndarray            # (C,) decode-round latency per request
-    consensus: np.ndarray            # (R,) fleet consensus distance per round
+    ttft: np.ndarray                 # (C,) rounds from arrival to 1st token
+    ttft_wait: np.ndarray            # (C,) rounds waiting for a slot
+    ttft_decode: np.ndarray          # (C,) rounds streaming the prompt
+    consensus: np.ndarray            # (R + drain,) consensus per round —
+    #   gossip stops at round R, so the drain tail is constant by
+    #   construction (the bank is frozen while queues empty)
     rounds: int                      # scheduled (gossip-active) rounds
     drain_rounds: int                # extra decode-only rounds to drain
     tokens_generated: int
@@ -121,6 +128,10 @@ class FleetReport:
     def percentile(self, p: float) -> float:
         return float(np.percentile(self.latencies, p)) \
             if self.latencies.size else float("nan")
+
+    def ttft_percentile(self, p: float) -> float:
+        return float(np.percentile(self.ttft, p)) \
+            if self.ttft.size else float("nan")
 
     @property
     def tokens_per_round(self) -> float:
@@ -149,6 +160,15 @@ class FleetReport:
             "latency_p99": self.percentile(99),
             "latency_hist": {"counts": [int(c) for c in hist],
                              "edges": [float(e) for e in edges]},
+            "ttft_mean": float(self.ttft.mean()) if self.ttft.size
+            else None,
+            "ttft_p50": self.ttft_percentile(50),
+            "ttft_p95": self.ttft_percentile(95),
+            "ttft_p99": self.ttft_percentile(99),
+            "ttft_wait_mean": float(self.ttft_wait.mean())
+            if self.ttft_wait.size else None,
+            "ttft_decode_mean": float(self.ttft_decode.mean())
+            if self.ttft_decode.size else None,
             "stall_skips": self.stall_skips,
             "rounds": self.rounds,
             "drain_rounds": self.drain_rounds,
@@ -244,7 +264,18 @@ class GossipFleet:
             scheds[w].submit(req)
 
     def run(self, rounds: int, seed: int = 0,
-            max_drain_rounds: int = 2000) -> FleetReport:
+            max_drain_rounds: int = 2000, tracer=None,
+            metrics=None) -> FleetReport:
+        """Serve the world's arrival trace for ``rounds`` gossip rounds.
+
+        tracer — optional ``analysis.SpanTracer``: emits ``fleet.round``
+          and ``fleet.decode`` spans, queue-depth / slot-occupancy /
+          consensus counter tracks, ``churn.kill`` instants, and one
+          ``fleet.drain`` span (DESIGN.md §15).
+        metrics — optional ``analysis.MetricsRegistry``: request/token/
+          restart counters plus TTFT and latency histograms, filled once
+          at the end of the run.
+        """
         world, model = self.world, self.model
         sched = world.compile(rounds, seed)
         R = sched.rounds
@@ -297,20 +328,26 @@ class GossipFleet:
             for w in range(self.n):
                 if not decode_mask[w]:
                     continue
-                tw, pw, aw = scheds[w].prepare()
+                tw, pw, aw = scheds[w].prepare(r)
                 toks[w], pos[w], act[w] = tw, pw, aw
             if not act.any():
                 return False
-            nxt, caches = self._decode_step(
-                carry[0], caches, jnp.asarray(toks)[:, :, None],
-                jnp.asarray(pos), jnp.asarray(act))
-            nxt = np.asarray(jax.device_get(nxt))
+            with (tracer.span("fleet.decode", process="fleet",
+                              lane="decode",
+                              args={"round": r,
+                                    "active_slots": int(act.sum())})
+                  if tracer is not None else nullcontext()):
+                nxt, caches = self._decode_step(
+                    carry[0], caches, jnp.asarray(toks)[:, :, None],
+                    jnp.asarray(pos), jnp.asarray(act))
+                nxt = np.asarray(jax.device_get(nxt))
             for w in range(self.n):
                 if decode_mask[w]:
                     completed.extend(scheds[w].absorb(nxt[w], r))
             return True
 
         for r in range(R):
+            t_round = tracer.now_us() if tracer is not None else 0.0
             al = alive[r]
             # churn: evict the newly-dead replicas' work to survivors
             evicted: list[Request] = []
@@ -318,6 +355,10 @@ class GossipFleet:
                 if prev_alive[w] and not al[w]:
                     evicted.extend(scheds[w].evict_all())
                     debt[w] = 0.0
+                    if tracer is not None:
+                        tracer.instant("churn.kill", process="fleet",
+                                       lane="churn",
+                                       args={"worker": w, "round": r})
             # arrivals of round r, then re-admissions (and anything parked
             # while the whole fleet was down)
             arrivals = []
@@ -329,8 +370,8 @@ class GossipFleet:
             self._route(scheds, al, arrivals + evicted + parked, unrouted)
 
             # gossip events + drift tick of round r on the flat bank
-            carry, metrics = round_fn(carry, tuple(a[r] for a in arrays))
-            consensus.append(metrics["consensus"])
+            carry, mets = round_fn(carry, tuple(a[r] for a in arrays))
+            consensus.append(mets["consensus"])
 
             # decode: alive replicas that aren't paying communication debt
             debt[al] += self.stall_per_event * events[r][al]
@@ -340,11 +381,30 @@ class GossipFleet:
             stall_skips += int(stalled.sum())
             decode_round(decode_mask, r)
             prev_alive = al
+            if tracer is not None:
+                tracer.complete(
+                    "fleet.round", t_round, tracer.now_us() - t_round,
+                    process="fleet", lane="rounds",
+                    args={"round": r, "alive": int(al.sum()),
+                          "stalled": int(stalled.sum())})
+                tracer.counter(
+                    "fleet.queue",
+                    {"queue_depth": sum(len(scheds[w].queue)
+                                        for w in range(self.n))
+                     + len(unrouted),
+                     "slot_occupancy": sum(
+                         s.req is not None for w in range(self.n)
+                         for s in scheds[w].slots)},
+                    process="fleet")
+                tracer.counter("fleet.consensus",
+                               {"consensus": float(mets["consensus"])},
+                               process="fleet")
 
         # drain: gossip stopped, decode-only rounds until every queue and
         # slot is empty (aliveness frozen at the last scheduled round)
         drain = 0
         al = alive[-1] if R else np.ones(self.n, bool)
+        t_drain = tracer.now_us() if tracer is not None else 0.0
         while drain < max_drain_rounds:
             if not unrouted and not any(
                     scheds[w].pending() for w in range(self.n) if al[w]):
@@ -356,16 +416,59 @@ class GossipFleet:
             if not decode_round(al, R + drain) and not unrouted:
                 break
             drain += 1
+        if tracer is not None:
+            tracer.complete("fleet.drain", t_drain,
+                            tracer.now_us() - t_drain, process="fleet",
+                            lane="rounds", args={"drain_rounds": drain})
+        # the bank is frozen once gossip stops, so the drain tail of the
+        # consensus trace is one value repeated — computed, not assumed
+        if drain:
+            consensus.extend([consensus_distance(carry[0])] * drain)
 
         wall = time.time() - t0
         lost = len(requests) - len(completed)
         restarted = sum(q.restarts for q in requests)
         lat = np.asarray([q.done_round - q.arrive_round + 1
                           for q in completed], np.float64)
+        ttft = np.asarray([q.first_token_round - q.arrive_round + 1
+                           for q in completed], np.float64)
+        ttft_wait = np.asarray([q.admit_round - q.arrive_round
+                                for q in completed], np.float64)
+        ttft_decode = np.asarray([q.first_token_round - q.admit_round + 1
+                                  for q in completed], np.float64)
+        tokens = sum(len(q.out) for q in completed)
+        if metrics is not None:
+            metrics.counter("fleet_requests_total",
+                            "requests in the arrival trace"
+                            ).inc(len(requests))
+            metrics.counter("fleet_completed_total",
+                            "requests served to completion"
+                            ).inc(len(completed))
+            metrics.counter("fleet_restarts_total",
+                            "churn re-admissions").inc(restarted)
+            metrics.counter("fleet_tokens_total",
+                            "tokens generated").inc(tokens)
+            metrics.counter("fleet_stall_skips_total",
+                            "decode rounds skipped to pay comm debt"
+                            ).inc(stall_skips)
+            metrics.gauge("fleet_drain_rounds",
+                          "decode-only rounds after the schedule"
+                          ).set(drain)
+            h = metrics.histogram(
+                "fleet_ttft_rounds", "rounds from arrival to first token",
+                buckets=(1, 2, 4, 8, 16, 32, 64))
+            for v in ttft:
+                h.observe(v)
+            h = metrics.histogram(
+                "fleet_latency_rounds", "rounds from arrival to last token",
+                buckets=(2, 4, 8, 16, 32, 64, 128))
+            for v in lat:
+                h.observe(v)
         return FleetReport(
             requests_total=len(requests), completed=completed, lost=lost,
-            restarted=restarted, latencies=lat,
+            restarted=restarted, latencies=lat, ttft=ttft,
+            ttft_wait=ttft_wait, ttft_decode=ttft_decode,
             consensus=np.asarray(jax.device_get(consensus), np.float64),
             rounds=R, drain_rounds=drain,
-            tokens_generated=sum(len(q.out) for q in completed),
+            tokens_generated=tokens,
             stall_skips=stall_skips, wall_seconds=wall, final_bank=carry[0])

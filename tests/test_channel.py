@@ -30,7 +30,7 @@ from repro.core import (ByzantineEdges, ChannelModel, DelayProcess,
                         WorkerModel, World, coalesce_schedule,
                         coalesced_stream, make_schedule, params_from_graph,
                         ring_graph)
-from repro.core.channel import CORRUPT_KEY, STALE_KEY
+from repro.core.channel import CORRUPT_KEY, DROP_KEY, STALE_KEY
 from repro.kernels.a2cid2_mixing.kernel import channel_gossip_stacked
 from repro.kernels.a2cid2_mixing.ref import (channel_gossip_stacked_ref,
                                              channel_p2p_mixing_ref,
@@ -304,7 +304,7 @@ def test_engine_matches_reference_on_channel_world(accelerated, backend):
     g, sim, st = _sim(n, d, accelerated=accelerated, backend=backend)
     w = World(topology=g, comms_per_grad=1.5, channel=_hostile_channel(g))
     sched = w.compile(rounds, seed=11)
-    assert set(sched.extras_dict()) == {STALE_KEY, CORRUPT_KEY}
+    assert set(sched.extras_dict()) == {STALE_KEY, CORRUPT_KEY, DROP_KEY}
     fin_ref, tr_ref = sim.run_schedule(st, sched, engine=False)
     fin_eng, tr_eng = sim.run_schedule(st, sched, engine=True)
     np.testing.assert_allclose(fin_eng.x, fin_ref.x, atol=1e-5, rtol=1e-5)

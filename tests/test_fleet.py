@@ -11,6 +11,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.nano_lm import train_bench
 from repro.core import (Algorithm, ChannelModel, DelayProcess, PhaseSwitch,
@@ -46,8 +47,15 @@ def test_fleet_bank_is_the_channel_replay_bitwise():
                      t_last=jnp.zeros((4,)), key=jax.random.PRNGKey(3))
     out, trace = fleet.sim.run_schedule(state, sched, engine=False)
     assert np.array_equal(np.asarray(rep.final_bank), np.asarray(out.x))
-    assert np.array_equal(rep.consensus,
+    # consensus keeps recording through the drain phase: the scheduled
+    # prefix is the replay's trace bitwise, the drain tail is the frozen
+    # bank's (constant) consensus
+    assert rep.consensus.size == rep.rounds + rep.drain_rounds
+    assert np.array_equal(rep.consensus[:rep.rounds],
                           np.asarray(trace.consensus, np.float64))
+    if rep.drain_rounds:
+        tail = rep.consensus[rep.rounds:]
+        assert np.all(tail == tail[0])
 
 
 def test_churn_kill_readmits_without_loss():
@@ -126,6 +134,41 @@ def test_whole_fleet_dead_reports_loss_without_drain_spin():
     assert rep.requests_total > 0
     assert rep.lost > 0           # honest accounting, not silent hang
     assert rep.drain_rounds == 0  # no no-op spin
+
+
+def test_fleet_ttft_breakdown_sums_and_bounds():
+    """Per-request TTFT splits exactly into admission wait + decode time,
+    never exceeds the end-to-end latency, and rides the summary with its
+    percentiles.  A tracer + metrics registry attached to the same run
+    produce a schema-valid trace and a parseable exposition whose
+    request counter matches the report."""
+    from repro.analysis import (MetricsRegistry, SpanTracer,
+                                parse_exposition, validate_trace)
+    model, params = _model_params()
+    world = World(topology=ring_graph(3), algorithm=Algorithm("adpsgd"),
+                  serve=ServeLoad(rate=1.2, prompt_len=(2, 4),
+                                  gen_len=(2, 5)))
+    fleet = GossipFleet(model, params, world, max_batch=2, max_len=16,
+                        drift="perturb", drift_scale=0.02)
+    tracer = SpanTracer("fleet-test")
+    registry = MetricsRegistry()
+    rep = fleet.run(rounds=12, seed=2, tracer=tracer, metrics=registry)
+
+    assert rep.ttft.size == len(rep.completed) > 0
+    np.testing.assert_array_equal(rep.ttft_wait + rep.ttft_decode,
+                                  rep.ttft)
+    assert np.all(rep.ttft >= 1)
+    assert np.all(rep.ttft <= rep.latencies)
+    s = rep.summary()
+    assert s["ttft_p50"] <= s["ttft_p95"] <= s["ttft_p99"]
+    assert s["ttft_wait_mean"] + s["ttft_decode_mean"] == \
+        pytest.approx(s["ttft_mean"])
+
+    validate_trace(tracer.to_dict())
+    assert any(e["name"] == "fleet.round" for e in tracer.events)
+    parsed = parse_exposition(registry.exposition())
+    assert parsed["fleet_requests_total"][""] == rep.requests_total
+    assert parsed["fleet_ttft_rounds_count"][""] == len(rep.completed)
 
 
 def test_serveload_trace_is_shared_and_serializes():

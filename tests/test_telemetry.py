@@ -1,0 +1,283 @@
+"""Compiled per-round telemetry — the flight recorder's in-scan side
+(core/telemetry.py, DESIGN.md §15).
+
+The contracts under test:
+
+  * no-op pin — ``telemetry=None`` replays bitwise identically to a
+    telemetry-enabled replay of the same schedule (the spec only ADDS
+    columns, it never changes a replayed number), on both kernel
+    backends, serial + world-batched, channel + self-healing flavors;
+  * column truth — engine and per-event reference flavors agree on the
+    counts; schedule columns satisfy the conservation identities
+    (scheduled = applied + dropped with no rejections, participation and
+    staleness histograms resum to scheduled, bytes = applied x row);
+  * one-trace invariant — a telemetry-enabled ``WorldSweep`` grid still
+    costs ONE jit trace and re-dispatches with zero new traces (the spec
+    is a static argument, not per-world data);
+  * spec plumbing — Telemetry is hashable, validates its buckets,
+    round-trips JSON standalone and on ``World``;
+  * AOT hook — ``Simulator.worlds_executable`` returns the exact jitted
+    twin + args of the batched dispatch, lowerable without a replay.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveDefense, ChannelModel, DelayProcess,
+                        Simulator, Telemetry, TelemetryTrace, World,
+                        WorldSweep, params_from_graph, ring_graph,
+                        trace_summary)
+
+N, D, ROUNDS = 8, 24, 7
+
+BACKENDS = ["ref", "pallas_interpret"]
+
+CHANNEL = ChannelModel(delay=DelayProcess(horizon=2, prob=0.4),
+                       drop_prob=0.2)
+
+
+def _quad_grad_fn(b):
+    def grad_fn(x, key, wid):
+        g = (x - b[wid]).astype(x.dtype)
+        g = g + (0.05 * jax.random.normal(key, x.shape)).astype(x.dtype)
+        return 0.5 * jnp.sum(g ** 2), g
+    return grad_fn
+
+
+def _make_sim(backend="ref", robust_rule="trim"):
+    g = ring_graph(N)
+    b = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    return Simulator(_quad_grad_fn(b), params_from_graph(g, True),
+                     gamma=0.05, backend=backend, robust_rule=robust_rule)
+
+
+def _state(sim):
+    return sim.init(jnp.zeros(D), N, jax.random.PRNGKey(2))
+
+
+def _assert_same_replay(a, b):
+    """Final states and replayed trace columns are bitwise identical."""
+    fa, ta = a
+    fb, tb = b
+    for la, lb in zip(jax.tree.leaves(fa.x), jax.tree.leaves(fb.x)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(ta.loss), np.asarray(tb.loss))
+    np.testing.assert_array_equal(np.asarray(ta.consensus),
+                                  np.asarray(tb.consensus))
+
+
+# ------------------------------------------------------------- no-op pins
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("engine", [True, False])
+def test_telemetry_is_bitwise_noop_serial(backend, engine):
+    """Serial channel replay: telemetry on vs off never changes a
+    replayed number, on either path flavor and either kernel backend."""
+    sim = _make_sim(backend)
+    world = World(topology=ring_graph(N), channel=CHANNEL)
+    sched = world.compile(ROUNDS, seed=3)
+    off = sim.run_schedule(_state(sim), sched, engine=engine)
+    on = sim.run_schedule(_state(sim), sched, engine=engine,
+                          telemetry=Telemetry())
+    _assert_same_replay(off, on)
+    assert off[1].telemetry is None
+    assert on[1].telemetry is not None
+
+
+@pytest.mark.parametrize("engine", [True, False])
+def test_telemetry_is_bitwise_noop_batched(engine):
+    """World-batched replay over a channel + defense grid: the spec adds
+    columns to every world without touching the replayed dynamics."""
+    sim = _make_sim()
+    clean = World(topology=ring_graph(N))
+    lossy = dataclasses.replace(clean, channel=CHANNEL)
+    worlds = [clean, lossy, lossy]
+    defs = [None, None, AdaptiveDefense(adaptive_tau=True)]
+    scheds = [w.compile(ROUNDS, seed=s) for s, w in enumerate(worlds)]
+    states = [_state(sim) for _ in worlds]
+    off = sim.run_worlds(states, scheds, defenses=defs, engine=engine)
+    on = sim.run_worlds(states, scheds, defenses=defs, engine=engine,
+                        telemetry=Telemetry())
+    _assert_same_replay(off, on)
+    tt = on[1].telemetry
+    assert tt.applied.shape == (len(worlds), ROUNDS)
+    assert tt.stale_hist.shape == (len(worlds), ROUNDS,
+                                   len(Telemetry().staleness_buckets) + 2)
+
+
+def test_distinct_specs_same_numbers():
+    """Changing WHAT is recorded (buckets, moments off) never changes the
+    replay itself — only the emitted columns."""
+    sim = _make_sim()
+    world = World(topology=ring_graph(N), channel=CHANNEL)
+    sched = world.compile(ROUNDS, seed=0)
+    a = sim.run_schedule(_state(sim), sched, telemetry=Telemetry())
+    b = sim.run_schedule(_state(sim), sched,
+                         telemetry=Telemetry(staleness_buckets=(1, 3),
+                                             norm_moments=False,
+                                             bytes_moved=False))
+    _assert_same_replay(a, b)
+    assert b[1].telemetry.norm_sum is None
+    assert b[1].telemetry.bytes_moved is None
+    np.testing.assert_array_equal(np.asarray(a[1].telemetry.applied),
+                                  np.asarray(b[1].telemetry.applied))
+
+
+# ---------------------------------------------------------- column truth
+
+def test_engine_and_reference_columns_agree():
+    """Both path flavors meter the SAME channel: integer counts match
+    exactly, the norm moments to float tolerance (different reduction
+    orders over identical admitted deltas)."""
+    sim = _make_sim()
+    world = World(topology=ring_graph(N), channel=CHANNEL)
+    sched = world.compile(ROUNDS, seed=5)
+    tel = Telemetry()
+    te = sim.run_schedule(_state(sim), sched, engine=True,
+                          telemetry=tel)[1].telemetry
+    tr = sim.run_schedule(_state(sim), sched, engine=False,
+                          telemetry=tel)[1].telemetry
+    np.testing.assert_array_equal(np.asarray(te.applied),
+                                  np.asarray(tr.applied))
+    np.testing.assert_array_equal(np.asarray(te.rejected),
+                                  np.asarray(tr.rejected))
+    np.testing.assert_array_equal(np.asarray(te.bytes_moved),
+                                  np.asarray(tr.bytes_moved))
+    np.testing.assert_allclose(np.asarray(te.norm_sum),
+                               np.asarray(tr.norm_sum), rtol=1e-5)
+
+
+def test_columns_satisfy_conservation():
+    """Hand-countable identities on a lossy (but non-robust) world:
+    every scheduled read is either applied or dropped; participation and
+    the staleness histogram re-sum to the scheduled counts; the bytes
+    column is applied x flat-row bytes (D f32 lanes here)."""
+    sim = _make_sim()
+    world = World(topology=ring_graph(N), channel=CHANNEL)
+    sched = world.compile(ROUNDS, seed=7)
+    tt = sim.run_schedule(_state(sim), sched,
+                          telemetry=Telemetry())[1].telemetry
+    applied = np.asarray(tt.applied, np.int64)
+    dropped = np.asarray(tt.dropped, np.int64)
+    sched_col = np.asarray(tt.scheduled, np.int64)
+    assert sched_col.sum() > 0 and dropped.sum() > 0
+    np.testing.assert_array_equal(applied + dropped, sched_col)
+    np.testing.assert_array_equal(np.asarray(tt.rejected), 0)
+    # participation + staleness bucket only the SURVIVING reads
+    np.testing.assert_array_equal(tt.participation.sum(axis=-1), applied)
+    np.testing.assert_array_equal(tt.stale_hist.sum(axis=-1), applied)
+    assert tt.row_bytes == D * 4
+    np.testing.assert_array_equal(np.asarray(tt.bytes_moved),
+                                  applied * tt.row_bytes)
+
+
+def test_defense_rejections_show_up_in_columns():
+    """An active defense's rejected reads land in the rejected column and
+    leave the applied+rejected+dropped = scheduled budget balanced."""
+    sim = _make_sim()
+    world = World(topology=ring_graph(N), channel=CHANNEL)
+    scheds = [world.compile(ROUNDS, seed=1)]
+    tt = sim.run_worlds([_state(sim)], scheds,
+                        defenses=[AdaptiveDefense(adaptive_tau=True,
+                                                  tau0=1e-6)],
+                        telemetry=Telemetry())[1].telemetry
+    applied = np.asarray(tt.applied, np.int64)
+    rejected = np.asarray(tt.rejected, np.int64)
+    assert rejected.sum() > 0  # the tiny tau0 actually rejects
+    np.testing.assert_array_equal(
+        applied + rejected + np.asarray(tt.dropped, np.int64),
+        np.asarray(tt.scheduled, np.int64))
+
+
+# ------------------------------------------------------ one-trace invariant
+
+def test_sweep_grid_keeps_one_trace_with_telemetry():
+    """A telemetry-enabled WorldSweep grid costs ONE jit trace, and a
+    re-dispatch with the same spec costs ZERO new traces."""
+    sim = _make_sim()
+    base = World(topology=ring_graph(N), channel=CHANNEL)
+    sweep = WorldSweep.over(
+        base, channel=[dataclasses.replace(CHANNEL, drop_prob=p)
+                       for p in (0.0, 0.1, 0.2)])
+    worlds = list(sweep.worlds)
+    scheds = sweep.compile(ROUNDS)
+    tel = Telemetry()
+    before = Simulator._run_worlds_channel_jit._cache_size()
+    out1 = sim.run_worlds([_state(sim) for _ in worlds], scheds,
+                          telemetry=tel)
+    assert Simulator._run_worlds_channel_jit._cache_size() - before == 1
+    out2 = sim.run_worlds([_state(sim) for _ in worlds], scheds,
+                          telemetry=tel)
+    assert Simulator._run_worlds_channel_jit._cache_size() - before == 1
+    _assert_same_replay(out1, out2)
+
+
+# ------------------------------------------------------------ spec plumbing
+
+def test_spec_validation_and_roundtrip():
+    t = Telemetry(staleness_buckets=(1, 2, 8), norm_moments=False)
+    assert Telemetry.from_json(t.to_json()) == t
+    assert hash(t) == hash(Telemetry.from_json(t.to_json()))
+    assert {t: 1}[Telemetry(staleness_buckets=(1, 2, 8),
+                            norm_moments=False)] == 1
+    with pytest.raises(ValueError):
+        Telemetry(staleness_buckets=(2, 1))
+    with pytest.raises(ValueError):
+        Telemetry(staleness_buckets=(0,))
+    with pytest.raises(ValueError):
+        Telemetry(staleness_buckets=("fresh",))
+
+
+def test_world_carries_telemetry_through_json():
+    w = World(topology=ring_graph(N), channel=CHANNEL,
+              telemetry=Telemetry(staleness_buckets=(1, 4)))
+    w2 = World.from_json(w.to_json())
+    assert w2 == w and w2.telemetry == w.telemetry
+    with pytest.raises(ValueError):
+        World(topology=ring_graph(N), telemetry="yes please")
+
+
+def test_trace_summary_survives_diverged_norms():
+    """A diverged arm's inf/nan norm rounds are masked out of the digest
+    instead of nulling it; the finite fraction is reported."""
+    R = 4
+    tt = TelemetryTrace(
+        applied=np.full(R, 2.0), rejected=np.zeros(R),
+        norm_sum=np.array([1.0, 2.0, np.inf, np.nan]),
+        norm_sq_sum=np.ones(R), scheduled=np.full(R, 2),
+        dropped=np.zeros(R, np.int64), stale_hist=None,
+        participation=None, bytes_moved=np.full(R, 2.0 * 96),
+        row_bytes=96)
+    digest = trace_summary(tt)
+    assert digest["admitted_norm_mean"] == pytest.approx(3.0 / 4.0)
+    assert digest["norm_finite_frac"] == pytest.approx(0.5)
+    assert np.isfinite(digest["admitted_norm_mean"])
+
+
+# ---------------------------------------------------------------- AOT hook
+
+def test_worlds_executable_is_the_dispatched_twin():
+    """``worlds_executable`` hands back the class-level jit twin + full
+    argument tuple of the batched dispatch: calling it reproduces
+    ``run_worlds`` bitwise, and it AOT-lowers without a replay (the hook
+    the benchmark cost rows use — ``jax.jit`` of a ``run_worlds``
+    closure would trip on the host-side batching)."""
+    sim = _make_sim()
+    worlds = [World(topology=ring_graph(N)) for _ in range(2)]
+    scheds = [w.compile(ROUNDS, seed=s) for s, w in enumerate(worlds)]
+    states = [_state(sim) for _ in worlds]
+    fn, args = sim.worlds_executable(states, scheds)
+    _assert_same_replay(fn(*args), sim.run_worlds(states, scheds))
+    hlo = fn.lower(*args).compile().as_text()
+    assert "ENTRY" in hlo or "HloModule" in hlo
+
+    # the channel flavor (telemetry forces it) lowers too, spec static
+    lossy = World(topology=ring_graph(N), channel=CHANNEL)
+    lscheds = [lossy.compile(ROUNDS, seed=0)]
+    cfn, cargs = sim.worlds_executable([_state(sim)], lscheds,
+                                       telemetry=Telemetry())
+    assert cargs[-1] == Telemetry()
+    assert cfn.lower(*cargs).compile().as_text()
