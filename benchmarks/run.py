@@ -1755,6 +1755,150 @@ def bench_serve(seed: int = 0) -> list[str]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# Sharded giant-world replay: weak scaling over the worker mesh
+# (DESIGN.md §16)
+# --------------------------------------------------------------------------
+
+_SCALE_BENCH = {
+    # one giant fixed world split over ever-more shards: the curve is
+    # events/s vs workers-per-shard (n / n_shards)
+    "n": 4096, "d": 64, "rounds": 12,
+    "shards": [1, 2, 4, 8],
+    # staleness probe: replay the max-shard point again with the permute
+    # ring's boundary reads floored at this lag
+    "lag": 2,
+    "repeats": 3,
+}
+
+
+def bench_scale(seed: int = 0) -> list[str]:
+    """Sharded giant-world scaling artifact (DESIGN.md §16).
+
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+    CI forced-multi-device job does); shard counts above the live device
+    count are skipped, so the family degrades to a single-shard row on a
+    plain host.
+
+    ONE giant world (n = 4096 workers full-size) is compiled once, then
+    replayed with its worker axis split over 1, 2, 4, 8 shards — the
+    curve is events/s vs workers-per-shard.  The timed region is the
+    jitted sharded replay only: ``worlds_executable(..., mesh=...)``
+    arguments are committed to the mesh with ``MeshReplay.place_args``
+    first, so the clock never sees host prep or input resharding.
+    Efficiency is t(1 shard) / t(ns shards).  On real accelerators the
+    split divides the per-device work, so flat time (efficiency 1.0)
+    is the FLOOR of the win; on a forced-host mesh every "device" shares
+    the same cores, total work is constant, and the ideal is exactly
+    flat — efficiency there isolates the cost the sharding machinery
+    adds (the per-step boundary all_gather + SPMD partitioning), which
+    is what the CI gate pins on the --small config.
+
+    Each row also carries the wire split the flight recorder assigns the
+    permute ring — cross-shard bytes = boundary rows x flat-row width vs
+    intra-shard bytes (schedule-exact, DESIGN.md §15/§16) — and the
+    compiled replay's HLO cost row (collective bytes = the ring's
+    exchange traffic).  A final row replays the widest mesh with
+    ``lag > 0`` to price bounded staleness against the lag-0 exchange.
+    Emits BENCH_scale.json.
+    """
+    from repro.core import Simulator, Telemetry, World, params_from_graph, \
+        ring_graph, trace_summary
+    from repro.launch.mesh import make_replay_mesh
+    from repro.launch.mesh_replay import MeshReplay, sharded_twin
+
+    cfg = _SCALE_BENCH
+    n, d, rounds = cfg["n"], cfg["d"], cfg["rounds"]
+    avail = jax.local_device_count()
+    shard_counts = [s for s in cfg["shards"] if s <= avail]
+    skipped = [s for s in cfg["shards"] if s > avail]
+    if skipped:
+        print(f"# scale: {avail} local devices — skipping shard counts "
+              f"{skipped} (force more with XLA_FLAGS="
+              f"--xla_force_host_platform_device_count=8)")
+
+    g = ring_graph(n)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, d))
+    sim = Simulator(_quad_grad_fn(b), params_from_graph(g, True),
+                    gamma=0.05)
+    sched = World(topology=g).compile(rounds, seed=seed)
+    states = [sim.init(jnp.zeros(d), n, jax.random.PRNGKey(2))]
+    tel = Telemetry(norm_moments=False, participation=False)
+
+    def arm(ns, lag):
+        """One scaling point of the SAME world: (row dict, fn, args)."""
+        mr = MeshReplay(make_replay_mesh(ns), lag=lag)
+        fn, args = sim.worlds_executable(states, [sched], telemetry=tel,
+                                         mesh=mr)
+        args = mr.place_args(args)
+        stream_len = int(args[5][1].shape[0])
+        _, trace = sim.run_worlds(states, [sched], telemetry=tel, mesh=mr)
+        summary = trace_summary(trace.telemetry)
+        row = {"n_shards": ns, "lag": lag, "n": n,
+               "workers_per_shard": n // ns,
+               "stream_len": stream_len, "rounds": rounds,
+               "scheduled_total": summary["scheduled_total"],
+               "cross_reads_total": summary.get("cross_reads_total", 0),
+               "bytes_intra_total": summary.get("bytes_intra_total"),
+               "bytes_cross_total": summary.get("bytes_cross_total"),
+               "row_bytes": summary["row_bytes"]}
+        return row, fn, args
+
+    rows_out, report_rows, t1_warm = [], [], None
+    flavor = sharded_twin("channel", donate=False)
+    executables = []
+    for ns in shard_counts:
+        row, fn, args = arm(ns, 0)
+        before = flavor._cache_size()
+        cold, warm = _timeit(lambda: fn(*args), repeats=cfg["repeats"])
+        row.update(us_cold=cold, us_warm=warm,
+                   jit_traces=flavor._cache_size() - before,
+                   events_per_s=row["stream_len"] / (warm * 1e-6),
+                   reads_per_s=row["scheduled_total"] / (warm * 1e-6))
+        if t1_warm is None:
+            t1_warm = warm
+        row["efficiency"] = t1_warm / warm
+        executables.append(_exec_cost(f"scale_replay_ns{ns}", fn, *args))
+        report_rows.append(row)
+        rows_out.append(
+            f"scale_ns{ns}_wps{row['workers_per_shard']},{warm:.0f},"
+            f"events_per_s={row['events_per_s']:.0f};"
+            f"eff={row['efficiency']:.2f};"
+            f"cross_reads={row['cross_reads_total']}")
+
+    lag_row = None
+    if cfg["lag"] > 0 and shard_counts and shard_counts[-1] > 1:
+        ns = shard_counts[-1]
+        lag_row, fn, args = arm(ns, cfg["lag"])
+        cold, warm = _timeit(lambda: fn(*args), repeats=cfg["repeats"])
+        lag0 = report_rows[-1]
+        lag_row.update(us_cold=cold, us_warm=warm,
+                       events_per_s=lag_row["stream_len"] / (warm * 1e-6),
+                       speedup_vs_lag0=lag0["us_warm"] / warm)
+        executables.append(
+            _exec_cost(f"scale_replay_ns{ns}_lag{cfg['lag']}", fn, *args))
+        rows_out.append(
+            f"scale_lag{cfg['lag']}_ns{ns},{warm:.0f},"
+            f"vs_lag0={lag_row['speedup_vs_lag0']:.2f}x")
+
+    eff_at_max = report_rows[-1]["efficiency"] if report_rows else None
+    report = {
+        "config": {k: list(v) if isinstance(v, list) else v
+                   for k, v in cfg.items()},
+        "seed": seed, "devices": avail,
+        "shard_counts": shard_counts, "skipped_shard_counts": skipped,
+        "rows": report_rows, "lag_probe": lag_row,
+        "efficiency_at_max_shards": eff_at_max,
+        "executables": executables,
+    }
+    _dump_json(__file__, "BENCH_scale.json", report)
+    if eff_at_max is not None:
+        rows_out.append(f"scale_efficiency,0,"
+                        f"at_{shard_counts[-1]}_shards="
+                        f"{eff_at_max:.2f}")
+    return rows_out
+
+
 BENCHES = {
     "table2": bench_table2_comm_rates,
     "table3": bench_table3_training_time,
@@ -1771,6 +1915,7 @@ BENCHES = {
     "train": bench_train,
     "serve": bench_serve,
     "roofline": bench_roofline_summary,
+    "scale": bench_scale,
 }
 
 
@@ -1816,6 +1961,12 @@ def main() -> None:
         # serve smoke: 4 replicas, fewer rounds — the retention and
         # zero-loss gates still bind (the trace shrinks with the rounds)
         _SERVE_BENCH.update(replicas=4, rounds=60, max_batch=2)
+        # scale smoke: a fixed n=1024 world keeps the per-step mixing
+        # heavy enough that the forced-host ideal (flat time — total work
+        # is constant, cores are shared) is measurable against the
+        # per-step exchange overhead — the CI gate reads efficiency
+        # (t1/t8) at 8 shards
+        _SCALE_BENCH.update(n=1024, d=128, rounds=10, repeats=5)
     names = _parse_only(args.only) if args.only else list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

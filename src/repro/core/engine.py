@@ -319,3 +319,32 @@ class FlatGossipEngine:
         ``src_slot == H``, ring slots otherwise (host-resolved indices)."""
         return ring_read(ring, bx, partner, src_slot)
 
+
+    # ------------------------------- sharded-replay passes (DESIGN.md §16)
+    def publish_rows(self, ring, bx: jax.Array, rows: jax.Array,
+                     slots: jax.Array) -> jax.Array:
+        """Resolve the (B, nb) boundary rows a shard publishes into their
+        (B, nb, D) channel values — fresh rows of ``bx`` at the sentinel
+        slot, local snapshot-ring reads otherwise.  The PUBLISHER resolves
+        staleness against its own (B, H, Ws, D) ring, so the value that
+        crosses the permute ring is bitwise the one the single-device
+        ``ring_read_worlds`` gather would have produced."""
+        fresh = jnp.take_along_axis(bx, rows[:, :, None], axis=1)
+        if ring is None:
+            return fresh
+        h = ring.shape[1]
+        clamped = jnp.minimum(slots, h - 1)
+        b_idx = jnp.arange(bx.shape[0])[:, None]
+        stale = ring[b_idx, clamped, rows]
+        return jnp.where((slots < h)[:, :, None], stale, fresh)
+
+    def pool_partner_values(self, pool: jax.Array, hop: jax.Array,
+                            pos: jax.Array, xp_local: jax.Array,
+                            is_cross: jax.Array) -> jax.Array:
+        """Merge permute-ring pool reads into the local partner-value
+        buffer: cross rows read ``pool[hop, :, pos]`` (the block published
+        by the source shard), intra/idle rows keep the shard-local gather
+        ``xp_local``."""
+        b_idx = jnp.arange(pool.shape[1])[:, None]
+        xp_cross = pool[hop, b_idx, pos]
+        return jnp.where(is_cross[:, :, None], xp_cross, xp_local)

@@ -19,7 +19,7 @@ App E.2).
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,25 +56,39 @@ def bank_corruption(bank: np.ndarray, adversary) -> np.ndarray:
     return out
 
 
-def check_mesh_channel(channel: ChannelModel | None) -> None:
+def check_mesh_channel(channel: ChannelModel | None,
+                       permute_ring: bool = False) -> None:
     """Mesh trainers model the statically-resolvable channel axes
-    (always-on adversary, drops); anything needing per-exchange shared
-    randomness or peer history is rejected loudly rather than silently
-    mis-modeled: stale reads need the event simulator's snapshot ring
-    buffer (a mesh worker holds no history of its peers), and a
-    duty-cycled adversary (prob < 1) needs pair-correlated corruption
-    draws the per-worker SPMD event loop cannot share."""
+    (always-on adversary, drops) plus — when the trainer carries the
+    bounded-staleness permute ring (``permute_ring=True``, DESIGN.md
+    §16) — message delay: each worker keeps a ring of its OWN past flat
+    states and resolves a read's staleness before the collective permute
+    ships it, so no worker ever needs its peers' history.  Only the
+    ``DelayProcess`` kinds the ring can sample ("uniform", "fixed") are
+    routed; an unknown kind — or any delay on a ring-less trainer — is
+    rejected loudly rather than silently mis-modeled.  A duty-cycled
+    adversary (prob < 1) stays rejected either way: it needs
+    pair-correlated corruption draws the per-worker SPMD event loop
+    cannot share."""
     if channel is None:
         return
     if not isinstance(channel, ChannelModel):
         raise ValueError("channel must be a ChannelModel, "
                          f"got {type(channel).__name__}")
     if channel.horizon > 0:
-        raise ValueError(
-            "mesh trainers do not emulate message delay (stale partner "
-            "reads need the simulator's ring buffer of past states) — "
-            "replay delayed worlds with Simulator.run_world, or drop the "
-            "DelayProcess from the trainer's channel")
+        if not permute_ring:
+            raise ValueError(
+                "this mesh trainer does not emulate message delay (stale "
+                "partner reads need a ring buffer of past states) — "
+                "replay delayed worlds with Simulator.run_world, use a "
+                "permute-ring trainer, or drop the DelayProcess from the "
+                "trainer's channel")
+        if channel.delay.kind not in ("uniform", "fixed"):
+            raise ValueError(
+                "the bounded-staleness permute ring samples 'uniform' "
+                "and 'fixed' DelayProcess kinds only, got "
+                f"{channel.delay.kind!r} — replay this delay law with "
+                "Simulator.run_world")
     if channel.adversary is not None and channel.adversary.prob < 1.0:
         raise ValueError(
             "mesh trainers model always-on Byzantine edges only (a "
@@ -158,6 +172,19 @@ def world_banks(world, rounds: int | None = None, seed: int = 0
     return out
 
 
+class DelayRing(NamedTuple):
+    """One worker's bounded-staleness ring: ``buf`` holds its own last H
+    flat snapshots (one push per super-step), ``round`` the index of the
+    last pushed round (-1 before the first push).  The SENDER resolves a
+    read's staleness against this ring before the collective permute
+    ships the value — distribution-equal to the simulator's per-reader
+    draws (each directed read has exactly one sender), with no peer
+    history held anywhere."""
+
+    buf: jax.Array    # (H, D) own past flat states, slot = round % H
+    round: jax.Array  # () int32 — last pushed round index
+
+
 class GossipMixer:
     """Applies A2CiD2 events across the worker mesh axis (use inside shard_map
     or under a mesh with explicit out-of-shard_map collectives via pjit —
@@ -168,7 +195,7 @@ class GossipMixer:
                  channel: ChannelModel | None = None,
                  robust_clip: float | None = None,
                  robust_rule: str = "trim"):
-        check_mesh_channel(channel)
+        check_mesh_channel(channel, permute_ring=True)
         self.graph = graph
         self.params = params
         self.axis_name = axis_name
@@ -185,6 +212,50 @@ class GossipMixer:
         self.drop_prob = 0.0 if channel is None else channel.drop_prob
         self.bank_corrupt = bank_corruption(
             self.bank, None if channel is None else channel.adversary)
+        # message delay rides the bounded-staleness permute ring
+        # (``DelayRing``): trivial delay lowers to None so the ring-free
+        # event loop stays bitwise
+        d = None if channel is None else channel.delay
+        self.delay = None if d is None or d.is_trivial else d
+
+    def _engine(self, x: PyTree) -> FlatGossipEngine:
+        return FlatGossipEngine.for_pytree(x, self.params, stacked=False,
+                                           backend=self.backend,
+                                           robust_clip=self.robust_clip,
+                                           robust_rule=self.robust_rule)
+
+    # ------------------------------------------------- delay (permute ring)
+    def init_ring(self, x: PyTree) -> DelayRing | None:
+        """Fresh ring for this worker's replica (None without delay)."""
+        if self.delay is None:
+            return None
+        bx = self._engine(x).pack_local(x)
+        return DelayRing(jnp.tile(bx[None], (self.delay.horizon, 1)),
+                         jnp.asarray(-1, jnp.int32))
+
+    def push_ring(self, ring: DelayRing | None, x: PyTree
+                  ) -> DelayRing | None:
+        """Snapshot this worker's replica at its gradient tick — the same
+        cadence the simulator's channel ring rotates on."""
+        if ring is None:
+            return None
+        bx = self._engine(x).pack_local(x)
+        r = ring.round + 1
+        return DelayRing(ring.buf.at[r % self.delay.horizon].set(bx), r)
+
+    def sample_stale(self, key: jax.Array, num_events: int) -> jax.Array:
+        """(E,) raw staleness draws from the channel's DelayProcess law
+        (0 = fresh); ``gossip_events`` clamps them to the rounds actually
+        pushed, exactly like the schedule compiler."""
+        d = self.delay
+        k1, k2 = jax.random.split(key)
+        hit = jax.random.bernoulli(k1, d.prob, (num_events,))
+        if d.kind == "fixed":
+            offs = jnp.full((num_events,), d.horizon, jnp.int32)
+        else:
+            offs = jax.random.randint(k2, (num_events,), 1, d.horizon + 1,
+                                      dtype=jnp.int32)
+        return jnp.where(hit, offs, 0).astype(jnp.int32)
 
     # ------------------------------------------------------------ primitives
     def _perm(self, k: int) -> list[tuple[int, int]]:
@@ -196,12 +267,18 @@ class GossipMixer:
         return apply_mixing(x, x_tilde, self.params.eta, dt)
 
     def gossip_events(self, x: PyTree, x_tilde: PyTree,
-                      matching_idxs: jax.Array, dts: jax.Array
+                      matching_idxs: jax.Array, dts: jax.Array, *,
+                      ring: DelayRing | None = None,
+                      stale: jax.Array | None = None
                       ) -> tuple[PyTree, PyTree]:
         """Apply a fixed-length sequence of (mix, p2p) events via lax.scan.
 
         matching_idxs (E,) int32 — bank index per event (negative = skip),
         dts (E,) — elapsed worker-local time before each event.
+        ring/stale — bounded-staleness delay emulation: ``stale`` (E,)
+        int32 staleness draws (``sample_stale``); each event's outgoing
+        value is resolved against this worker's own ``ring`` before the
+        collective permute, so a stale read costs the same one permute.
 
         The event loop runs on the flat-buffer engine: the replica pytree is
         packed ONCE into a (D,) vector, each event is one collective permute
@@ -216,10 +293,7 @@ class GossipMixer:
         """
         if matching_idxs.shape[0] == 0:
             return x, x_tilde
-        engine = FlatGossipEngine.for_pytree(x, self.params, stacked=False,
-                                             backend=self.backend,
-                                             robust_clip=self.robust_clip,
-                                             robust_rule=self.robust_rule)
+        engine = self._engine(x)
         bx = engine.pack_local(x)
         bxt = engine.pack_local(x_tilde)
         bx, bxt = engine.mix(bx, bxt, dts[0])
@@ -233,11 +307,34 @@ class GossipMixer:
         channel_on = (self.robust_clip is not None
                       or bool(self.bank_corrupt.any()))
         corrupt_tab = jnp.asarray(self.bank_corrupt)
+        delayed = self.delay is not None and ring is not None \
+            and stale is not None
+        xs = (matching_idxs, dt_next, stale) if delayed \
+            else (matching_idxs, dt_next)
+        # per-matching involvement: an idle worker (bank[k, i] == i)
+        # receives its own payload back, which must be its FRESH state —
+        # an idle event is an exact no-op even when it drew a stale offset
+        involved_tab = jnp.asarray(
+            self.bank != np.arange(self.bank.shape[1], dtype=np.int32))
 
         def body(carry, ev):
             bx, bxt = carry
-            idx, dtn = ev
-            xp = jax.lax.switch(jnp.maximum(idx, 0), branches, bx)
+            payload = bx
+            if delayed:
+                idx, dtn, s = ev
+                inv = involved_tab[jnp.maximum(idx, 0),
+                                   jax.lax.axis_index(self.axis_name)]
+                # clamp to the rounds actually pushed, resolve against
+                # this worker's OWN ring, ship the resolved value
+                s = jnp.where(inv,
+                              jnp.minimum(s, jnp.maximum(ring.round, 0)),
+                              0)
+                slot = jnp.where(s > 0,
+                                 (ring.round - s) % self.delay.horizon, 0)
+                payload = jnp.where(s > 0, ring.buf[slot], bx)
+            else:
+                idx, dtn = ev
+            xp = jax.lax.switch(jnp.maximum(idx, 0), branches, payload)
             # skipped/dropped events keep the pure-mix segment: xp = x => m=0
             xp = jnp.where(idx < 0, bx, xp)
             if channel_on:
@@ -249,8 +346,7 @@ class GossipMixer:
                 bx, bxt = engine.batch_local(bx, bxt, xp, dtn)
             return (bx, bxt), None
 
-        (bx, bxt), _ = jax.lax.scan(body, (bx, bxt),
-                                    (matching_idxs, dt_next))
+        (bx, bxt), _ = jax.lax.scan(body, (bx, bxt), xs)
         return engine.unpack_local(bx), engine.unpack_local(bxt)
 
     # ------------------------------------------------------------ schedules

@@ -51,6 +51,7 @@ the returned one — so it is opt-in; the default keeps states reusable
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, NamedTuple
 
@@ -848,7 +849,29 @@ class Simulator:
                                  telemetry=getattr(world, "telemetry", None))
 
     def run_schedule(self, state: SimState, sched: Schedule, *,
-                     engine: bool = True, defense=None, telemetry=None):
+                     engine: bool = True, defense=None, telemetry=None,
+                     mesh=None):
+        if mesh is not None:
+            # lift to a B=1 worlds replay (the sharded flavors are
+            # world-batched only) and squeeze the world axis back off —
+            # the pinned batched-equals-serial precedent
+            finalw, trw = self.run_worlds(
+                [state], [sched],
+                defenses=None if defense is None else [defense],
+                engine=engine, telemetry=telemetry, mesh=mesh)
+
+            def _sq(v):
+                return v[0] if getattr(v, "ndim", 0) >= 1 else v
+
+            def _sqt(t):
+                return None if t is None else type(t)(*[_sq(v) for v in t])
+
+            final = SimState(jax.tree.map(lambda a: a[0], finalw.x),
+                             jax.tree.map(lambda a: a[0], finalw.x_tilde),
+                             finalw.t_last[0], finalw.key[0])
+            return final, SimTrace(trw.loss[0], trw.consensus[0],
+                                   trw.mean_param_norm[0],
+                                   _sqt(trw.defense), _sqt(trw.telemetry))
         tel = telemetry
         active = defense is not None and defense.is_active
         if active and self.robust_rule != "trim":
@@ -1660,7 +1683,7 @@ class Simulator:
 
     def run_worlds(self, states, scheds, *, params=None, gammas=None,
                    robust_clips=None, defenses=None, worlds=None,
-                   engine: bool = True, telemetry=None
+                   engine: bool = True, telemetry=None, mesh=None
                    ) -> tuple[SimState, SimTrace]:
         """Replay B independent worlds in ONE compiled scan.
 
@@ -1697,6 +1720,14 @@ class Simulator:
           is a static jit argument).  Adds per-round flight-recorder
           columns as ``trace.telemetry`` ((B, rounds) arrays) without
           changing any replayed number; ``None`` is a bitwise no-op.
+        mesh — optional ``jax.sharding.Mesh`` (a 1-D worker mesh from
+          ``launch.mesh.make_replay_mesh``) or ``launch.mesh_replay.
+          MeshReplay``: shard the worker axis of the flat banks over the
+          mesh's devices and serve cross-shard partner reads through the
+          bounded-staleness permute ring (DESIGN.md §16).  At lag 0 the
+          final state is bitwise the single-device replay; a ragged
+          worker axis (n % n_shards != 0) warns and falls back to the
+          single-device flavors.
 
         Returns the world-batched final state and a SimTrace whose arrays
         are (B, rounds) — row b equals the serial replay of world b.
@@ -1707,8 +1738,8 @@ class Simulator:
         twin, args, tel, cols, rb = self._worlds_plan(
             states, scheds, params=params, gammas=gammas,
             robust_clips=robust_clips, defenses=defenses, worlds=worlds,
-            engine=engine, telemetry=telemetry)
-        fn = getattr(type(self), twin + ("_dnt" if self.donate else "_jit"))
+            engine=engine, telemetry=telemetry, mesh=mesh)
+        fn = self._twin_fn(twin, self.donate)
         out = fn(*args)
         if tel is None:
             return out
@@ -1726,11 +1757,57 @@ class Simulator:
         ``batch_states``'s host numpy).  ``kw`` mirrors ``run_worlds``'s
         keywords."""
         twin, args, _, _, _ = self._worlds_plan(states, scheds, **kw)
-        return getattr(type(self), twin + "_jit"), args
+        return self._twin_fn(twin, False), args
+
+    def _twin_fn(self, twin: str, donate: bool):
+        """Resolve a ``_worlds_plan`` twin name to its jitted callable.
+        Class-level twins hang on ``type(self)``; the sharded-replay
+        twins (``"@sharded_*"``) live in ``launch.mesh_replay`` —
+        imported lazily so core never depends on launch at import."""
+        if twin.startswith("@sharded_"):
+            from ..launch.mesh_replay import sharded_twin
+            return sharded_twin(twin[len("@sharded_"):], donate)
+        return getattr(type(self), twin + ("_dnt" if donate else "_jit"))
+
+    def worlds_sharded_arrays(self, states: SimState, scheds, mr, *,
+                              css=None):
+        """Sharded twin of ``worlds_channel_arrays``: the channel stream
+        arrays plus the host-compiled shard plan
+        (``events.shard_partition``) for ``mr``'s worker mesh.  A
+        positive ``mr.lag`` first floors the staleness of every
+        cross-shard read (``events.shard_lag_stale``) and deepens the
+        shared ring to hold the lagged window."""
+        from .events import shard_lag_stale, shard_partition, stack_streams
+        css = css if css is not None else self._coalesce_batch(scheds)
+        bs = stack_streams(css, np.asarray(states.t_last))
+        S, B, n = bs.partners.shape
+        stale, corrupt, horizon = self._channel_extras(bs.extras_dict(),
+                                                       (S, B, n))
+        step_round = np.searchsorted(np.asarray(bs.grad_pos), np.arange(S),
+                                     side="left")
+        if mr.lag > 0 and mr.n_shards > 1:
+            stale = shard_lag_stale(bs.partners, stale, step_round,
+                                    mr.n_shards, mr.lag)
+            horizon = max(horizon, int(stale.max()))
+        h = max(horizon, 1)
+        src_slot = np.where(stale > 0,
+                            (step_round[:, None, None] - stale) % h,
+                            horizon).astype(np.int32)
+        ring_pos = (step_round % h).astype(np.int32)
+        plan = shard_partition(bs.partners, src_slot, mr.n_shards, horizon)
+        return (jnp.asarray(bs.prologue), jnp.asarray(bs.partners),
+                jnp.asarray(bs.dt_next), jnp.asarray(bs.is_grad),
+                jnp.asarray(bs.grad_scale), jnp.asarray(bs.grad_pos),
+                jnp.asarray(bs.t_final), jnp.asarray(corrupt),
+                jnp.asarray(src_slot), jnp.asarray(ring_pos),
+                jnp.asarray(plan.local_partner),
+                jnp.asarray(plan.is_cross), jnp.asarray(plan.hop),
+                jnp.asarray(plan.pool_pos), jnp.asarray(plan.pub_row),
+                jnp.asarray(plan.pub_slot)), horizon
 
     def _worlds_plan(self, states, scheds, *, params=None, gammas=None,
                      robust_clips=None, defenses=None, worlds=None,
-                     engine: bool = True, telemetry=None):
+                     engine: bool = True, telemetry=None, mesh=None):
         """Shared host-side prep of a worlds replay: validate, derive
         per-world knobs, build the batched device arrays, pick the scan
         flavor.  Returns ``(twin_name, args, tel, cols, rb)`` where
@@ -1803,6 +1880,24 @@ class Simulator:
                 FlatLayout.from_pytree(states.x, stacked=True, worlds=True)
             except TypeError:
                 engine = False
+        mr = None
+        if mesh is not None:
+            from ..launch.mesh_replay import MeshReplay
+            mr = mesh if isinstance(mesh, MeshReplay) else MeshReplay(mesh)
+            if not engine:
+                raise ValueError(
+                    "the sharded replay (mesh=) runs on the flat-buffer "
+                    "engine; engine=False (or a layout-rejected pytree) "
+                    "has no worker banks to shard")
+            n = jax.tree.leaves(states.x)[0].shape[1]
+            if n % mr.n_shards != 0:
+                warnings.warn(
+                    f"worker axis {n} is not divisible by {mr.n_shards} "
+                    f"shards; falling back to the single-device replay",
+                    RuntimeWarning, stacklevel=3)
+                mr = None
+            elif tel is not None and tel.shards == 0:
+                tel = dataclasses.replace(tel, shards=mr.n_shards)
         channel = (active or any_clip or self.robust_clip is not None
                    or tel is not None
                    or any(STALE_KEY in s.extras_dict()
@@ -1819,6 +1914,20 @@ class Simulator:
         cols = batch_schedule_columns(tel, scheds) if tel is not None \
             else None
         if engine:
+            if mr is not None:
+                # the sharded twins are channel-based; plain worlds
+                # degenerate on them bitwise (the pinned channel-equals-
+                # plain precedent)
+                arrays, horizon = self.worlds_sharded_arrays(states,
+                                                             scheds, mr)
+                if active:
+                    dk = knobs_worlds(dlist, taus_list)
+                    return ("@sharded_defense",
+                            (self, states, pw, gw, dk, arrays, horizon,
+                             tel, mr), tel, cols, rb)
+                return ("@sharded_channel",
+                        (self, states, pw, gw, taus, arrays, horizon,
+                         tel, mr), tel, cols, rb)
             if active:
                 arrays, horizon = self.worlds_channel_arrays(states, scheds)
                 dk = knobs_worlds(dlist, taus_list)

@@ -61,6 +61,11 @@ class Telemetry:
     norm_moments: bool = True
     participation: bool = True
     bytes_moved: bool = True
+    # worker-shard count of the replay the spec instruments (DESIGN.md
+    # §16): > 1 splits the bytes column into intra-shard vs cross-shard
+    # moved bytes (cross = permute-ring boundary rows x flat-row width).
+    # 0 (the default) keeps the pre-sharding trace shape exactly.
+    shards: int = 0
 
     def __post_init__(self):
         try:
@@ -72,13 +77,18 @@ class Telemetry:
             raise ValueError("Telemetry.staleness_buckets must be strictly "
                              f"increasing positive ints, got {edges}")
         object.__setattr__(self, "staleness_buckets", edges)
+        if int(self.shards) < 0:
+            raise ValueError(f"Telemetry.shards must be >= 0, "
+                             f"got {self.shards}")
+        object.__setattr__(self, "shards", int(self.shards))
 
     # -------------------------------------------------------- serialization
     def to_dict(self) -> dict:
         return {"staleness_buckets": list(self.staleness_buckets),
                 "norm_moments": self.norm_moments,
                 "participation": self.participation,
-                "bytes_moved": self.bytes_moved}
+                "bytes_moved": self.bytes_moved,
+                "shards": self.shards}
 
     @staticmethod
     def from_dict(d: dict) -> "Telemetry":
@@ -86,7 +96,8 @@ class Telemetry:
             staleness_buckets=tuple(d.get("staleness_buckets", (1, 2, 4, 8))),
             norm_moments=d.get("norm_moments", True),
             participation=d.get("participation", True),
-            bytes_moved=d.get("bytes_moved", True))
+            bytes_moved=d.get("bytes_moved", True),
+            shards=d.get("shards", 0))
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True)
@@ -117,6 +128,14 @@ class TelemetryTrace(NamedTuple):
     participation: Any      # (.., n) per-worker read counts (None if off)
     bytes_moved: Any        # applied * row_bytes (None if off)
     row_bytes: int = 0
+    # sharded-replay wire split (None unless ``Telemetry.shards`` set):
+    # each SURVIVING scheduled read moves one flat row over exactly one
+    # path — an intra-shard gather or a permute-ring boundary hop —
+    # before any robust/defense rejection, so the split is exact
+    # schedule-side accounting (cross = boundary rows x row_bytes)
+    cross_reads: Any = None  # permute-ring boundary reads per round
+    bytes_intra: Any = None  # (scheduled - dropped - cross) * row_bytes
+    bytes_cross: Any = None  # cross_reads * row_bytes
 
 
 def row_bytes_of(layout=None, tree=None) -> int:
@@ -146,6 +165,24 @@ def _involved(partners: np.ndarray, mask: np.ndarray) -> np.ndarray:
     """(R, K, n) directed-read involvement from schedule arrays."""
     n = partners.shape[-1]
     return (partners != np.arange(n)) & mask[..., None]
+
+
+def cross_shard_reads(partners: np.ndarray, mask: np.ndarray,
+                      n_shards: int) -> np.ndarray:
+    """(R,) cross-shard boundary-read counts of schedule arrays under an
+    equal ``n_shards``-way worker split; zeros when the split is trivial
+    or ragged (a ragged worker axis falls back to one device, so nothing
+    crosses a boundary)."""
+    partners = np.asarray(partners)
+    R, K, n = partners.shape
+    if n_shards <= 1 or n % n_shards != 0:
+        return np.zeros(R, np.int64)
+    ws = n // n_shards
+    rdr = np.arange(n, dtype=np.int64)
+    cross = ((partners != rdr)
+             & (partners.astype(np.int64) // ws != rdr // ws)
+             & np.asarray(mask)[..., None])
+    return cross.reshape(R, -1).sum(axis=1).astype(np.int64)
 
 
 def schedule_columns(tel: Telemetry, sched) -> dict:
@@ -188,8 +225,11 @@ def schedule_columns(tel: Telemetry, sched) -> dict:
 
     participation = inv.sum(axis=1).astype(np.int64) \
         if tel.participation else None
+    cross = cross_shard_reads(partners, mask, tel.shards) \
+        if tel.shards > 1 else None
     return {"scheduled": scheduled, "dropped": dropped,
-            "stale_hist": stale_hist, "participation": participation}
+            "stale_hist": stale_hist, "participation": participation,
+            "cross_reads": cross}
 
 
 def batch_schedule_columns(tel: Telemetry, scheds) -> dict:
@@ -201,7 +241,7 @@ def batch_schedule_columns(tel: Telemetry, scheds) -> dict:
         return None if vals[0] is None else np.stack(vals)
 
     return {k: stack(k) for k in ("scheduled", "dropped", "stale_hist",
-                                  "participation")}
+                                  "participation", "cross_reads")}
 
 
 def finalize_trace(tel: Telemetry, runtime, sched_cols: dict,
@@ -213,6 +253,12 @@ def finalize_trace(tel: Telemetry, runtime, sched_cols: dict,
     if not tel.norm_moments:
         norm_sum = norm_sq = None
     bytes_moved = applied * float(row_bytes) if tel.bytes_moved else None
+    cross = sched_cols.get("cross_reads")
+    bytes_intra = bytes_cross = None
+    if tel.bytes_moved and cross is not None:
+        survived = sched_cols["scheduled"] - sched_cols["dropped"]
+        bytes_cross = cross * float(row_bytes)
+        bytes_intra = (survived - cross) * float(row_bytes)
     return TelemetryTrace(
         applied=applied, rejected=rejected,
         norm_sum=norm_sum, norm_sq_sum=norm_sq,
@@ -220,7 +266,9 @@ def finalize_trace(tel: Telemetry, runtime, sched_cols: dict,
         stale_hist=sched_cols["stale_hist"],
         participation=sched_cols["participation"],
         bytes_moved=bytes_moved,
-        row_bytes=int(row_bytes) if tel.bytes_moved else 0)
+        row_bytes=int(row_bytes) if tel.bytes_moved else 0,
+        cross_reads=cross, bytes_intra=bytes_intra,
+        bytes_cross=bytes_cross)
 
 
 def trace_summary(tt: TelemetryTrace) -> dict:
@@ -237,6 +285,10 @@ def trace_summary(tt: TelemetryTrace) -> dict:
         "row_bytes": tt.row_bytes,
         "bytes_moved_total": tot(tt.bytes_moved),
     }
+    if tt.cross_reads is not None:
+        out["cross_reads_total"] = tot(tt.cross_reads)
+        out["bytes_intra_total"] = tot(tt.bytes_intra)
+        out["bytes_cross_total"] = tot(tt.bytes_cross)
     if tt.norm_sum is not None:
         # a diverged world (e.g. a scale-attack arm) pushes its delta
         # norms to inf/nan; digest over the finite rounds only so one

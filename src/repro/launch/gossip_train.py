@@ -113,6 +113,10 @@ class GossipTrainState(NamedTuple):
     opt: Any             # local optimizer state (SGD momentum)
     t_last: jax.Array    # worker-local event clock
     key: jax.Array
+    # bounded-staleness permute ring (gossip.DelayRing) when the channel
+    # carries a DelayProcess; None otherwise — a defaulted tail field so
+    # every existing 5-tuple construction/unpacking site stays valid
+    ring: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,7 +146,15 @@ class GossipTrainer:
     robust_rule: str = "trim"
 
     def __post_init__(self):
-        check_mesh_channel(self.channel)
+        # the mixer carries the bounded-staleness permute ring, so a
+        # DelayProcess is routed (supported kinds) instead of rejected
+        check_mesh_channel(self.channel, permute_ring=True)
+
+    def _mixer(self) -> GossipMixer:
+        return GossipMixer(self.graph, self.acid, self.axis_name,
+                           backend=self.backend, channel=self.channel,
+                           robust_clip=self.robust_clip,
+                           robust_rule=self.robust_rule)
 
     @classmethod
     def from_world(cls, world, loss_fn: Callable, optimizer: Optimizer, *,
@@ -167,25 +179,31 @@ class GossipTrainer:
                    grad_rates=grad_rates, **kw)
 
     def init(self, params: PyTree, key: jax.Array) -> GossipTrainState:
+        delayed = self.channel is not None and self.channel.horizon > 0
         return GossipTrainState(
             params=params,
             momentum=jax.tree.map(jnp.copy, params),
             opt=self.optimizer.init(params),
             t_last=jnp.zeros(()),
             key=key,
+            ring=self._mixer().init_ring(params) if delayed else None,
         )
 
     # ------------------------------------------------------------- the step
     def make_step(self, mesh):
-        mixer = GossipMixer(self.graph, self.acid, self.axis_name,
-                            backend=self.backend, channel=self.channel,
-                            robust_clip=self.robust_clip,
-                            robust_rule=self.robust_rule)
+        mixer = self._mixer()
         n_events = self.comms_per_step
         rates = _rate_vec(self.grad_rates, self.graph.n)
 
         def step(state: GossipTrainState, batch: PyTree):
-            key, k_ev, k_dt = jax.random.split(state.key, 3)
+            k_st = None
+            if mixer.delay is not None:
+                # extra split only on delayed channels — a delay-free
+                # trainer keeps the seeded event stream bit-for-bit
+                key, k_st = jax.random.split(state.key)
+            else:
+                key = state.key
+            key, k_ev, k_dt = jax.random.split(key, 3)
             x, xt = state.params, state.momentum
 
             # (1) + (2): gradient event at this worker's clock.  dt ~ Exp(1)
@@ -205,13 +223,21 @@ class GossipTrainer:
             delta = jax.tree.map(lambda new, old: new - old, x, state.params)
             xt = jax.tree.map(lambda t, d: t + d, xt, delta)
 
-            # (3): E gossip events with Exp inter-event gaps
+            # (3): E gossip events with Exp inter-event gaps; a delayed
+            # channel snapshots the post-gradient replica onto this
+            # worker's permute ring first (the simulator's grad-tick
+            # cadence), then serves stale sends from it
             idxs, dts = mixer.sample_event_batch(k_ev, n_events)
-            x, xt = mixer.gossip_events(x, xt, idxs, dts)
+            ring = stale = None
+            if mixer.delay is not None:
+                ring = mixer.push_ring(state.ring, x)
+                stale = mixer.sample_stale(k_st, n_events)
+            x, xt = mixer.gossip_events(x, xt, idxs, dts, ring=ring,
+                                        stale=stale)
 
             new_state = GossipTrainState(x, xt, opt,
                                          state.t_last + dt_grad + jnp.sum(dts),
-                                         key)
+                                         key, ring)
             return new_state, {"loss": jax.lax.pmean(loss, self.axis_name),
                                **metrics}
 
@@ -256,6 +282,10 @@ class StackedGossipState(NamedTuple):
     x_tilde: PyTree
     opt: Any             # stacked optimizer state
     key: jax.Array
+    # (H, W, D) snapshot ring (gossip.DelayRing) on delayed channels;
+    # the stacked form holds every worker's history locally, so reads
+    # resolve per READER — the exact DelayProcess law
+    ring: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,13 +313,14 @@ class StackedGossipTrainer:
     # per-worker gradient rates (straggler clocks) — see GossipTrainer;
     # matches events.make_schedule(grad_rates=...) in distribution
     grad_rates: tuple[float, ...] | None = None
-    # unreliable channel — see GossipTrainer: adversary + drops only
+    # unreliable channel — see GossipTrainer: adversary + drops, plus
+    # message delay via the stacked (H, W, D) snapshot ring
     channel: ChannelModel | None = None
     robust_clip: float | None = None
     robust_rule: str = "trim"
 
     def __post_init__(self):
-        check_mesh_channel(self.channel)
+        check_mesh_channel(self.channel, permute_ring=True)
 
     @classmethod
     def from_world(cls, world, grad_fn: Callable, optimizer: Optimizer, *,
@@ -306,12 +337,24 @@ class StackedGossipTrainer:
                    grad_rates=grad_rates, **kw)
 
     def init(self, params0: PyTree, key: jax.Array) -> StackedGossipState:
+        from ..core.engine import FlatGossipEngine
+        from ..core.gossip import DelayRing
+
         n = self.graph.n
         stack = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape), params0)
+        ring = None
+        if self.channel is not None and self.channel.horizon > 0:
+            engine = FlatGossipEngine.for_pytree(stack, self.acid,
+                                                 stacked=True,
+                                                 backend=self.backend)
+            bx = engine.pack(stack)
+            ring = DelayRing(
+                jnp.tile(bx[None], (self.channel.horizon, 1, 1)),
+                jnp.asarray(-1, jnp.int32))
         return StackedGossipState(
             x=stack, x_tilde=jax.tree.map(jnp.copy, stack),
-            opt=jax.vmap(self.optimizer.init)(stack), key=key)
+            opt=jax.vmap(self.optimizer.init)(stack), key=key, ring=ring)
 
     def make_step(self):
         from ..core.a2cid2 import apply_mixing
@@ -333,11 +376,23 @@ class StackedGossipTrainer:
         corrupt_np = bank_corruption(
             bank_np, None if self.channel is None else self.channel.adversary)
         drop_prob = 0.0 if self.channel is None else self.channel.drop_prob
+        delay = None if self.channel is None else self.channel.delay
+        delay_on = delay is not None and not delay.is_trivial
         channel_on = (self.robust_clip is not None
-                      or bool(corrupt_np.any()) or drop_prob > 0.0)
+                      or bool(corrupt_np.any()) or drop_prob > 0.0
+                      or delay_on)
 
         def step(state: StackedGossipState, batch: PyTree):
-            key, k_dt, k_ev, k_gap = jax.random.split(state.key, 4)
+            from ..core.gossip import DelayRing
+
+            k_st = None
+            if delay_on:
+                # extra split only on delayed channels — a delay-free
+                # trainer keeps the seeded event stream bit-for-bit
+                key, k_st = jax.random.split(state.key)
+            else:
+                key = state.key
+            key, k_dt, k_ev, k_gap = jax.random.split(key, 4)
             x, xt = state.x, state.x_tilde
             # per-worker gradient-event clocks ~ Exp(1)/rate_i: stragglers
             # (rate < 1) see longer inter-gradient gaps — the same rate
@@ -365,13 +420,31 @@ class StackedGossipTrainer:
                 k_ev, k_drop = jax.random.split(k_ev)
             idxs = jax.random.categorical(k_ev, jnp.log(probs), shape=(E,))
             gaps = jax.random.exponential(k_gap, (E, n)) / max(E, 1)
-            if E == 0:
-                return (StackedGossipState(x, xt, opt, key),
-                        {"loss": jnp.mean(losses)})
 
             engine = FlatGossipEngine.for_pytree(
                 x, acid, stacked=True, backend=self.backend,
                 robust_clip=self.robust_clip, robust_rule=self.robust_rule)
+            ring = state.ring
+            if delay_on:
+                # snapshot the post-gradient stack at the grad tick (the
+                # simulator's ring cadence), then per-READER staleness
+                # draws — the exact DelayProcess law
+                r = ring.round + 1
+                ring = DelayRing(
+                    ring.buf.at[r % delay.horizon].set(engine.pack(x)), r)
+                k_s1, k_s2 = jax.random.split(k_st)
+                hit = jax.random.bernoulli(k_s1, delay.prob, (E, n))
+                if delay.kind == "fixed":
+                    offs = jnp.full((E, n), delay.horizon, jnp.int32)
+                else:
+                    offs = jax.random.randint(k_s2, (E, n), 1,
+                                              delay.horizon + 1,
+                                              dtype=jnp.int32)
+                stales = jnp.where(hit, offs, 0).astype(jnp.int32)
+            if E == 0:
+                return (StackedGossipState(x, xt, opt, key, ring),
+                        {"loss": jnp.mean(losses)})
+
             bx, bxt = engine.pack(x), engine.pack(xt)
             bx, bxt = engine.mix(bx, bxt, gaps[0])
             gaps_next = jnp.concatenate(
@@ -384,11 +457,25 @@ class StackedGossipTrainer:
             # of a p2p exchange; measured in EXPERIMENTS.md §Perf C).
             def make_branch(k: int):
                 perm = jnp.asarray(bank_np[k], jnp.int32)
+                inv = jnp.asarray(bank_np[k] != np.arange(n))
 
                 def branch(operand):
-                    bx, bxt, dtn = operand
+                    bx, bxt, dtn = operand[:3]
                     if channel_on:
                         xp = jnp.take(bx, perm, axis=0)
+                        if delay_on:
+                            # reader-resolved stale reads off the stacked
+                            # ring; idle workers (perm i -> i) stay fresh
+                            # so an idle event remains an exact no-op
+                            s = jnp.where(
+                                inv,
+                                jnp.minimum(operand[3],
+                                            jnp.maximum(ring.round, 0)),
+                                0)
+                            slot = jnp.where(
+                                s > 0, (ring.round - s) % delay.horizon, 0)
+                            xp = jnp.where((s > 0)[:, None],
+                                           ring.buf[slot, perm], xp)
                         return engine.channel_batch(
                             bx, bxt, xp, jnp.asarray(corrupt_np[k]), dtn)
                     return engine.batch(bx, bxt, perm, dtn)
@@ -404,15 +491,18 @@ class StackedGossipTrainer:
                     dropped = jax.random.bernoulli(k_drop, drop_prob, (E,))
                     idxs = jnp.where(dropped, bank_np.shape[0], idxs)
 
+            ev_xs = (idxs, gaps_next, stales) if delay_on \
+                else (idxs, gaps_next)
+
             def ev(carry, inp):
                 bx, bxt = carry
-                idx, gap_next = inp
-                bx, bxt = jax.lax.switch(idx, branches, (bx, bxt, gap_next))
+                bx, bxt = jax.lax.switch(inp[0], branches,
+                                         (bx, bxt) + inp[1:])
                 return (bx, bxt), None
 
-            (bx, bxt), _ = jax.lax.scan(ev, (bx, bxt), (idxs, gaps_next))
+            (bx, bxt), _ = jax.lax.scan(ev, (bx, bxt), ev_xs)
             return (StackedGossipState(engine.unpack(bx), engine.unpack(bxt),
-                                       opt, key),
+                                       opt, key, ring),
                     {"loss": jnp.mean(losses)})
 
         return step

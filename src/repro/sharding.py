@@ -130,3 +130,8 @@ GOSSIP_RULES = {  # worker axis never appears in model shardings
     "batch": "data", "heads": "model", "ffn": "model", "vocab": "model",
     "expert": "model", "fsdp": "data", "tp": "model", "seq": "model", "act_embed": "model",
 }
+REPLAY_RULES = {  # 1-D replay mesh (launch/mesh.make_replay_mesh): only
+    # the flat gossip banks' worker axis is split; model-logical axes
+    # have no mesh axis to land on and stay replicated
+    "worker": "worker",
+}

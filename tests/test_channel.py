@@ -363,9 +363,11 @@ def test_norm_trim_rejects_garbage_injection():
 
 def test_mesh_trainers_model_static_axes_and_reject_the_rest():
     """StackedGossipTrainer.from_world carries an always-on adversary +
-    drops + robust rules; delay and duty-cycled adversaries are rejected
-    loudly (they need peer history / pair-correlated draws a per-worker
-    SPMD loop cannot supply) rather than silently mis-modeled."""
+    drops + robust rules, and (since the permute ring, DESIGN.md §16)
+    serves DelayProcess channels from its own DelayRing of past
+    snapshots; duty-cycled adversaries and unknown delay kinds are still
+    rejected loudly (they need pair-correlated draws / staleness laws
+    the ring cannot supply) rather than silently mis-modeled."""
     from repro.launch.gossip_train import StackedGossipTrainer
     from repro.optim import sgd
 
@@ -388,12 +390,24 @@ def test_mesh_trainers_model_static_axes_and_reject_the_rest():
     state, m = jax.jit(tr.make_step())(state, jnp.ones((8, 3), jnp.float32))
     assert np.isfinite(float(m["loss"]))
 
-    for bad in (ChannelModel(delay=DelayProcess(horizon=2)),
-                ChannelModel(adversary=ByzantineEdges((g.edges[0],),
-                                                      prob=0.5))):
-        with pytest.raises(ValueError, match="mesh trainers"):
-            StackedGossipTrainer.from_world(World(topology=g, channel=bad),
-                                            grad_fn, opt)
+    # delayed channels now run on the bounded-staleness ring: the state
+    # carries a (H, n, D) snapshot ring whose round counter advances
+    delayed = StackedGossipTrainer.from_world(
+        World(topology=g, channel=ChannelModel(
+            delay=DelayProcess(horizon=2))), grad_fn, opt, backend="ref")
+    dstate = delayed.init({"w": jnp.zeros((3,), jnp.float32)},
+                          jax.random.PRNGKey(0))
+    assert dstate.ring is not None and int(dstate.ring.round) == -1
+    dstate, dm = jax.jit(delayed.make_step())(
+        dstate, jnp.ones((8, 3), jnp.float32))
+    assert int(dstate.ring.round) == 0
+    assert np.isfinite(float(dm["loss"]))
+
+    with pytest.raises(ValueError, match="mesh trainers"):
+        StackedGossipTrainer.from_world(
+            World(topology=g, channel=ChannelModel(
+                adversary=ByzantineEdges((g.edges[0],), prob=0.5))),
+            grad_fn, opt)
 
 
 # ------------------------------------------------ churn x delay interplay
